@@ -1,0 +1,37 @@
+"""§VII-D1 — allocation scoring throughput (the paper\'s 1.5-day-per-
+simulated-day bottleneck): numpy oracle vs jitted JAX vs Pallas kernel
+(interpret), swept over fleet sizes."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hlem_scores_np
+from repro.core.hlem import hlem_scores_jax
+from repro.kernels.hlem_score import hlem_score_pallas
+
+from .common import emit, timeit
+
+
+def run(quick: bool = True):
+    rows = []
+    sizes = [100, 1000, 12600] if not quick else [100, 1000, 12600]
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        free = rng.uniform(0, 100, (n, 4)).astype(np.float32)
+        mask = rng.random(n) < 0.7
+        spot = rng.uniform(0, 1, (n, 4)).astype(np.float32)
+        t_np = timeit(lambda: hlem_scores_np(free, mask, spot, -0.5), n=9)
+        fj = jnp.asarray(free); mj = jnp.asarray(mask); sj = jnp.asarray(spot)
+        a = jnp.float32(-0.5)
+        t_jax = timeit(
+            lambda: hlem_scores_jax(fj, mj, sj, a).block_until_ready(), n=9)
+        rows.append(emit(f"alloc/numpy_n{n}", t_np, ""))
+        rows.append(emit(f"alloc/jax_n{n}", t_jax,
+                         f"speedup_vs_numpy={t_np / t_jax:.1f}x"))
+        if n <= 1000:  # interpret mode is slow; correctness-scale only
+            t_pl = timeit(lambda: hlem_score_pallas(
+                fj, mj, sj, a, interpret=True).block_until_ready(), n=3)
+            rows.append(emit(f"alloc/pallas_interp_n{n}", t_pl,
+                             "interpret-mode (CPU); TPU target"))
+    return rows

@@ -1,0 +1,54 @@
+"""Shared benchmark utilities. Every benchmark prints
+``name,us_per_call,derived`` CSV rows (one per measured quantity)."""
+from __future__ import annotations
+
+import copy
+import os
+import time
+from typing import Callable, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "bench")
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> str:
+    row = f"{name},{us_per_call:.3f},{derived}"
+    print(row, flush=True)
+    return row
+
+
+def timeit(fn: Callable, n: int = 5, warmup: int = 1) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def run_market(policy_name: str, scenario_cfg=None, until: float = 2200.0,
+               selector: str = "list_order", alpha: float = -0.5,
+               record_timeline: bool = False):
+    """One §VII-E run; returns (sim, metrics, wall_s)."""
+    from repro.core import (
+        MarketSimulator, ScenarioConfig, SimConfig, make_policy,
+        synthetic_scenario,
+    )
+    cfg = scenario_cfg or ScenarioConfig(seed=0)
+    hosts, vms = synthetic_scenario(cfg)
+    kwargs = {"alpha": alpha} if policy_name == "hlem-vmp-adjusted" else {}
+    sim = MarketSimulator(
+        policy=make_policy(policy_name, **kwargs),
+        config=SimConfig(record_timeline=record_timeline,
+                         interruption_selector=selector))
+    for cap in hosts:
+        sim.add_host(cap)
+    for v in vms:
+        sim.submit(copy.deepcopy(v))
+    t0 = time.time()
+    metrics = sim.run(until=until)
+    return sim, metrics, time.time() - t0

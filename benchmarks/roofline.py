@@ -1,0 +1,37 @@
+"""§Roofline — report the three roofline terms per (arch x shape) from the
+dry-run artifacts (results/dryrun/*.json; run ``python -m
+repro.launch.dryrun`` first)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def run(quick: bool = True):
+    rows = []
+    files = sorted(glob.glob(os.path.join(DRYRUN, "*.json")))
+    if not files:
+        return [emit("roofline/missing", 0.0,
+                     "run: PYTHONPATH=src python -m repro.launch.dryrun")]
+    for path in files:
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") != "ok" or r.get("mesh") != "pod16x16":
+            continue
+        rf = r["roofline"]
+        frac = rf["compute_s"] / max(rf["bound_s"], 1e-30)
+        rows.append(emit(
+            f"roofline/{r['arch']}/{r['shape']}",
+            rf["bound_s"] * 1e6,
+            f"dominant={rf['dominant']};"
+            f"compute_ms={rf['compute_s']*1e3:.1f};"
+            f"memory_ms={rf['memory_s']*1e3:.1f};"
+            f"collective_ms={rf['collective_s']*1e3:.1f};"
+            f"roofline_fraction={frac:.3f};"
+            f"useful_flops_ratio={r.get('useful_flops_ratio') or 0:.2f}"))
+    return rows

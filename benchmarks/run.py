@@ -1,0 +1,56 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--full] [--only fig14,...]``
+prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "fig13_active_instances",   # Fig. 13: active instances over time
+    "fig14_interruptions",      # Fig. 14: interruption counts per policy
+    "fig15_durations",          # Fig. 15: interruption durations
+    "trace_scale",              # §VII-C/D: trace-scale simulation
+    "fig16_correlation",        # Fig. 16: advisor association analysis
+    "allocation_throughput",    # §VII-D1: scoring throughput (np/jax/pallas)
+    "victim_selection",         # beyond-paper: §IX victim selectors
+    "cost_analysis",            # beyond-paper: $ cost / waste per policy
+    "roofline",                 # §Roofline from dry-run artifacts
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full-scale runs (slower)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated module subset")
+    args = ap.parse_args(argv)
+
+    selected = args.only.split(",") if args.only else MODULES
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in selected:
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.run(quick=not args.full)
+        except Exception:
+            failures += 1
+            print(f"{name},0,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    return 1 if failures else 0
+
+
+def main_legacy() -> None:  # kept for the original scaffold entry point
+    raise SystemExit(main())
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

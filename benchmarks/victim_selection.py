@@ -1,0 +1,24 @@
+"""Beyond-paper: deterministic interruption-victim selection strategies
+(the paper's §IX future-work item) vs the faithful list-order default."""
+from __future__ import annotations
+
+from repro.core import ScenarioConfig
+
+from .common import emit, run_market
+
+SELECTORS = ["list_order", "best_fit_remaining", "max_progress"]
+
+
+def run(quick: bool = True):
+    rows = []
+    for sel in SELECTORS:
+        sim, metrics, wall = run_market("hlem-vmp-adjusted",
+                                        ScenarioConfig(seed=0), selector=sel)
+        s = metrics.spot_stats(sim.vms)
+        rows.append(emit(
+            f"victim/{sel}", wall * 1e6 / max(metrics.allocations, 1),
+            f"interruptions={s['interruptions']};"
+            f"avg_s={s['avg_interruption_time']:.2f};"
+            f"max_s={s['max_interruption_time']:.2f};"
+            f"terminated={s['spot_terminated']}"))
+    return rows

@@ -1,0 +1,84 @@
+"""End-to-end driver: train a ~100M-parameter model for a few hundred steps
+UNDER SIMULATED SPOT-MARKET PREEMPTIONS.
+
+The paper's spot lifecycle drives the trainer: worker slices are spot VMs in
+a MarketSimulator; interruptions trigger emergency checkpoints inside the
+warning window and an elastic data-parallel re-mesh; resumptions scale back
+up.  Global batch is invariant across rescales, so the loss curve is
+comparable to an uninterrupted run.
+
+Run:  PYTHONPATH=src python examples/elastic_training.py \
+          [--steps 300] [--workers 8] [--d-model 512]
+(8 CPU host devices are forced at startup for the elastic mesh.)
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse          # noqa: E402
+import tempfile          # noqa: E402
+
+import numpy as np       # noqa: E402
+
+from repro.elastic import ElasticTrainer, simulate_worker_availability  # noqa: E402
+from repro.models.config import ArchConfig                              # noqa: E402
+from repro.train.data import DataConfig                                 # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--d-model", type=int, default=768)
+    ap.add_argument("--n-layers", type=int, default=10)
+    ap.add_argument("--vocab", type=int, default=16384)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced model + fewer steps (CI-friendly)")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+    if args.quick:
+        args.steps, args.d_model, args.n_layers, args.vocab = 120, 256, 4, 4096
+
+    # defaults: ~110M params (10L x d768 x ff3072 + 16k vocab)
+    cfg = ArchConfig(
+        name="elastic-demo-100m", family="dense", n_layers=args.n_layers,
+        d_model=args.d_model, n_heads=8, n_kv_heads=4,
+        d_ff=4 * args.d_model, vocab=args.vocab, dtype="float32",
+        attention_chunk=args.seq_len)
+    print(f"model: {cfg.n_params()/1e6:.1f}M params")
+
+    # spot-market-driven availability of the worker fleet
+    events = simulate_worker_availability(
+        n_workers=args.workers, horizon=float(args.steps), seed=args.seed,
+        contention=1.5)
+    churn = [e for e in events if e.time > 0]
+    print(f"market timeline: {len(churn)} interruption/resume events")
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="elastic_ckpt_")
+    trainer = ElasticTrainer(
+        cfg, DataConfig(batch=args.batch, seq_len=args.seq_len,
+                        seed=args.seed),
+        ckpt_dir, max_workers=args.workers, seed=args.seed)
+    report = trainer.train_elastic(args.steps, churn,
+                                   steps_per_sim_unit=1.0)
+
+    print("\n=== elastic training report ===")
+    print(f"steps run            : {report.steps_run}")
+    print(f"mesh rescales        : {report.rescales}")
+    print(f"emergency checkpoints: {report.emergency_saves}")
+    print(f"restores             : {report.restores}")
+    print(f"mesh history (step, data-parallel width): {report.mesh_history}")
+    k = max(len(report.losses) // 10, 1)
+    smooth = [float(np.mean(report.losses[i:i + k]))
+              for i in range(0, len(report.losses), k)]
+    print("loss curve (smoothed):",
+          " ".join(f"{l:.3f}" for l in smooth))
+    assert smooth[-1] < smooth[0], "training failed to reduce loss"
+    print("OK: loss decreased across preemptions/rescales")
+
+
+if __name__ == "__main__":
+    main()

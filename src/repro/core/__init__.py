@@ -1,0 +1,63 @@
+"""repro.core — the paper's contribution: dynamic spot-market simulation.
+
+Public API:
+  MarketSimulator, SimConfig — discrete-event spot-market engine (§V)
+  allocation policies        — FirstFit/BestFit/WorstFit/HLEM-VMP/adjusted (§VI)
+  hlem scoring               — numpy oracle + jitted JAX (Eqs. 1-11)
+  workload generators        — §VII-E synthetic scenario, random fleets
+  metrics & table builders   — §V-E reporting
+"""
+from .allocation import (
+    AllocationPolicy,
+    BestFit,
+    FirstFit,
+    HlemVmp,
+    HlemVmpAdjusted,
+    POLICIES,
+    WorstFit,
+    clearing_mask,
+    direct_mask,
+    make_policy,
+)
+from .hlem import (
+    hlem_scores_jax,
+    hlem_scores_np,
+    hlem_select_batch_jax,
+    hlem_select_jax,
+    hlem_select_np,
+    hlem_weights_np,
+    rsdiff_np,
+)
+from .hosts import HostPool
+from .metrics import (
+    Metrics,
+    dynamic_vm_table,
+    execution_table,
+    spot_vm_table,
+    to_csv,
+    to_json,
+)
+from .simulator import MarketSimulator, SimConfig
+from .types import (
+    InterruptionBehavior,
+    N_DIMS,
+    RESOURCE_DIMS,
+    Vm,
+    VmState,
+    VmType,
+    make_on_demand,
+    make_spot,
+    resources,
+)
+from .workload import (
+    HOST_COUNTS,
+    HOST_TYPES,
+    VM_PROFILES,
+    ScenarioConfig,
+    build_hosts,
+    random_fleet,
+    random_vms,
+    synthetic_scenario,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,212 @@
+"""VM allocation policies (paper §II-D, §VI).
+
+Each policy implements ``find_host(vm, pool, now, allow_spot_clearing)`` and
+returns ``(host_id, needs_clearing)``; ``host_id == -1`` means no placement.
+``needs_clearing`` signals that the chosen host only becomes feasible after
+interrupting (some of) its spot VMs — the simulator performs the actual victim
+selection and interruption (DynamicAllocation.spotAllocation in the paper).
+
+Spot-clearing feasibility counts only *interruptible* spot VMs: those past
+their minimum running time (§IV-B "minimum runtime must be enforced").
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from .hlem import hlem_scores_np, hlem_select_jax, rsdiff_np
+from .hosts import HostPool
+from .types import Vm
+
+_EPS = 1e-9
+
+
+def direct_mask(vm: Vm, pool: HostPool) -> np.ndarray:
+    """Hosts that fit the demand right now."""
+    free = pool.free()
+    return pool.active_view() & np.all(free >= vm.demand - _EPS, axis=1)
+
+
+def clearing_mask(vm: Vm, pool: HostPool, now: float) -> np.ndarray:
+    """Hosts that would fit the demand after deallocating their interruptible
+    spot VMs (§VI-A: "checks the potential capacity of hosts if active spot
+    instances were to be deallocated").
+
+    Vectorized pre-filter: ``free + spot_used`` upper-bounds the reclaimable
+    capacity, so only hosts passing that cheap test get the exact per-VM
+    minimum-running-time check.
+    """
+    free = pool.free()
+    active = pool.active_view()
+    upper = active & np.all(free + pool.spot_used_view() >= vm.demand - _EPS, axis=1)
+    out = np.zeros_like(upper)
+    for hid in np.flatnonzero(upper):
+        reclaim = free[hid].copy()
+        for v in pool.residents[hid].values():
+            if v.interruptible(now):
+                reclaim += v.demand
+        out[hid] = np.all(reclaim >= vm.demand - _EPS)
+    return out
+
+
+def feasibility_masks(vm: Vm, pool: HostPool, now: float):
+    """(direct_mask, clearing_mask) — kept for tests; prefer the lazy pair."""
+    return direct_mask(vm, pool), clearing_mask(vm, pool, now)
+
+
+class AllocationPolicy:
+    name = "abstract"
+
+    def find_host(
+        self, vm: Vm, pool: HostPool, now: float, allow_spot_clearing: bool
+    ) -> Tuple[int, bool]:
+        raise NotImplementedError
+
+    def _pick(self, mask: np.ndarray, vm: Vm, pool: HostPool) -> int:
+        raise NotImplementedError
+
+    def find_host(self, vm, pool, now, allow_spot_clearing):
+        hid = self._pick(direct_mask(vm, pool), vm, pool)
+        if hid >= 0:
+            return hid, False
+        if allow_spot_clearing and not vm.is_spot:
+            hid = self._pick(clearing_mask(vm, pool, now), vm, pool)
+            if hid >= 0:
+                return hid, True
+        return -1, False
+
+
+class FirstFit(AllocationPolicy):
+    """CloudSim Plus baseline: first host (insertion order) that fits."""
+
+    name = "first-fit"
+
+    def _pick(self, mask, vm, pool):
+        idx = np.flatnonzero(mask)
+        return int(idx[0]) if idx.size else -1
+
+
+class BestFit(AllocationPolicy):
+    """Host with the least free CPU that still fits (tightest packing)."""
+
+    name = "best-fit"
+
+    def _pick(self, mask, vm, pool):
+        if not mask.any():
+            return -1
+        free_cpu = np.where(mask, pool.free()[:, 0], np.inf)
+        return int(np.argmin(free_cpu))
+
+class WorstFit(AllocationPolicy):
+    """Host with the most free CPU (max headroom)."""
+
+    name = "worst-fit"
+
+    def _pick(self, mask, vm, pool):
+        if not mask.any():
+            return -1
+        free_cpu = np.where(mask, pool.free()[:, 0], -np.inf)
+        return int(np.argmax(free_cpu))
+
+
+class HlemVmp(AllocationPolicy):
+    """HLEM-VMP (paper §VI-A/B).
+
+    Phase 1 filters feasible hosts and applies the RsDiff threshold (Eqs. 1–2);
+    if that leaves no candidate, the threshold filter is relaxed (and, for
+    on-demand VMs, the spot-clearing candidate list is used — Algorithm 1).
+    Phases 2–3 score candidates with entropy weights and pick the max.
+    """
+
+    name = "hlem-vmp"
+    #: adjusted-variant knobs (unused in the base class)
+    alpha = 0.0
+    adjust_spot_only = True
+
+    def __init__(self, rc: float = 0.95, threshold: float = 0.0,
+                 backend: str = "numpy"):
+        self.rc = rc
+        self.threshold = threshold
+        assert backend in ("numpy", "jax")
+        self.backend = backend
+
+    # -- phase 1 ------------------------------------------------------------
+    def _rsdiff_ok(self, vm: Vm, pool: HostPool) -> np.ndarray:
+        rs = rsdiff_np(vm.demand[0], pool.used_view()[:, 0],
+                       pool.totals()[:, 0], self.rc)
+        return rs > self.threshold
+
+    # -- phases 2-3 ---------------------------------------------------------
+    def _alpha_for(self, vm: Vm) -> float:
+        if self.alpha != 0.0 and (vm.is_spot or not self.adjust_spot_only):
+            return self.alpha
+        return 0.0
+
+    def _score_pick(self, mask: np.ndarray, vm: Vm, pool: HostPool) -> int:
+        if not mask.any():
+            return -1
+        free = pool.free()
+        tot = np.maximum(pool.totals(), _EPS)
+        spot_frac = pool.spot_used_view() / tot
+        alpha = self._alpha_for(vm)
+        if self.backend == "jax":
+            hid = int(hlem_select_jax(free, mask, spot_frac, np.float32(alpha)))
+            return hid
+        scores = hlem_scores_np(free, mask, spot_frac, alpha)
+        return int(np.argmax(scores))
+
+    def find_host(self, vm, pool, now, allow_spot_clearing):
+        direct = direct_mask(vm, pool)
+        rs_ok = self._rsdiff_ok(vm, pool)
+        # primary candidate list: feasible AND RsDiff above threshold
+        hid = self._score_pick(direct & rs_ok, vm, pool)
+        if hid >= 0:
+            return hid, False
+        # relaxed: feasible regardless of RsDiff
+        hid = self._score_pick(direct, vm, pool)
+        if hid >= 0:
+            return hid, False
+        # spot-clearing list (Algorithm 1, lines 8-10) — on-demand only
+        if allow_spot_clearing and not vm.is_spot:
+            clearing = clearing_mask(vm, pool, now)
+            hid = self._score_pick(clearing & rs_ok, vm, pool)
+            if hid >= 0:
+                return hid, True
+            hid = self._score_pick(clearing, vm, pool)
+            if hid >= 0:
+                return hid, True
+        return -1, False
+
+
+class HlemVmpAdjusted(HlemVmp):
+    """Adjusted HLEM-VMP (§VI-C): spot-load-aware score AHS = HS*(1+α·SL).
+
+    With α < 0 (default -0.5) spot-heavy hosts are penalized when placing spot
+    VMs, spreading spot load across hosts to reduce interruption counts.
+    ``adjust_spot_only=False`` applies the adjustment to on-demand placement
+    too (then on-demand avoids spot-heavy hosts as well — fewer preemptions,
+    beyond-paper variant benchmarked in EXPERIMENTS.md).
+    """
+
+    name = "hlem-vmp-adjusted"
+
+    def __init__(self, rc: float = 0.95, threshold: float = 0.0,
+                 alpha: float = -0.5, adjust_spot_only: bool = True,
+                 backend: str = "numpy"):
+        super().__init__(rc=rc, threshold=threshold, backend=backend)
+        self.alpha = alpha
+        self.adjust_spot_only = adjust_spot_only
+
+
+POLICIES = {
+    "first-fit": FirstFit,
+    "best-fit": BestFit,
+    "worst-fit": WorstFit,
+    "hlem-vmp": HlemVmp,
+    "hlem-vmp-adjusted": HlemVmpAdjusted,
+}
+
+
+def make_policy(name: str, **kwargs) -> AllocationPolicy:
+    return POLICIES[name](**kwargs)

@@ -1,0 +1,187 @@
+"""HLEM-VMP host scoring (paper §VI, Eqs. 1–11).
+
+Three implementations of the same math:
+
+* ``hlem_scores_np``  — pure-numpy oracle (readable, used as test reference),
+* ``hlem_scores_jax`` — vectorized/jitted JAX (production path on accelerators),
+* ``repro.kernels.hlem_score`` — Pallas TPU kernel (tiled over hosts), validated
+  against the numpy oracle in interpret mode.
+
+All take a *masked* formulation: every host is scored, infeasible hosts carry
+``mask=False`` and receive ``-inf`` so downstream argmax ignores them.  This is
+the jit-friendly equivalent of the paper's explicit candidate-list construction.
+
+Phases (paper §VI-A):
+  1. host filtering   — feasibility + RsDiff threshold (Eqs. 1–2), done by the
+                        policy layer (see allocation.py), expressed as ``mask``;
+  2. load evaluation  — min-max standardize free capacity per dimension (Eq. 3),
+                        proportions (Eq. 4), entropy e_d (Eqs. 5–6), variation
+                        g_d = 1 - e_d (Eq. 7), weights w_d (Eq. 8);
+  3. selection        — host score HS_i = sum_d w_d * C~_i^d (Eq. 9), argmax.
+
+Adjusted variant (§VI-C): spot load SL_i = sum_d w_d * spot_used/total (Eq. 10)
+scales the score AHS_i = HS_i * (1 + alpha * SL_i) (Eq. 11).  A *negative*
+``alpha`` penalizes spot-heavy hosts, which is the behavior the paper's text
+describes ("distribute spot instances more evenly"); the magnitude is tunable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# numpy oracle
+# ---------------------------------------------------------------------------
+def hlem_weights_np(free: np.ndarray, mask: np.ndarray):
+    """Entropy-derived resource weights over the masked candidate set.
+
+    Returns (standardized capacity C~ (n,D), weights w (D,)).
+    """
+    free = np.asarray(free, dtype=np.float64)
+    mask = np.asarray(mask, dtype=bool)
+    n_cand = int(mask.sum())
+    d = free.shape[1]
+    if n_cand == 0:
+        return np.zeros_like(free), np.full(d, 1.0 / d)
+
+    sel = free[mask]  # (m, D)
+    lo, hi = sel.min(axis=0), sel.max(axis=0)
+    span = hi - lo
+    # Eq. 3 — min-max standardization; degenerate dimension -> all equal (1.0)
+    c_std = np.where(span > _EPS, (sel - lo) / np.where(span > _EPS, span, 1.0), 1.0)
+    # Eq. 4 — proportions over candidates
+    col = c_std.sum(axis=0)
+    p = np.where(col > _EPS, c_std / np.where(col > _EPS, col, 1.0), 1.0 / n_cand)
+    # Eqs. 5–6 — entropy with k = 1/ln(n); n == 1 degenerates to zero entropy
+    if n_cand > 1:
+        k = 1.0 / np.log(n_cand)
+        plogp = np.where(p > _EPS, p * np.log(np.maximum(p, _EPS)), 0.0)
+        e = -k * plogp.sum(axis=0)
+    else:
+        e = np.zeros(d)
+    # Eqs. 7–8 — variation factors and weights
+    g = 1.0 - e
+    gsum = g.sum()
+    w = g / gsum if gsum > _EPS else np.full(d, 1.0 / d)
+
+    c_full = np.zeros_like(free)
+    c_full[mask] = c_std
+    return c_full, w
+
+
+def hlem_scores_np(
+    free: np.ndarray,
+    mask: np.ndarray,
+    spot_frac: np.ndarray | None = None,
+    alpha: float = 0.0,
+) -> np.ndarray:
+    """Full HLEM-VMP host scores; -inf where mask is False.
+
+    ``spot_frac`` is spot_used/total per (host, dim); with ``alpha != 0`` this
+    computes the adjusted score AHS (Eq. 11).
+    """
+    mask = np.asarray(mask, dtype=bool)
+    c_std, w = hlem_weights_np(free, mask)
+    hs = c_std @ w  # Eq. 9
+    if spot_frac is not None and alpha != 0.0:
+        sl = np.asarray(spot_frac, dtype=np.float64) @ w  # Eq. 10
+        hs = hs * (1.0 + alpha * sl)  # Eq. 11
+    return np.where(mask, hs, -np.inf)
+
+
+def hlem_select_np(free, mask, spot_frac=None, alpha=0.0) -> int:
+    """argmax host id, or -1 if no candidate."""
+    if not np.any(mask):
+        return -1
+    return int(np.argmax(hlem_scores_np(free, mask, spot_frac, alpha)))
+
+
+# ---------------------------------------------------------------------------
+# JAX (jitted, mask-based — fixed shapes, no data-dependent control flow)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=())
+def hlem_scores_jax(
+    free: jax.Array,           # (n, D) float32/float64
+    mask: jax.Array,           # (n,) bool
+    spot_frac: jax.Array,      # (n, D)
+    alpha: jax.Array,          # scalar
+) -> jax.Array:
+    """Identical math to ``hlem_scores_np``, jit-compiled."""
+    free = free.astype(jnp.float32)
+    maskf = mask.astype(jnp.float32)[:, None]          # (n,1)
+    m = jnp.sum(maskf)                                 # candidate count
+    big = jnp.float32(3.4e38)
+
+    masked = jnp.where(mask[:, None], free, jnp.inf)
+    lo = jnp.min(masked, axis=0)
+    masked_hi = jnp.where(mask[:, None], free, -jnp.inf)
+    hi = jnp.max(masked_hi, axis=0)
+    span = hi - lo
+    degen = span <= _EPS
+    c_std = jnp.where(degen[None, :], 1.0, (free - lo[None, :]) / jnp.where(degen, 1.0, span)[None, :])
+    c_std = c_std * maskf
+
+    col = jnp.sum(c_std, axis=0)
+    p = jnp.where(col[None, :] > _EPS, c_std / jnp.where(col > _EPS, col, 1.0)[None, :],
+                  maskf / jnp.maximum(m, 1.0))
+    p = p * maskf
+    k = jnp.where(m > 1.0, 1.0 / jnp.log(jnp.maximum(m, 2.0)), 0.0)
+    plogp = jnp.where(p > _EPS, p * jnp.log(jnp.maximum(p, _EPS)), 0.0)
+    e = -k * jnp.sum(plogp, axis=0)
+    g = 1.0 - e
+    gsum = jnp.sum(g)
+    d = free.shape[1]
+    w = jnp.where(gsum > _EPS, g / jnp.where(gsum > _EPS, gsum, 1.0), 1.0 / d)
+
+    hs = c_std @ w
+    sl = spot_frac.astype(jnp.float32) @ w
+    hs = hs * (1.0 + alpha * sl)
+    return jnp.where(mask, hs, -big)
+
+
+@jax.jit
+def hlem_select_jax(free, mask, spot_frac, alpha) -> jax.Array:
+    scores = hlem_scores_jax(free, mask, spot_frac, alpha)
+    idx = jnp.argmax(scores)
+    return jnp.where(jnp.any(mask), idx, -1)
+
+
+# Batched variant: score B pending VM demands against the same host state in one
+# call (used when flushing the resubmission queue) — a beyond-CloudSim
+# vectorization enabled by the masked formulation.
+@jax.jit
+def hlem_select_batch_jax(
+    free: jax.Array,        # (n, D)
+    masks: jax.Array,       # (B, n) per-VM feasibility masks
+    spot_frac: jax.Array,   # (n, D)
+    alpha: jax.Array,
+) -> jax.Array:             # (B,) selected host per VM (ignoring cross-VM capacity)
+    fn = jax.vmap(lambda m: hlem_select_jax(free, m, spot_frac, alpha))
+    return fn(masks)
+
+
+# ---------------------------------------------------------------------------
+# Filtering math shared by the policy layer
+# ---------------------------------------------------------------------------
+def rsdiff_np(
+    demand_cpu: float,
+    used_cpu: np.ndarray,
+    total_cpu: np.ndarray,
+    rc: float = 0.95,
+) -> np.ndarray:
+    """Eq. 1 — RsDiff = R_j(t) - U_i(t) * Rc, in CPU-fraction units.
+
+    R_j is the VM's CPU request relative to the host's CPU capacity; U_i is the
+    host's current CPU utilization. Hosts already loaded with similar workloads
+    (high utilization relative to the request) are filtered out (Eq. 2).
+    """
+    tot = np.maximum(total_cpu, _EPS)
+    r_j = demand_cpu / tot
+    u_i = used_cpu / tot
+    return r_j - u_i * rc

@@ -1,0 +1,159 @@
+"""Simulation output & monitoring (paper §IV-B: execution history, interruption
+counts, average interruption times) + table builders (§V-E-f) with CSV/JSON
+export (§V-F TableBuilder extension)."""
+from __future__ import annotations
+
+import csv
+import io
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .types import Vm, VmState, VmType
+
+
+@dataclass
+class InterruptionEvent:
+    vm_id: int
+    time: float
+    host: int
+    kind: str  # "terminate" | "hibernate" | "host-removed"
+
+
+@dataclass
+class Metrics:
+    """Collected over one simulation run."""
+
+    interruption_events: List[InterruptionEvent] = field(default_factory=list)
+    # time series sampled at every state change: (t, active_spot, active_od,
+    # waiting, hibernated)
+    timeline: List[tuple] = field(default_factory=list)
+    allocations: int = 0
+    resubmissions: int = 0
+    preemption_scans: int = 0
+
+    def record_state(self, t: float, vms: Dict[int, Vm]) -> None:
+        spot = od = waiting = hib = 0
+        for v in vms.values():
+            if v.state in (VmState.RUNNING, VmState.INTERRUPTING):
+                if v.vm_type is VmType.SPOT:
+                    spot += 1
+                else:
+                    od += 1
+            elif v.state is VmState.WAITING:
+                waiting += 1
+            elif v.state is VmState.HIBERNATED:
+                hib += 1
+        self.timeline.append((t, spot, od, waiting, hib))
+
+    # -- aggregate statistics -------------------------------------------------
+    def interruption_count(self) -> int:
+        return len(self.interruption_events)
+
+    def spot_stats(self, vms: Dict[int, Vm]) -> dict:
+        """Aggregates matching the paper's Figs. 14–15 and §VII-D2."""
+        gaps: List[float] = []
+        per_vm_interruptions: List[int] = []
+        finished = finished_after_interruption = terminated = 0
+        uninterrupted_finished = 0
+        for v in vms.values():
+            if v.vm_type is not VmType.SPOT:
+                continue
+            g = v.interruption_gaps()
+            gaps.extend(g)
+            per_vm_interruptions.append(v.interruptions)
+            if v.state is VmState.FINISHED:
+                finished += 1
+                if v.interruptions > 0:
+                    finished_after_interruption += 1
+                else:
+                    uninterrupted_finished += 1
+            elif v.state is VmState.TERMINATED:
+                terminated += 1
+        return {
+            "interruptions": self.interruption_count(),
+            "avg_interruption_time": float(np.mean(gaps)) if gaps else 0.0,
+            "max_interruption_time": float(np.max(gaps)) if gaps else 0.0,
+            "min_interruption_time": float(np.min(gaps)) if gaps else 0.0,
+            "max_interruptions_per_vm": int(max(per_vm_interruptions, default=0)),
+            "resumed_gaps": len(gaps),
+            "spot_finished": finished,
+            "spot_finished_after_interruption": finished_after_interruption,
+            "spot_finished_uninterrupted": uninterrupted_finished,
+            "spot_terminated": terminated,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Table builders (DynamicVmTableBuilder / SpotVmTableBuilder /
+# ExecutionTableBuilder equivalents)
+# ---------------------------------------------------------------------------
+def dynamic_vm_table(vms: List[Vm]) -> List[dict]:
+    rows = []
+    for v in vms:
+        start = v.history[0].start if v.history else -1.0
+        stop = v.history[-1].stop if v.history and v.history[-1].stop is not None else -1.0
+        rows.append({
+            "vm_id": v.id,
+            "host": v.history[-1].host if v.history else -1,
+            "cpu": float(v.demand[0]),
+            "ram": float(v.demand[1]),
+            "start_time": start,
+            "stop_time": stop,
+            "submission_delay": v.submit_time,
+            "type": v.vm_type.value,
+            "state": v.state.value,
+        })
+    return rows
+
+
+def spot_vm_table(vms: List[Vm]) -> List[dict]:
+    rows = []
+    for v in vms:
+        if v.vm_type is not VmType.SPOT:
+            continue
+        rows.append({
+            "vm_id": v.id,
+            "cpu": float(v.demand[0]),
+            "state": v.state.value,
+            "interruptions": v.interruptions,
+            "avg_interruption_time": v.average_interruption_time(),
+        })
+    return rows
+
+
+def execution_table(vms: List[Vm]) -> List[dict]:
+    rows = []
+    for v in vms:
+        for i, itv in enumerate(v.history):
+            rows.append({
+                "vm_id": v.id,
+                "interval": i,
+                "host": itv.host,
+                "start": itv.start,
+                "stop": itv.stop if itv.stop is not None else -1.0,
+            })
+    return rows
+
+
+def to_csv(rows: List[dict], path: Optional[str] = None) -> str:
+    buf = io.StringIO()
+    if rows:
+        writer = csv.DictWriter(buf, fieldnames=list(rows[0].keys()))
+        writer.writeheader()
+        writer.writerows(rows)
+    out = buf.getvalue()
+    if path:
+        with open(path, "w") as f:
+            f.write(out)
+    return out
+
+
+def to_json(rows: List[dict], path: Optional[str] = None) -> str:
+    out = json.dumps(rows, indent=1)
+    if path:
+        with open(path, "w") as f:
+            f.write(out)
+    return out

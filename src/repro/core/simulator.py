@@ -1,0 +1,404 @@
+"""The dynamic marketspace simulator (paper §V).
+
+Implements the full spot-instance lifecycle of Fig. 4 on top of a discrete
+event queue: persistent requests, capacity-driven interruption with a warning
+period, TERMINATE/HIBERNATE behaviors, minimum running time, hibernation
+timeout, waiting timeout, resubmission on deallocation, and dynamic host
+add/remove (trace machine events).
+
+Design notes vs. the Java original:
+* Victim selection during preemption is configurable (``interruption_selector``)
+  instead of the original's non-deterministic host-VM-list order — ``list_order``
+  reproduces the paper's behavior; ``best_fit_remaining`` / ``max_progress`` are
+  deterministic beyond-paper strategies (the paper's own §IX future-work item).
+* Resubmission is triggered on every deallocation (the paper's
+  onHostDeallocationListener variant) in the order: waiting on-demand →
+  waiting spot → hibernated spot (configurable).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from .allocation import AllocationPolicy, FirstFit
+from .events import Event, EventKind, EventQueue
+from .hosts import HostPool
+from .metrics import InterruptionEvent, Metrics
+from .types import (
+    ExecutionInterval,
+    InterruptionBehavior,
+    Vm,
+    VmState,
+    VmType,
+)
+
+_EPS = 1e-9
+
+
+@dataclass
+class SimConfig:
+    warning_time: float = 0.0              # grace period before interruption
+    interruption_selector: str = "list_order"  # | best_fit_remaining | max_progress
+    resubmit_order: tuple = ("waiting_od", "waiting_spot", "hibernated")
+    max_time: float = float("inf")
+    record_timeline: bool = True
+    strict_invariants: bool = False        # re-check host accounting each event
+
+
+class MarketSimulator:
+    """Discrete-event spot-market simulator."""
+
+    def __init__(self, policy: Optional[AllocationPolicy] = None,
+                 config: Optional[SimConfig] = None):
+        self.policy = policy or FirstFit()
+        self.config = config or SimConfig()
+        self.pool = HostPool()
+        self.queue = EventQueue()
+        self.vms: Dict[int, Vm] = {}
+        self.metrics = Metrics()
+        self.now = 0.0
+        self._waiting_od: Dict[int, Vm] = {}
+        self._waiting_spot: Dict[int, Vm] = {}
+        self._hibernated: Dict[int, Vm] = {}
+        # hosts with a pending interruption commit: host -> reserved VM ids
+        self._pending_victims: Dict[int, List[int]] = {}
+        self.listeners: Dict[str, List[Callable]] = {}
+        self._next_vm_id = 0
+
+    # ------------------------------------------------------------------ setup
+    def add_host(self, capacity: np.ndarray) -> int:
+        return self.pool.add_host(capacity)
+
+    def on(self, event_name: str, fn: Callable) -> None:
+        """Register an event listener (CloudSim Plus EventListener analogue).
+
+        Names: vm_allocated, vm_deallocated, vm_interrupted, vm_finished,
+        vm_failed, clock_tick."""
+        self.listeners.setdefault(event_name, []).append(fn)
+
+    def _emit(self, name: str, **kw) -> None:
+        for fn in self.listeners.get(name, ()):
+            fn(sim=self, time=self.now, **kw)
+
+    def submit(self, vm: Vm) -> None:
+        """Submit a VM at ``vm.submit_time`` (broker submitVm)."""
+        assert vm.id not in self.vms, f"duplicate vm id {vm.id}"
+        self.vms[vm.id] = vm
+        self.queue.push(vm.submit_time, EventKind.VM_SUBMIT, vm.id)
+
+    def new_vm_id(self) -> int:
+        while self._next_vm_id in self.vms:
+            self._next_vm_id += 1
+        vid = self._next_vm_id
+        self._next_vm_id += 1
+        return vid
+
+    def schedule_host_add(self, time: float, capacity: np.ndarray) -> None:
+        self.queue.push(time, EventKind.HOST_ADD, np.asarray(capacity, float))
+
+    def schedule_host_remove(self, time: float, hid: int) -> None:
+        self.queue.push(time, EventKind.HOST_REMOVE, hid)
+
+    def schedule_host_update(self, time: float, hid: int, capacity) -> None:
+        self.queue.push(time, EventKind.HOST_UPDATE,
+                        (hid, np.asarray(capacity, float)))
+
+    # ------------------------------------------------------------------- run
+    def run(self, until: Optional[float] = None) -> Metrics:
+        limit = until if until is not None else self.config.max_time
+        while True:
+            t = self.queue.peek_time()
+            if t is None or t > limit:
+                break
+            ev = self.queue.pop()
+            self.now = ev.time
+            self._dispatch(ev)
+            if self.config.strict_invariants:
+                self.pool.check_invariants()
+        self.now = min(limit, self.now) if limit != float("inf") else self.now
+        return self.metrics
+
+    def _dispatch(self, ev: Event) -> None:
+        kind = ev.kind
+        if kind is EventKind.VM_SUBMIT:
+            self._on_submit(self.vms[ev.payload])
+        elif kind is EventKind.VM_FINISH:
+            vm = self.vms[ev.payload]
+            if ev.generation == vm.generation:
+                self._on_finish(vm)
+        elif kind is EventKind.WAIT_EXPIRE:
+            vm = self.vms[ev.payload]
+            if ev.generation == vm.generation and vm.state is VmState.WAITING:
+                self._on_wait_expire(vm)
+        elif kind is EventKind.HIBERNATION_EXPIRE:
+            vm = self.vms[ev.payload]
+            if ev.generation == vm.generation and vm.state is VmState.HIBERNATED:
+                self._on_hibernation_expire(vm)
+        elif kind is EventKind.INTERRUPT_COMMIT:
+            self._on_interrupt_commit(ev.payload)
+        elif kind is EventKind.HOST_ADD:
+            self.pool.add_host(ev.payload)
+            self._flush_pending()
+        elif kind is EventKind.HOST_REMOVE:
+            self._on_host_remove(ev.payload)
+        elif kind is EventKind.HOST_UPDATE:
+            hid, cap = ev.payload
+            self.pool.update_host(hid, cap)
+        self._emit("clock_tick")
+
+    # ------------------------------------------------------------ allocation
+    def _on_submit(self, vm: Vm) -> None:
+        vm.state = VmState.WAITING
+        vm.waiting_since = self.now
+        self._try_allocate(vm, fresh=True)
+        self._record()
+
+    def _try_allocate(self, vm: Vm, fresh: bool) -> bool:
+        hid, needs_clearing = self.policy.find_host(
+            vm, self.pool, self.now, allow_spot_clearing=True
+        )
+        if hid < 0:
+            self._enqueue_pending(vm, fresh)
+            return False
+        if needs_clearing:
+            self.metrics.preemption_scans += 1
+            started = self._preempt_for(vm, hid)
+            if not started:
+                self._enqueue_pending(vm, fresh)
+            return False  # allocation happens at INTERRUPT_COMMIT
+        self._start_vm(vm, hid)
+        return True
+
+    def _enqueue_pending(self, vm: Vm, fresh: bool) -> None:
+        if not vm.persistent:
+            vm.state = VmState.FAILED
+            self._emit("vm_failed", vm=vm)
+            return
+        vm.state = VmState.HIBERNATED if vm.hibernated_at >= 0 else VmState.WAITING
+        if vm.hibernated_at >= 0:
+            self._hibernated[vm.id] = vm
+        elif vm.vm_type is VmType.ON_DEMAND:
+            self._waiting_od[vm.id] = vm
+        else:
+            self._waiting_spot[vm.id] = vm
+        if fresh and np.isfinite(vm.waiting_timeout) and vm.hibernated_at < 0:
+            self.queue.push(vm.waiting_since + vm.waiting_timeout,
+                            EventKind.WAIT_EXPIRE, vm.id, vm.generation)
+
+    def _start_vm(self, vm: Vm, hid: int) -> None:
+        self._waiting_od.pop(vm.id, None)
+        self._waiting_spot.pop(vm.id, None)
+        resumed = self._hibernated.pop(vm.id, None) is not None
+        self.pool.place(vm, hid)
+        vm.state = VmState.RUNNING
+        vm.run_start = self.now
+        vm.hibernated_at = -1.0
+        vm.generation += 1
+        vm.history.append(ExecutionInterval(host=hid, start=self.now))
+        self.queue.push(self.now + vm.remaining, EventKind.VM_FINISH,
+                        vm.id, vm.generation)
+        self.metrics.allocations += 1
+        if resumed:
+            self.metrics.resubmissions += 1
+        self._emit("vm_allocated", vm=vm, host=hid, resumed=resumed)
+
+    # ----------------------------------------------------------- preemption
+    def _select_victims(self, vm: Vm, hid: int) -> List[Vm]:
+        """Choose interruptible spot VMs on ``hid`` to cover the deficit."""
+        free = self.pool.free()[hid]
+        deficit = np.maximum(vm.demand - free, 0.0)
+        candidates = [v for v in self.pool.spot_vms_on(hid)
+                      if v.interruptible(self.now)]
+        sel = self.config.interruption_selector
+        if sel == "best_fit_remaining":
+            # fewest wasted resources: smallest remaining work first among those
+            # that cover the deficit; deterministic beyond-paper strategy.
+            candidates.sort(key=lambda v: (v.remaining, v.id))
+        elif sel == "max_progress":
+            # protect VMs closest to completion: interrupt least-progressed first
+            candidates.sort(key=lambda v: (-(v.duration - v.remaining), v.id))
+        # "list_order": keep host residence order (paper's behavior)
+        victims, covered = [], np.zeros_like(deficit)
+        for v in candidates:
+            if np.all(covered >= deficit - _EPS):
+                break
+            victims.append(v)
+            covered += v.demand
+        if not np.all(covered >= deficit - _EPS):
+            return []  # cannot actually free enough (mid-warning state changed)
+        return victims
+
+    def _preempt_for(self, vm: Vm, hid: int) -> bool:
+        victims = self._select_victims(vm, hid)
+        if not victims:
+            return False
+        w = self.config.warning_time
+        for v in victims:
+            # keep the victim's VM_FINISH event valid: a spot VM that
+            # completes during the warning window finishes normally (its
+            # capacity is then free at commit time anyway).
+            v.state = VmState.INTERRUPTING
+        self._pending_victims[hid] = [v.id for v in victims]
+        self.queue.push(self.now + w, EventKind.INTERRUPT_COMMIT,
+                        (hid, vm.id, [v.id for v in victims]))
+        return True
+
+    def _on_interrupt_commit(self, payload) -> None:
+        hid, od_id, victim_ids = payload
+        od = self.vms[od_id]
+        self._pending_victims.pop(hid, None)
+        for vid in victim_ids:
+            v = self.vms[vid]
+            if v.state is not VmState.INTERRUPTING:
+                continue  # finished or otherwise transitioned during warning
+            self._interrupt(v, kind=v.behavior.value)
+        if od.state in (VmState.WAITING,) and self.pool.fits(hid, od.demand):
+            self._start_vm(od, hid)
+        elif od.state is VmState.WAITING:
+            # capacity changed during the warning window; retry globally
+            self._try_allocate(od, fresh=False)
+        self._flush_pending()
+        self._record()
+
+    def _interrupt(self, vm: Vm, kind: str) -> None:
+        """Stop a running/interrupting spot VM and apply its behavior."""
+        self._account_progress(vm)
+        self.pool.release(vm)
+        vm.interruptions += 1
+        self.metrics.interruption_events.append(
+            InterruptionEvent(vm.id, self.now, vm.history[-1].host, kind))
+        self._emit("vm_interrupted", vm=vm, kind=kind)
+        if vm.remaining <= _EPS:
+            self._finish_now(vm)
+            return
+        if kind == "hibernate":
+            vm.state = VmState.HIBERNATED
+            vm.hibernated_at = self.now
+            vm.generation += 1
+            self._hibernated[vm.id] = vm
+            if np.isfinite(vm.hibernation_timeout):
+                self.queue.push(self.now + vm.hibernation_timeout,
+                                EventKind.HIBERNATION_EXPIRE, vm.id,
+                                vm.generation)
+        else:
+            vm.state = VmState.TERMINATED
+            vm.generation += 1
+            self._emit("vm_terminated", vm=vm)
+
+    def _account_progress(self, vm: Vm) -> None:
+        """Close the current execution interval and decrement remaining work."""
+        ran = self.now - vm.run_start
+        vm.remaining = max(0.0, vm.remaining - ran)
+        vm.history[-1].stop = self.now
+        self._emit("vm_deallocated", vm=vm, host=vm.host)
+
+    # ------------------------------------------------------------ lifecycle
+    def _on_finish(self, vm: Vm) -> None:
+        if vm.state not in (VmState.RUNNING, VmState.INTERRUPTING):
+            return
+        self._account_progress(vm)
+        self.pool.release(vm)
+        self._finish_now(vm)
+        self._flush_pending()
+        self._record()
+
+    def _finish_now(self, vm: Vm) -> None:
+        vm.state = VmState.FINISHED
+        vm.finish_time = self.now
+        vm.generation += 1
+        self._hibernated.pop(vm.id, None)
+        self._emit("vm_finished", vm=vm)
+
+    def _on_wait_expire(self, vm: Vm) -> None:
+        self._waiting_od.pop(vm.id, None)
+        self._waiting_spot.pop(vm.id, None)
+        vm.state = VmState.FAILED
+        vm.generation += 1
+        self._emit("vm_failed", vm=vm)
+        self._record()
+
+    def _on_hibernation_expire(self, vm: Vm) -> None:
+        self._hibernated.pop(vm.id, None)
+        vm.state = VmState.TERMINATED
+        vm.generation += 1
+        self._emit("vm_terminated", vm=vm)
+        self._record()
+
+    def _on_host_remove(self, hid: int) -> None:
+        victims = self.pool.remove_host(hid)
+        for v in victims:
+            if v.vm_type is VmType.SPOT:
+                self._account_progress(v)
+                self.pool.release(v)
+                v.interruptions += 1
+                self.metrics.interruption_events.append(
+                    InterruptionEvent(v.id, self.now, hid, "host-removed"))
+                if v.behavior is InterruptionBehavior.HIBERNATE and v.remaining > _EPS:
+                    v.state = VmState.HIBERNATED
+                    v.hibernated_at = self.now
+                    v.generation += 1
+                    self._hibernated[v.id] = v
+                    if np.isfinite(v.hibernation_timeout):
+                        self.queue.push(self.now + v.hibernation_timeout,
+                                        EventKind.HIBERNATION_EXPIRE, v.id,
+                                        v.generation)
+                elif v.remaining <= _EPS:
+                    self._finish_now(v)
+                else:
+                    v.state = VmState.TERMINATED
+                    v.generation += 1
+            else:
+                # on-demand VMs are resubmitted as persistent requests
+                self._account_progress(v)
+                self.pool.release(v)
+                v.generation += 1
+                if v.remaining <= _EPS:
+                    self._finish_now(v)
+                else:
+                    v.state = VmState.WAITING
+                    v.waiting_since = self.now
+                    self._waiting_od[v.id] = v
+        self._flush_pending()
+        self._record()
+
+    # --------------------------------------------------------- resubmission
+    def _flush_pending(self) -> None:
+        """Resubmission pass: try to place queued requests (§V-D)."""
+        queues = {
+            "waiting_od": self._waiting_od,
+            "waiting_spot": self._waiting_spot,
+            "hibernated": self._hibernated,
+        }
+        progress = True
+        while progress:
+            progress = False
+            for name in self.config.resubmit_order:
+                q = queues[name]
+                for vid in list(q.keys()):
+                    vm = q[vid]
+                    if vm.state not in (VmState.WAITING, VmState.HIBERNATED):
+                        q.pop(vid, None)
+                        continue
+                    allow_clear = vm.vm_type is VmType.ON_DEMAND
+                    hid, needs_clearing = self.policy.find_host(
+                        vm, self.pool, self.now, allow_spot_clearing=allow_clear)
+                    if hid >= 0 and not needs_clearing:
+                        q.pop(vid, None)
+                        self._start_vm(vm, hid)
+                        progress = True
+                    # note: queued on-demand VMs do not trigger *new* preemption
+                    # cascades here — preemption happens on the submit path;
+                    # this avoids livelock between queued od and running spot.
+
+    def _record(self) -> None:
+        if self.config.record_timeline:
+            self.metrics.record_state(self.now, self.vms)
+
+    # ------------------------------------------------------------- reporting
+    def finished_vms(self) -> List[Vm]:
+        return [v for v in self.vms.values() if v.state is VmState.FINISHED]
+
+    def all_vms(self) -> List[Vm]:
+        return list(self.vms.values())

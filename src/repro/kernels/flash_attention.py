@@ -1,0 +1,149 @@
+"""Blocked (flash) causal attention for TPU, with GQA and sliding windows.
+
+MXU-oriented tiling: (block_q × head_dim) @ (head_dim × block_k) matmuls with
+online softmax (running max / normalizer) carried in VMEM scratch across the
+sequential kv-block grid axis.  Causal and sliding-window blocks that are
+fully masked are skipped via ``pl.when`` (no MXU issue, no VMEM fill).
+
+Grid = (batch*heads, n_q_blocks, n_kv_blocks), kv innermost (sequential on
+TPU), so scratch (acc, m, l) lives across the kv sweep for one q block.
+
+Query/key positions are aligned at sequence end (supports Tq < Tk decode
+windows): query i attends keys j with  j <= i + (Tk - Tq)  and, with window W,
+j > i + (Tk - Tq) - W.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+               *, scale: float, causal: bool, window: int | None,
+               block_q: int, block_k: int, t_q: int, t_k: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # absolute positions of this tile
+    offs = t_k - t_q
+    q_lo = qi * block_q
+
+    def _needed() -> jax.Array:
+        if not causal and window is None:
+            return jnp.bool_(True)
+        k_lo = kj * block_k
+        need = jnp.bool_(True)
+        if causal:  # any key in tile <= any query pos in tile (+offs)
+            need = jnp.logical_and(need, k_lo <= q_lo + block_q - 1 + offs)
+        if window is not None:
+            need = jnp.logical_and(
+                need, k_lo + block_k - 1 > q_lo + offs - window)
+        return need
+
+    @pl.when(_needed())
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                # (BQ, dh)
+        k = k_ref[0].astype(jnp.float32)                # (BK, dh)
+        v = v_ref[0].astype(jnp.float32)                # (BK, dh)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (BQ, BK)
+
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + offs
+        kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = kpos < t_k  # padding
+        if causal:
+            ok = jnp.logical_and(ok, kpos <= qpos)
+        if window is not None:
+            ok = jnp.logical_and(ok, kpos > qpos - window)
+        s = jnp.where(ok, s, _NEG)
+
+        m_prev = m_ref[...]                              # (BQ, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(ok, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.where(l > 0, l, 1.0)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,                    # (B, H, Tq, dh)
+    k: jax.Array,                    # (B, Hkv, Tk, dh)
+    v: jax.Array,                    # (B, Hkv, Tk, dh)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, t_q, dh = q.shape
+    _, hkv, t_k, _ = k.shape
+    assert h % hkv == 0, "GQA requires H % Hkv == 0"
+    group = h // hkv
+    scale = dh ** -0.5
+
+    block_q = min(block_q, max(t_q, 1))
+    block_k = min(block_k, max(t_k, 1))
+    tq_pad = pl.cdiv(t_q, block_q) * block_q
+    tk_pad = pl.cdiv(t_k, block_k) * block_k
+    if tq_pad != t_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, tq_pad - t_q), (0, 0)))
+    if tk_pad != t_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, tk_pad - t_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, tk_pad - t_k), (0, 0)))
+
+    qr = q.reshape(b * h, tq_pad, dh)
+    kr = k.reshape(b * hkv, tk_pad, dh)
+    vr = v.reshape(b * hkv, tk_pad, dh)
+
+    grid = (b * h, tq_pad // block_q, tk_pad // block_k)
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, t_q=t_q, t_k=t_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, dh),
+                         lambda bh, qi, kj, g=group: (bh // g, kj, 0)),
+            pl.BlockSpec((1, block_k, dh),
+                         lambda bh, qi, kj, g=group: (bh // g, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, tq_pad, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dh), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, tq_pad, dh)[:, :, :t_q, :]

@@ -1,0 +1,52 @@
+"""Public jit'd entry points for the kernel package.
+
+Every op has an ``impl`` switch:
+  * ``"xla"``     — the pure-jnp reference path (used by the multi-pod dry-run:
+                    roofline terms are derived from XLA HLO, and TPU Pallas
+                    kernels cannot lower on the CPU host platform),
+  * ``"pallas"``  — the TPU kernel (compiled for real TPUs),
+  * ``"interp"``  — the TPU kernel body interpreted on CPU (tests/validation).
+
+This mirrors how production JAX frameworks gate custom kernels behind flags.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from . import ref
+from .flash_attention import flash_attention as _fa_pallas
+from .hlem_score import hlem_score_pallas
+from .ssm_scan import ssm_scan as _ssm_pallas
+
+DEFAULT_IMPL = "xla"
+
+
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              impl: str = DEFAULT_IMPL, block_q: int = 128,
+              block_k: int = 128) -> jax.Array:
+    """Multi-head attention with GQA broadcast; q (B,H,Tq,dh), k/v (B,Hkv,Tk,dh)."""
+    if impl == "xla":
+        return ref.mha_ref(q, k, v, causal=causal, window=window)
+    return _fa_pallas(q, k, v, causal=causal, window=window,
+                      block_q=block_q, block_k=block_k,
+                      interpret=(impl == "interp"))
+
+
+def selective_scan(x, dt, a, b, c, d, h0=None, *, impl: str = DEFAULT_IMPL,
+                   block_d: int = 256, block_t: int = 128):
+    """Mamba-1 selective scan; returns (y, final_state)."""
+    if impl == "xla":
+        return ref.ssm_scan_ref(x, dt, a, b, c, d, h0)
+    return _ssm_pallas(x, dt, a, b, c, d, h0, block_d=block_d,
+                       block_t=block_t, interpret=(impl == "interp"))
+
+
+def hlem_score(free, mask, spot_frac, alpha, *, impl: str = DEFAULT_IMPL,
+               block: int = 512) -> jax.Array:
+    """HLEM-VMP host scores (paper Eqs. 3-11)."""
+    if impl == "xla":
+        return ref.hlem_score_ref(free, mask, spot_frac, alpha)
+    return hlem_score_pallas(free, mask, spot_frac, alpha, block=block,
+                             interpret=(impl == "interp"))

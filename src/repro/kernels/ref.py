@@ -1,0 +1,188 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each kernel's test sweeps shapes/dtypes
+and asserts allclose against the function here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# hlem_score — paper Eqs. 3-11 (masked formulation, matches core.hlem)
+# ---------------------------------------------------------------------------
+def hlem_score_ref(free: jax.Array, mask: jax.Array, spot_frac: jax.Array,
+                   alpha: jax.Array) -> jax.Array:
+    """(n,D) free capacity + (n,) candidate mask -> (n,) scores (-big if masked).
+
+    Mirrors repro.core.hlem.hlem_scores_jax (float32 math).
+    """
+    free = free.astype(jnp.float32)
+    maskf = mask.astype(jnp.float32)[:, None]
+    m = jnp.sum(maskf)
+    big = jnp.float32(3.4e38)
+
+    lo = jnp.min(jnp.where(mask[:, None], free, jnp.inf), axis=0)
+    hi = jnp.max(jnp.where(mask[:, None], free, -jnp.inf), axis=0)
+    span = hi - lo
+    degen = span <= _EPS
+    c_std = jnp.where(degen[None, :], 1.0,
+                      (free - lo[None, :]) / jnp.where(degen, 1.0, span)[None, :])
+    c_std = c_std * maskf
+
+    col = jnp.sum(c_std, axis=0)
+    p = jnp.where(col[None, :] > _EPS,
+                  c_std / jnp.where(col > _EPS, col, 1.0)[None, :],
+                  maskf / jnp.maximum(m, 1.0))
+    p = p * maskf
+    k = jnp.where(m > 1.0, 1.0 / jnp.log(jnp.maximum(m, 2.0)), 0.0)
+    plogp = jnp.where(p > _EPS, p * jnp.log(jnp.maximum(p, _EPS)), 0.0)
+    e = -k * jnp.sum(plogp, axis=0)
+    g = 1.0 - e
+    gsum = jnp.sum(g)
+    d = free.shape[1]
+    w = jnp.where(gsum > _EPS, g / jnp.where(gsum > _EPS, gsum, 1.0), 1.0 / d)
+
+    hs = c_std @ w
+    sl = spot_frac.astype(jnp.float32) @ w
+    hs = hs * (1.0 + alpha * sl)
+    return jnp.where(mask, hs, -big)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention — causal multi-head attention oracle
+# ---------------------------------------------------------------------------
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+            window: int | None = None, scale: float | None = None) -> jax.Array:
+    """q (B,H,Tq,dh), k/v (B,Hkv,Tk,dh) with GQA head-group broadcast.
+
+    ``window``: optional sliding-window size (attend to the last W positions).
+    Positions are aligned at the end: query i attends to keys j with
+    j <= i + (Tk - Tq) (supports decode where Tq < Tk).
+    """
+    b, h, tq, dh = q.shape
+    hkv = k.shape[1]
+    if scale is None:
+        scale = dh ** -0.5
+    group = h // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    tk = k.shape[2]
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(tq)[:, None] + (tk - tq)
+    kpos = jnp.arange(tk)[None, :]
+    ok = jnp.ones((tq, tk), dtype=bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    logits = jnp.where(ok[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def mha_chunked_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    scale: float | None = None,
+                    chunk: int = 1024) -> jax.Array:
+    """Flash-style online-softmax attention in pure jnp (lax.scan over kv
+    chunks).  Numerically equals ``mha_ref`` but with O(Tq·chunk) live memory
+    instead of O(Tq·Tk) — this is the model's default "xla" attention path
+    (CPU-lowerable for the dry-run, memory-safe at 32k prefill).
+    """
+    b, h, tq, dh = q.shape
+    hkv = k.shape[1]
+    if scale is None:
+        scale = dh ** -0.5
+    group = h // hkv
+    tk = k.shape[2]
+    if tk <= chunk:
+        return mha_ref(q, k, v, causal=causal, window=window, scale=scale)
+    n_chunks = -(-tk // chunk)
+    tk_pad = n_chunks * chunk
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, tk_pad - tk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, tk_pad - tk), (0, 0)))
+    kp = kp.reshape(b, hkv, n_chunks, chunk, dh)
+    vp = vp.reshape(b, hkv, n_chunks, chunk, dh)
+
+    qf = q.astype(jnp.float32)
+    qpos = jnp.arange(tq)[:, None] + (tk - tq)          # (tq, 1)
+
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        kc, vc, ci = inp                                # (b,hkv,chunk,dh) x2
+        kc = jnp.repeat(kc, group, axis=1).astype(jnp.float32)
+        vc = jnp.repeat(vc, group, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kc) * scale
+        kpos = ci * chunk + jnp.arange(chunk)[None, :]  # (1, chunk)
+        ok = kpos < tk
+        if causal:
+            ok = ok & (kpos <= qpos)
+        if window is not None:
+            ok = ok & (kpos > qpos - window)
+        s = jnp.where(ok[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(ok[None, None], jnp.exp(s - m_safe[..., None]), 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_new = l_prev * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vc)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, tq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, tq), jnp.float32)
+    a0 = jnp.zeros((b, h, tq, dh), jnp.float32)
+    kcs = jnp.moveaxis(kp, 2, 0)
+    vcs = jnp.moveaxis(vp, 2, 0)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kcs, vcs, jnp.arange(n_chunks)))
+    out = acc / jnp.where(l > 0, l, 1.0)[..., None]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ssm_scan — Mamba-1 selective scan oracle
+# ---------------------------------------------------------------------------
+def ssm_scan_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                 c: jax.Array, d: jax.Array,
+                 h0: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Selective state-space scan (Mamba-1 discretization).
+
+    x  (B,T,Dm)   input sequence
+    dt (B,T,Dm)   positive step sizes (already softplus'd)
+    a  (Dm,N)     state matrix (negative real), log-space NOT applied here
+    b  (B,T,N)    input projection
+    c  (B,T,N)    output projection
+    d  (Dm,)      skip connection
+    h0 (B,Dm,N)   optional initial state
+
+    h_t = exp(dt_t * a) * h_{t-1} + dt_t * b_t * x_t   (ZOH-ish, as in mamba)
+    y_t = (h_t @ c_t) + d * x_t
+    Returns (y (B,T,Dm), h_T (B,Dm,N)).
+    """
+    bsz, t, dm = x.shape
+    n = a.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, dm, n), dtype=jnp.float32)
+
+    # decay (B,T,Dm,N) and drive terms
+    da = jnp.exp(dt[..., None] * a[None, None])                   # (B,T,Dm,N)
+    db = dt[..., None] * b[:, :, None, :] * x[..., None]          # (B,T,Dm,N)
+
+    def step(h, inp):
+        da_t, db_t, c_t = inp
+        h = da_t * h + db_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    da_s = jnp.moveaxis(da, 1, 0)
+    db_s = jnp.moveaxis(db, 1, 0)
+    c_s = jnp.moveaxis(c, 1, 0).astype(jnp.float32)
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                          (da_s.astype(jnp.float32), db_s.astype(jnp.float32), c_s))
+    y = jnp.moveaxis(ys, 0, 1) + x * d[None, None, :]
+    return y.astype(x.dtype), hT

@@ -1,0 +1,4 @@
+from .mesh import available_devices, make_mesh, make_production_mesh
+from .specs import SHAPES, ShapeSpec, cell_supported, input_specs, rules_for
+
+__all__ = [k for k in dir() if not k.startswith("_")]

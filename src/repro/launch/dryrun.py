@@ -1,0 +1,204 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below runs with 512 host-platform placeholder devices -------
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax           # noqa: E402
+
+from ..configs import ARCH_IDS, get_config          # noqa: E402
+from ..models.sharding import use_mesh              # noqa: E402
+from ..serve.engine import make_prefill_step, make_serve_step  # noqa: E402
+from ..train.train_step import make_train_step      # noqa: E402
+from .hlo_analyzer import analyze                    # noqa: E402
+from .hlo_stats import roofline_terms                # noqa: E402
+from .mesh import make_production_mesh               # noqa: E402
+from .specs import SHAPES, cell_supported, input_specs, rules_for  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _cost_dict(cost) -> dict:
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    if not isinstance(cost, dict):
+        return {}
+    keep = {}
+    for k, v in cost.items():
+        if k in ("flops", "bytes accessed", "transcendentals") or \
+                k.startswith("bytes accessed"):
+            keep[k] = float(v)
+    return keep
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (train), 2·N·D (fwd only); MoE uses active N."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: 1 token per sequence
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             donate: bool = True, hlo_dir: Optional[str] = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind}
+
+    ok, reason = cell_supported(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(cfg, shape)
+    try:
+        with use_mesh(mesh, rules):
+            args = input_specs(cfg, shape)
+            if shape.kind == "train":
+                fn = make_train_step(cfg)
+                donate_argnums = (0,) if donate else ()
+            elif shape.kind == "prefill":
+                fn = make_prefill_step(cfg, cache_len=shape.seq_len)
+                donate_argnums = ()
+            else:
+                fn = make_serve_step(cfg)
+                donate_argnums = (2,) if donate else ()
+
+            jitted = jax.jit(fn, donate_argnums=donate_argnums)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = None
+            try:
+                mem = compiled.memory_analysis()
+            except Exception:
+                pass
+            cost = {}
+            try:
+                cost = _cost_dict(compiled.cost_analysis())
+            except Exception:
+                pass
+            hlo = compiled.as_text()
+            if hlo_dir:
+                import gzip
+                os.makedirs(hlo_dir, exist_ok=True)
+                with gzip.open(os.path.join(
+                        hlo_dir,
+                        f"{arch}__{shape_name}__{mesh_name}.hlo.gz"),
+                        "wt") as f:
+                    f.write(hlo)
+            ana = analyze(hlo)  # per-device totals with loop trip multipliers
+
+        chips = mesh.size
+        # analyzer totals are per-device over the partitioned module; the
+        # roofline formula takes globals, so multiply back by chip count.
+        flops_global = ana.flops * chips
+        hbm_global = ana.hbm_bytes * chips
+        coll_global = ana.collective_bytes * chips
+        mf = model_flops(cfg, shape)
+        rec.update(
+            status="ok",
+            chips=chips,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=_mem_dict(mem) if mem else {},
+            cost_analysis_body_once=cost,
+            hlo_analysis=ana.asdict(),
+            model_flops=mf,
+            hlo_flops=flops_global,
+            useful_flops_ratio=(mf / flops_global) if flops_global else None,
+            roofline=roofline_terms(flops_global, hbm_global, coll_global,
+                                    chips),
+        )
+    except Exception as e:  # a failure here is a bug in the system
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--save-hlo", action="store_true", default=True,
+                    help="save gzipped optimized HLO next to results")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells with existing result files")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                mesh_name = "pod2x16x16" if multi else "pod16x16"
+                path = os.path.join(
+                    args.out, f"{arch}__{shape}__{mesh_name}.json")
+                if os.path.exists(path) and not args.force:
+                    with open(path) as f:
+                        prev = json.load(f)
+                    print(f"[cached] {arch} {shape} {mesh_name}: "
+                          f"{prev.get('status')}")
+                    failures += prev.get("status") == "error"
+                    continue
+                rec = run_cell(
+                    arch, shape, multi,
+                    hlo_dir=os.path.join(args.out, "hlo")
+                    if args.save_hlo else None)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" compile={rec['compile_s']:.0f}s "
+                             f"dom={r['dominant']} "
+                             f"cmp={r['compute_s']*1e3:.2f}ms "
+                             f"mem={r['memory_s']*1e3:.2f}ms "
+                             f"col={r['collective_s']*1e3:.2f}ms")
+                elif status == "error":
+                    failures += 1
+                    extra = " " + rec["error"][:160]
+                elif status == "skipped":
+                    extra = " " + rec["reason"][:80]
+                print(f"[{status}] {arch} {shape} {mesh_name}{extra}",
+                      flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

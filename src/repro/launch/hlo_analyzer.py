@@ -1,0 +1,484 @@
+"""Structural analyzer for optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, which makes it
+useless for scan-over-layers programs (a 126-layer model reports 1-layer
+flops).  This analyzer parses the HLO module into computations, builds the
+call graph (while bodies annotated with known_trip_count, fusions, calls,
+reduce appliers), propagates trip-count multipliers from ENTRY, and attributes
+three quantities to every computation:
+
+  * flops             — from dot ops (2 x result_elems x contracted_elems)
+  * hbm bytes         — operand+result bytes of top-level (fusion-boundary)
+                        instructions; fusion internals excluded
+  * collective bytes  — operand bytes of all-gather / all-reduce /
+                        reduce-scatter / all-to-all / collective-permute
+
+Totals are Σ per-computation x trip-multiplier — i.e. true per-device,
+per-step costs for scanned/grad-accumulated programs.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_list(type_str: str) -> List[Tuple[str, List[int]]]:
+    """All array components in a (possibly tuple) type string."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype = m.group(1)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+        out.append((dtype, dims))
+    return out
+
+
+def _type_elems(type_str: str) -> int:
+    total = 0
+    for _, dims in _shape_list(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_list(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _first_dims(type_str: str) -> List[int]:
+    s = _shape_list(type_str)
+    return s[0][1] if s else []
+
+
+@dataclass
+class Instruction:
+    name: str
+    result_type: str
+    opcode: str
+    operands: List[str]
+    raw: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)  # instr name -> type
+
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*[^{]+\{")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^=]*?\)?)\s+([\w\-]+)\((.*)$")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+_COMMENT = re.compile(r"/\*.*?\*/")
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        line = _COMMENT.sub("", line)
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip()) if "{" in line else None
+            if m and ("->" in line):
+                cur = Computation(m.group(1))
+                if line.strip().startswith("ENTRY"):
+                    entry = cur.name
+                # parse header params: `name: type` pairs
+                hdr = line[line.find("(") + 1: line.rfind(")")]
+                for pm in re.finditer(r"%?([\w\.\-]+)\s*:\s*([^,()]+(?:\([^)]*\))?)",
+                                      hdr):
+                    cur.types[pm.group(1)] = pm.group(2)
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rtype, opcode, rest = m.groups()
+        # operand names: %tokens up to the closing paren of the call
+        depth, end = 1, 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        call_args = rest[:end]
+        operands = re.findall(r"%([\w\.\-]+)", call_args)
+        instr = Instruction(name, rtype.strip(), opcode, operands, line)
+        cur.instructions.append(instr)
+        cur.types[name] = rtype.strip()
+    return comps, entry
+
+
+def _call_edges(comp: Computation) -> List[Tuple[str, float, str]]:
+    """(callee, multiplier, kind) edges out of this computation."""
+    edges = []
+    for ins in comp.instructions:
+        raw = ins.raw
+        if ins.opcode == "while":
+            trip = 1.0
+            tm = _TRIP.search(raw)
+            if tm:
+                trip = float(tm.group(1))
+            for key in ("body", "condition"):
+                m = re.search(key + r"=%?([\w\.\-]+)", raw)
+                if m:
+                    edges.append((m.group(1), trip, "while"))
+        else:
+            for key in ("calls", "to_apply"):
+                m = re.search(key + r"=%?([\w\.\-]+)", raw)
+                if m:
+                    edges.append((m.group(1), 1.0, ins.opcode))
+            # conditionals: branch_computations={%a, %b}
+            m = re.search(r"branch_computations=\{([^}]*)\}", raw)
+            if m:
+                for b in re.findall(r"%([\w\.\-]+)", m.group(1)):
+                    edges.append((b, 1.0, "conditional"))
+            for key in ("true_computation", "false_computation"):
+                m = re.search(key + r"=%?([\w\.\-]+)", raw)
+                if m:
+                    edges.append((m.group(1), 1.0, "conditional"))
+    return edges
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "tuple", "get-tuple-element", "bitcast", "constant",
+    "after-all", "partition-id", "replica-id", "iota",
+    # control-flow callers: their bodies are counted separately (with trip
+    # multipliers); counting the caller's tuple operands would double-count
+    "while", "call", "conditional",
+    # loop-carried buffer copies are elided by XLA buffer assignment
+    # (in-place while-loop state); counting them would dominate scan-heavy
+    # programs with traffic that never happens on hardware
+    "copy", "copy-start", "copy-done",
+}
+# ops whose callee computations are *inlined* (not real HBM-level comps)
+_INLINE_CALLERS = {"fusion", "reduce", "map", "scatter", "select-and-scatter",
+                   "sort", "reduce-window", "all-reduce", "reduce-scatter",
+                   "custom-call"}
+
+
+def _dot_flops(ins: Instruction, comp: Computation) -> float:
+    result_elems = 1
+    for d in _first_dims(ins.result_type):
+        result_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.raw)
+    if not m or not ins.operands:
+        return 2.0 * result_elems  # degenerate
+    lhs_type = comp.types.get(ins.operands[0], "")
+    lhs_dims = _first_dims(lhs_type)
+    contracted = 1
+    if m.group(1):
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contracted *= lhs_dims[i]
+    return 2.0 * result_elems * contracted
+
+
+def _conv_flops(ins: Instruction, comp: Computation) -> float:
+    # rough: 2 x result_elems x (kernel spatial x in_features)
+    result_elems = 1
+    for d in _first_dims(ins.result_type):
+        result_elems *= d
+    if len(ins.operands) >= 2:
+        k_dims = _first_dims(comp.types.get(ins.operands[1], ""))
+        k = 1
+        for d in k_dims[:-1]:
+            k *= d
+        return 2.0 * result_elems * max(k, 1)
+    return 2.0 * result_elems
+
+
+def _operand_stored_bytes(name: str, comp: Computation,
+                          trivial: Dict[str, str]) -> float:
+    """Bytes of an operand at its STORED precision: looks through trivial
+    convert-fusions to the original buffer."""
+    seen = 0
+    while name in trivial and seen < 4:
+        name = trivial[name]
+        seen += 1
+    return _type_bytes(comp.types.get(name, ""))
+
+
+def _instr_hbm_bytes(ins: Instruction, comp: Computation,
+                     trivial: Dict[str, str] | None = None) -> float:
+    """HBM traffic of one top-level instruction.
+
+    Slicing/indexing ops move only the slice, not the buffer they index:
+      dynamic-slice / slice / gather     -> result (+ negligible indices)
+      dynamic-update-slice               -> 2 x update bytes (read-mod-write)
+      scatter                            -> 2 x updates bytes
+    Everything else: operands + result.
+    """
+    op = ins.opcode
+    rbytes = _type_bytes(ins.result_type)
+    if op in _ELEMENTWISE:
+        # perfect producer-fusion model: an elementwise op's reads are
+        # attributed to its producers' writes (TPU fuses these chains; the
+        # CPU-lowered HLO leaves them top-level, which would double-count)
+        return rbytes
+    if op in ("dynamic-slice", "slice", "gather"):
+        return 2.0 * rbytes  # read slice + write result
+    if op == "dynamic-update-slice":
+        upd = (_type_bytes(comp.types.get(ins.operands[1], ""))
+               if len(ins.operands) > 1 else rbytes)
+        return 2.0 * upd
+    if op == "scatter":
+        upd = (_type_bytes(comp.types.get(ins.operands[2], ""))
+               if len(ins.operands) > 2 else rbytes)
+        return 2.0 * upd
+    if trivial is not None and op in ("dot", "convolution"):
+        # MXU reads operands at their stored precision (see _TRIVIAL_OPS)
+        return rbytes + sum(_operand_stored_bytes(o, comp, trivial)
+                            for o in ins.operands)
+    return rbytes + sum(_type_bytes(comp.types.get(o, ""))
+                        for o in ins.operands)
+
+
+_SLICING = {"dynamic-slice", "slice", "gather"}
+
+# fusions whose bodies contain only these ops are dtype/layout plumbing; on
+# the TPU target they fuse into their consumer (the MXU reads the stored
+# precision directly), so they carry no HBM traffic of their own.  The CPU
+# backend materializes bf16->f32 copies of every weight before its f32-only
+# matmuls — a lowering artifact the roofline model must not charge.
+_TRIVIAL_OPS = {"parameter", "convert", "bitcast", "broadcast", "constant",
+                "get-tuple-element", "tuple", "copy", "reshape", "transpose"}
+
+
+def _trivial_fusions(comp: Computation,
+                     comps: Dict[str, Computation]) -> Dict[str, str]:
+    """fusion-instruction name -> its first operand, for fusions whose body
+    is pure dtype/layout plumbing."""
+    out = {}
+    for ins in comp.instructions:
+        if ins.opcode != "fusion":
+            continue
+        m = re.search(r"calls=%?([\w\.\-]+)", ins.raw)
+        body = comps.get(m.group(1)) if m else None
+        if body and all(bi.opcode in _TRIVIAL_OPS
+                        for bi in body.instructions):
+            out[ins.name] = ins.operands[0] if ins.operands else ""
+    return out
+
+_ELEMENTWISE = {
+    "convert", "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "select", "compare", "clamp", "negate", "exponential", "tanh", "cosine",
+    "sine", "sqrt", "rsqrt", "is-finite", "and", "or", "not", "xor", "power",
+    "abs", "floor", "ceil", "round-nearest-afz", "round-nearest-even", "log",
+    "log-plus-one", "exponential-minus-one", "sign", "broadcast", "remainder",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic", "atan2",
+    "expm1", "logistic", "cbrt", "erf", "reverse", "real", "imag",
+}
+
+
+def _fusion_hbm_bytes(ins: Instruction, comp: Computation,
+                      comps: Dict[str, "Computation"]) -> float:
+    """Fusion traffic with slice-aware parameter accounting: a fusion
+    parameter consumed ONLY by slicing ops inside the body (the scan-over-
+    layers weight-slice pattern) contributes the slice bytes, not the full
+    buffer."""
+    rbytes = _type_bytes(ins.result_type)
+    m = re.search(r"calls=%?([\w\.\-]+)", ins.raw)
+    body = comps.get(m.group(1)) if m else None
+    if body is None:
+        return rbytes + sum(_type_bytes(comp.types.get(o, ""))
+                            for o in ins.operands)
+    # body parameter name by index
+    params: Dict[int, str] = {}
+    for bi in body.instructions:
+        if bi.opcode == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", bi.raw)
+            if pm:
+                params[int(pm.group(1))] = bi.name
+    passthrough = {"bitcast", "reshape", "transpose", "copy"}
+    # in-place accumulation: a fusion containing a dynamic-update-slice whose
+    # result is the full fusion output returns the whole buffer but only
+    # writes the update slice (XLA aliases the buffer); the buffer-typed
+    # operand is the in-place destination.  (The DUS may be followed by
+    # bitcasts/converts, so scan the body rather than only the root.)
+    # element-count comparison: CPU lowering may round-trip the buffer
+    # through f32 inside the fusion, so byte sizes differ across dtypes
+    dus = None
+    for bi in body.instructions:
+        if bi.opcode == "dynamic-update-slice" and \
+                _type_elems(bi.result_type) == _type_elems(ins.result_type):
+            dus = bi
+    dus_inplace = dus is not None
+    if dus_inplace:
+        upd = (_type_bytes(body.types.get(dus.operands[1], ""))
+               if len(dus.operands) > 1 else 0)
+        rbytes = 2.0 * upd
+    total = rbytes
+    result_elems = _type_elems(ins.result_type)
+    for idx, op_name in enumerate(ins.operands):
+        full = _type_bytes(comp.types.get(op_name, ""))
+        if dus_inplace and _type_elems(
+                comp.types.get(op_name, "")) == result_elems:
+            continue  # aliased in-place destination buffer (any dtype)
+        pname = params.get(idx)
+        if pname is None:
+            total += full
+            continue
+        # transitive: param -> (bitcast/reshape)* -> slicing ops only?
+        frontier = [pname]
+        sliced_bytes = 0.0
+        only_sliced = True
+        hops = 0
+        while frontier and only_sliced and hops < 8:
+            hops += 1
+            nxt = []
+            for fname in frontier:
+                consumers = [bi for bi in body.instructions
+                             if fname in bi.operands
+                             and bi.opcode != "parameter"]
+                for c in consumers:
+                    if c.opcode in _SLICING:
+                        sliced_bytes += _type_bytes(c.result_type)
+                    elif c.opcode in passthrough:
+                        nxt.append(c.name)
+                    else:
+                        only_sliced = False
+            frontier = nxt
+        if only_sliced and sliced_bytes > 0:
+            total += sliced_bytes
+        else:
+            total += full
+    return total
+
+
+@dataclass
+class HloAnalysis:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+    per_comp: Dict[str, dict] = field(default_factory=dict)
+    trip_multipliers: Dict[str, float] = field(default_factory=dict)
+
+    def asdict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_by_kind": dict(self.collective_by_kind),
+            "collective_counts": dict(self.collective_counts),
+        }
+
+
+def analyze(text: str) -> HloAnalysis:
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        return HloAnalysis()
+
+    # ---- propagate multipliers through the call DAG -------------------------
+    inlined: set = set()
+    edges: Dict[str, List[Tuple[str, float, str]]] = {
+        c: _call_edges(comp) for c, comp in comps.items()}
+    for cname, es in edges.items():
+        for callee, m, kind in es:
+            if kind in _INLINE_CALLERS and callee in comps:
+                inlined.add(callee)
+    # Kahn-style: callers before callees (HLO computations form a DAG)
+    indeg = defaultdict(int)
+    for cname, es in edges.items():
+        for callee, _, _ in es:
+            if callee in comps:
+                indeg[callee] += 1
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    queue = [c for c in comps if indeg[c] == 0]
+    seen = set()
+    while queue:
+        c = queue.pop()
+        if c in seen:
+            continue
+        seen.add(c)
+        for callee, m, kind in edges.get(c, ()):
+            if callee not in comps:
+                continue
+            mult[callee] += mult[c] * m
+            indeg[callee] -= 1
+            if indeg[callee] <= 0:
+                queue.append(callee)
+
+    out = HloAnalysis(trip_multipliers=dict(mult))
+    for cname, comp in comps.items():
+        cm = mult.get(cname, 0.0)
+        if cm == 0.0:
+            continue
+        flops = 0.0
+        hbm = 0.0
+        coll = 0.0
+        coll_kind: Dict[str, float] = {}
+        coll_cnt: Dict[str, float] = {}
+        trivial = _trivial_fusions(comp, comps)
+        for ins in comp.instructions:
+            if ins.opcode == "dot":
+                flops += _dot_flops(ins, comp)
+            elif ins.opcode == "convolution":
+                flops += _conv_flops(ins, comp)
+            base = next((c for c in _COLLECTIVES
+                         if ins.opcode.startswith(c)), None)
+            if base and not ins.opcode.endswith("-done"):
+                # collectives move the STORED precision on the real target
+                # (look through CPU-inserted bf16->f32 convert fusions)
+                nbytes = sum(_operand_stored_bytes(o, comp, trivial)
+                             for o in ins.operands)
+                if nbytes == 0:
+                    nbytes = _type_bytes(ins.result_type)
+                coll += nbytes
+                coll_kind[base] = coll_kind.get(base, 0.0) + nbytes
+                coll_cnt[base] = coll_cnt.get(base, 0.0) + 1
+            if cname not in inlined and ins.opcode not in _SKIP_BYTES_OPS:
+                if ins.name in trivial:
+                    pass  # dtype/layout plumbing: fuses into consumers on TPU
+                elif ins.opcode == "fusion":
+                    hbm += _fusion_hbm_bytes(ins, comp, comps)
+                else:
+                    hbm += _instr_hbm_bytes(ins, comp, trivial)
+        out.per_comp[cname] = {
+            "mult": cm, "flops": flops, "hbm_bytes": hbm,
+            "collective_bytes": coll,
+        }
+        out.flops += cm * flops
+        out.hbm_bytes += cm * hbm
+        out.collective_bytes += cm * coll
+        for k, v in coll_kind.items():
+            out.collective_by_kind[k] = out.collective_by_kind.get(k, 0.0) + cm * v
+        for k, v in coll_cnt.items():
+            out.collective_counts[k] = out.collective_counts.get(k, 0.0) + cm * v
+    return out

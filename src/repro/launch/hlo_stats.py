@@ -1,0 +1,117 @@
+"""Post-SPMD HLO analysis: collective traffic + roofline terms.
+
+``collective_bytes`` builds a name->shape table from the optimized HLO text
+and sums the operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction (the dry-run's substitute for a
+real interconnect profile).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "c128": 16, "s4": 1, "u4": 1,
+}
+
+# `%name = f32[8,16]{1,0} op-name(...)`  (also matches tuple-free simple defs)
+_DEF_RE = re.compile(
+    r"%?([\w\.\-]+)\s*=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nbytes
+
+
+@dataclass
+class CollectiveStats:
+    total_bytes: int = 0
+    by_kind: Dict[str, int] = field(default_factory=dict)
+    counts: Dict[str, int] = field(default_factory=dict)
+
+    def asdict(self) -> dict:
+        return {"total_bytes": self.total_bytes, "by_kind": dict(self.by_kind),
+                "counts": dict(self.counts)}
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of collective ops in optimized HLO text.
+
+    Loop bodies (while/scan) are counted once — multiply externally by trip
+    count if desired; for roofline we report the static program traffic, and
+    scan-over-layers collectives appear inside the loop body (noted in
+    EXPERIMENTS.md).
+    """
+    # name -> bytes of each instruction's result
+    sizes: Dict[str, int] = {}
+    for m in _DEF_RE.finditer(hlo_text):
+        sizes[m.group(1)] = _shape_bytes(m.group(2), m.group(3))
+
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?([\w\.\-]+)\s*=\s*.*?\s((?:all|reduce|collective)"
+                     r"[a-z\-]*)\(", stripped)
+        if not m:
+            continue
+        kind = m.group(2)
+        if kind not in _COLLECTIVES and not any(
+                kind.startswith(c) for c in _COLLECTIVES):
+            continue
+        # operands: %name tokens inside the call parens
+        call = stripped[stripped.index("(") :]
+        ops = re.findall(r"%([\w\.\-]+)", call)
+        nbytes = sum(sizes.get(o, 0) for o in ops)
+        if nbytes == 0:
+            # fall back to the result size (covers fused/renamed operands)
+            nbytes = sizes.get(m.group(1), 0)
+        base = next(c for c in _COLLECTIVES if kind.startswith(c))
+        stats.total_bytes += nbytes
+        stats.by_kind[base] = stats.by_kind.get(base, 0) + nbytes
+        stats.counts[base] = stats.counts.get(base, 0) + 1
+    return stats
+
+
+def while_trip_counts(hlo_text: str) -> list:
+    """Best-effort extraction of while-loop trip counts (scan over layers /
+    grad-accum microbatches) from known_trip_count annotations."""
+    return [int(x) for x in re.findall(
+        r'known_trip_count=\{?"?n"?[:=](\d+)', hlo_text)]
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (TPU v5e constants from the assignment)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   chips: int) -> dict:
+    compute_s = flops / (chips * PEAK_FLOPS) if flops else 0.0
+    memory_s = hbm_bytes / (chips * HBM_BW) if hbm_bytes else 0.0
+    collective_s = coll_bytes / (chips * ICI_BW) if coll_bytes else 0.0
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = max(bound, 1e-30)
+    terms.update({
+        "dominant": dominant,
+        "bound_s": bound,
+        "roofline_fraction_compute": compute_s / total,
+    })
+    return terms

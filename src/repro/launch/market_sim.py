@@ -1,0 +1,100 @@
+"""Market simulation launcher (the paper's §VII experiments from the CLI).
+
+  python -m repro.launch.market_sim --scenario synthetic --policy all
+  python -m repro.launch.market_sim --scenario trace --machines 200
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import time
+
+from ..core import (
+    MarketSimulator,
+    ScenarioConfig,
+    SimConfig,
+    dynamic_vm_table,
+    make_policy,
+    spot_vm_table,
+    synthetic_scenario,
+    to_csv,
+)
+from ..market import TraceConfig, generate_trace, simulate_trace
+
+POLICY_SET = ["first-fit", "best-fit", "worst-fit", "hlem-vmp",
+              "hlem-vmp-adjusted"]
+
+
+def run_synthetic(policy_name: str, seed: int, until: float,
+                  selector: str = "list_order", alpha: float = -0.5) -> dict:
+    hosts, vms = synthetic_scenario(ScenarioConfig(seed=seed))
+    kwargs = {}
+    if policy_name == "hlem-vmp-adjusted":
+        kwargs["alpha"] = alpha
+    policy = make_policy(policy_name, **kwargs)
+    sim = MarketSimulator(policy=policy, config=SimConfig(
+        record_timeline=False, interruption_selector=selector))
+    for cap in hosts:
+        sim.add_host(cap)
+    for v in vms:
+        sim.submit(copy.deepcopy(v))
+    t0 = time.time()
+    m = sim.run(until=until)
+    stats = m.spot_stats(sim.vms)
+    stats.update(policy=policy_name, wall_s=round(time.time() - t0, 1),
+                 allocations=m.allocations, resubmissions=m.resubmissions)
+    return stats
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", choices=["synthetic", "trace"],
+                    default="synthetic")
+    ap.add_argument("--policy", default="all",
+                    help="policy name or 'all'")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--until", type=float, default=3000.0)
+    ap.add_argument("--selector", default="list_order",
+                    choices=["list_order", "best_fit_remaining",
+                             "max_progress"])
+    ap.add_argument("--alpha", type=float, default=-0.5)
+    ap.add_argument("--machines", type=int, default=200)
+    ap.add_argument("--spot", type=int, default=1000)
+    ap.add_argument("--days", type=float, default=0.25)
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.scenario == "synthetic":
+        policies = POLICY_SET if args.policy == "all" else [args.policy]
+        rows = [run_synthetic(p, args.seed, args.until, args.selector,
+                              args.alpha) for p in policies]
+        if args.json:
+            print(json.dumps(rows, indent=1))
+        else:
+            for r in rows:
+                print(f"{r['policy']:20s} interruptions={r['interruptions']:5d} "
+                      f"avg={r['avg_interruption_time']:7.2f}s "
+                      f"max={r['max_interruption_time']:7.2f}s "
+                      f"finished={r['spot_finished']:4d} "
+                      f"terminated={r['spot_terminated']:4d} "
+                      f"[{r['wall_s']}s]")
+        return 0
+
+    # trace scenario
+    tcfg = TraceConfig(seed=args.seed, n_machines=args.machines,
+                       sim_days=args.days, n_spot=args.spot)
+    tr = generate_trace(tcfg)
+    policy = make_policy(
+        args.policy if args.policy != "all" else "hlem-vmp-adjusted")
+    t0 = time.time()
+    sim, metrics = simulate_trace(tr, policy=policy, cfg=tcfg)
+    stats = metrics.spot_stats(sim.vms)
+    stats.update(machines=args.machines, n_vms=len(sim.vms),
+                 wall_s=round(time.time() - t0, 1))
+    print(json.dumps(stats, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

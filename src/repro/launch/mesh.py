@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run must set XLA_FLAGS
+before the first jax initialization.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: (16, 16) data x model = 256 chips.
+    Multi-pod: (2, 16, 16) pod x data x model = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh for tests / elastic rescale (e.g. (4,2) on 8 CPU
+    devices with --xla_force_host_platform_device_count=8)."""
+    return jax.make_mesh(shape, axes)
+
+
+def available_devices() -> int:
+    return len(jax.devices())

@@ -1,0 +1,92 @@
+"""Serving launcher: batched decode with spot-interruption-aware request
+scheduling (``python -m repro.launch.serve --arch <id> --smoke``)."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, get_smoke_config
+from ..models.model import init_params
+from ..serve import (
+    Request,
+    SpotServingScheduler,
+    make_prefill_step,
+    make_serve_step,
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-tokens", type=int, default=16)
+    ap.add_argument("--interrupt-at", type=int, default=0,
+                    help="simulate a spot interruption after N decode steps")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    cache_len = args.prompt_len + args.gen_tokens
+
+    prefill = jax.jit(make_prefill_step(cfg, cache_len))
+    step = jax.jit(make_serve_step(cfg))
+
+    sched = SpotServingScheduler(batch_size=args.batch, hibernate=True)
+    for i in range(args.requests):
+        sched.add(Request(i, args.prompt_len, args.gen_tokens))
+
+    rng = np.random.default_rng(args.seed)
+    t0 = time.time()
+    decode_steps = 0
+    while len(sched.done) < args.requests:
+        batch_reqs = sched.fill_batch()
+        if not batch_reqs:
+            break
+        b = len(batch_reqs)
+        if cfg.modality == "text":
+            prompts = jnp.asarray(
+                rng.integers(0, cfg.vocab, (b, args.prompt_len)), jnp.int32)
+        else:
+            prompts = jnp.asarray(
+                rng.normal(0, 1, (b, args.prompt_len, cfg.d_model)),
+                jnp.float32)
+        logits, state = prefill(params, prompts)
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+        for t in range(args.gen_tokens - 1):
+            if cfg.modality != "text":
+                tok_in = jnp.zeros((b, 1, cfg.d_model), jnp.float32)
+            else:
+                tok_in = tok
+            lg, state = step(params, tok_in, state)
+            tok = jnp.argmax(lg[:, -1, :], axis=-1)[:, None]
+            decode_steps += 1
+            if args.interrupt_at and decode_steps == args.interrupt_at:
+                print(f"[market] interruption after {decode_steps} decode "
+                      f"steps — hibernating {b} in-flight requests")
+                sched.interrupt()
+                break
+        else:
+            sched.step(args.gen_tokens)
+            continue
+        # interrupted: resume on next fill_batch (hibernated first)
+        args.interrupt_at = 0
+
+    dt = time.time() - t0
+    st = sched.stats()
+    print(f"served {st['done']}/{args.requests} requests in {dt:.1f}s "
+          f"({decode_steps} decode steps, {st['interruptions']} request "
+          f"interruptions)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,122 @@
+"""Assigned input shapes and per-cell ShapeDtypeStruct builders.
+
+Every (architecture × shape) cell defines which step function is lowered:
+  train_4k    -> train_step (next-token CE + optimizer update)
+  prefill_32k -> prefill_step (build the KV/SSM cache for the prompt)
+  decode_32k  -> serve_step (1 new token, cache of seq_len)
+  long_500k   -> serve_step (1 new token, 512k context) — sub-quadratic archs
+                 only (SSM / sliding-window hybrid); skipped otherwise.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ArchConfig
+from ..models.model import decode_state_specs, init_decode_state
+from ..models.sharding import attach
+from ..train.train_step import init_train_state, train_state_specs
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def cell_supported(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Skip rules (recorded in EXPERIMENTS.md §Dry-run)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: 512k dense KV decode is the "
+                       "quadratic regime the shape excludes (DESIGN.md)")
+    return True, ""
+
+
+def _token_struct(cfg: ArchConfig, batch: int, seq: int):
+    """ShapeDtypeStruct for model input: int tokens (text) or precomputed
+    frontend embeddings (vlm/audio stub)."""
+    if cfg.modality == "text":
+        return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    return jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.bfloat16)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """(shape_tree, logical_spec_tree) for the data batch of a train cell."""
+    shapes = {
+        "tokens": _token_struct(cfg, shape.global_batch, shape.seq_len),
+        "labels": jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32),
+    }
+    specs = {
+        "tokens": (("batch", "seq") if cfg.modality == "text"
+                   else ("batch", "seq", "embed")),
+        "labels": ("batch", "seq"),
+    }
+    return shapes, specs
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[Any, ...]:
+    """Sharded ShapeDtypeStruct stand-ins for every input of the lowered step
+    (requires an active mesh via sharding.use_mesh)."""
+    if shape.kind == "train":
+        state_shapes = jax.eval_shape(
+            lambda: init_train_state(cfg, jax.random.PRNGKey(0)))
+        state = attach(state_shapes, train_state_specs(cfg))
+        b_shapes, b_specs = batch_specs(cfg, shape)
+        batch = attach(b_shapes, b_specs)
+        return (state, batch)
+
+    if shape.kind == "prefill":
+        params_shapes = jax.eval_shape(
+            lambda: __import__("repro.models.model", fromlist=["init_params"]
+                               ).init_params(cfg, jax.random.PRNGKey(0)))
+        from ..models.model import param_specs
+        params = attach(params_shapes, param_specs(cfg))
+        tokens = attach(
+            _token_struct(cfg, shape.global_batch, shape.seq_len),
+            (("batch", "seq") if cfg.modality == "text"
+             else ("batch", "seq", "embed")))
+        return (params, tokens)
+
+    # decode
+    from ..models.model import init_params, param_specs
+    params_shapes = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    params = attach(params_shapes, param_specs(cfg))
+    token = attach(
+        _token_struct(cfg, shape.global_batch, 1),
+        (("batch", "seq") if cfg.modality == "text"
+         else ("batch", "seq", "embed")))
+    st_shapes = jax.eval_shape(
+        lambda: init_decode_state(cfg, shape.global_batch, shape.seq_len))
+    state = attach(st_shapes, decode_state_specs(cfg))
+    return (params, token, state)
+
+
+def rules_for(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Per-cell sharding-rule overrides."""
+    rules: Dict[str, Any] = {}
+    if cfg.fsdp_over_pod:
+        rules["fsdp"] = ("pod", "data")
+    if cfg.seq_parallel and shape.kind in ("train", "prefill"):
+        rules["res_seq"] = "model"
+    if shape.kind == "decode" and cfg.has_attention:
+        # flash-decoding-style cache layout: KV heads (often < model width)
+        # replicate; the cache SEQ dim shards over "model" instead, so each
+        # chip scans 1/16th of the context and GSPMD combines the softmax.
+        rules["kv_seq"] = "model"
+        rules["kv_heads"] = None
+    return rules

@@ -1,0 +1,31 @@
+"""repro.market — scenario layers above the core simulator.
+
+* ``trace``       — Google-Cluster-Trace-style machine/task event generation,
+                    CSV reading, and trace-driven simulation (paper §VII-C/D).
+* ``advisor``     — synthetic AWS Spot-Instance-Advisor dataset (§VII-F).
+* ``correlation`` — Theil's U / correlation ratio / Pearson association
+                    measures for mixed categorical-numeric data (§VII-F).
+"""
+from .advisor import generate_advisor_dataset
+from .pricing import PriceModel, cost_stats
+from .price_process import (
+    AuctionPrice,
+    SmoothedPrice,
+    regime_comparison,
+    simulate_price_series,
+)
+from .correlation import (
+    association_matrix,
+    correlation_ratio,
+    pearson,
+    theils_u,
+)
+from .trace import (
+    TraceConfig,
+    generate_trace,
+    load_trace,
+    simulate_trace,
+    write_trace_csv,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

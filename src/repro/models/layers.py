@@ -1,0 +1,423 @@
+"""Model building blocks: RMSNorm, RoPE, GQA attention (train + decode),
+gated MLP, capacity-based MoE (gather/scatter dispatch), Mamba-1 block, and
+the Hymba parallel attn+SSM block.
+
+Every init_* returns (params, specs): ``specs`` is a matching pytree of
+logical-axis tuples consumed by sharding.tree_shardings — this lets the
+dry-run construct in_shardings without materializing any parameter.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .config import ArchConfig
+from .sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _init(key, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * w).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, hd), positions (S,) -> rotated x."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # (S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA) — training/prefill + single-token decode
+# ---------------------------------------------------------------------------
+def init_attention(cfg: ArchConfig, key) -> Tuple[Params, Params]:
+    d, hq, hkv = cfg.d_model, cfg.n_heads * cfg.hd, cfg.n_kv_heads * cfg.hd
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    s = d ** -0.5
+    params = {
+        "wq": _init(ks[0], (d, hq), s, dt),
+        "wk": _init(ks[1], (d, hkv), s, dt),
+        "wv": _init(ks[2], (d, hkv), s, dt),
+        "wo": _init(ks[3], (hq, d), (hq) ** -0.5, dt),
+    }
+    specs = {
+        "wq": ("fsdp", "heads"),
+        "wk": ("fsdp", "kv_heads"),
+        "wv": ("fsdp", "kv_heads"),
+        "wo": ("heads", "fsdp"),
+    }
+    return params, specs
+
+
+def attention_fwd(cfg: ArchConfig, p: Params, x: jax.Array, pos0: int = 0,
+                  impl: str = "xla") -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full-sequence attention. Returns (out (B,S,d), (k, v) for caching)."""
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = constrain(x @ p["wq"], "batch", "seq", "heads")
+    k = constrain(x @ p["wk"], "batch", "seq", "kv_heads")
+    v = constrain(x @ p["wv"], "batch", "seq", "kv_heads")
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    positions = pos0 + jnp.arange(s)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if impl == "xla":
+        from ..kernels.ref import mha_chunked_ref
+        o = mha_chunked_ref(q, k, v, causal=True, window=cfg.sliding_window,
+                            chunk=cfg.attention_chunk)
+    else:
+        o = ops.attention(q, k, v, causal=True, window=cfg.sliding_window,
+                          impl=impl)
+    o = constrain(o, "batch", "heads", "seq", "head_dim")
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    out = constrain(o @ p["wo"], "batch", "res_seq", "embed")
+    return out, (k, v)
+
+
+def attention_decode(cfg: ArchConfig, p: Params, x: jax.Array,
+                     cache: Tuple[jax.Array, jax.Array], pos: jax.Array,
+                     ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One-token decode. x (B,1,d); cache k/v (B,Hkv,T,hd); pos scalar —
+    the index at which the new token is written.
+
+    For sliding-window configs the cache is a ring buffer of length W; slot
+    = pos % W and masking uses true positions reconstructed from the ring.
+    """
+    b, _, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    kc, vc = cache
+    t_cache = kc.shape[2]
+    ring = cfg.sliding_window is not None and t_cache == cfg.sliding_window
+
+    q = (x @ p["wq"]).reshape(b, 1, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(b, 1, hkv, hd).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"]).reshape(b, 1, hkv, hd).transpose(0, 2, 1, 3)
+    posv = pos[None] if pos.ndim == 0 else pos
+    q = rope(q, posv, cfg.rope_theta)
+    k = rope(k, posv, cfg.rope_theta)
+
+    slot = jnp.where(ring, pos % t_cache, pos)
+    kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, slot, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, slot, 0))
+    kc = constrain(kc, "batch", "kv_heads", "kv_seq", None)
+    vc = constrain(vc, "batch", "kv_heads", "kv_seq", None)
+
+    # grouped-query attention WITHOUT materializing a head-replicated cache:
+    # fold the query-head group G into the query tensor and einsum against
+    # the (B, Hkv, T, hd) cache directly (logits accumulate in f32 on the
+    # MXU via preferred_element_type; the cache stays bf16 in HBM).
+    group = h // hkv
+    qg = q.reshape(b, hkv, group, hd)                       # (B,Hkv,G,hd)
+    s = jnp.einsum("bkgd,bktd->bkgt", qg, kc,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    idx = jnp.arange(t_cache)
+    if ring:
+        # slot i holds position: pos - ((slot - i) mod W)
+        kpos = pos - ((slot - idx) % t_cache)
+    else:
+        kpos = idx
+    ok = (kpos <= pos) & (kpos >= 0)
+    if cfg.sliding_window is not None:
+        ok = ok & (kpos > pos - cfg.sliding_window)
+    s = jnp.where(ok[None, None, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1).astype(vc.dtype)        # (B,Hkv,G,T)
+    o = jnp.einsum("bkgt,bktd->bkgd", pr, vc,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, h, 1, hd).astype(x.dtype)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, h * hd)
+    return constrain(o @ p["wo"], "batch", "seq", "embed"), (kc, vc)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+def init_mlp(cfg: ArchConfig, key) -> Tuple[Params, Params]:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = _dtype(cfg)
+    if cfg.mlp == "gated_silu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        params = {
+            "w_gate": _init(k1, (d, f), d ** -0.5, dt),
+            "w_up": _init(k2, (d, f), d ** -0.5, dt),
+            "w_down": _init(k3, (f, d), f ** -0.5, dt),
+        }
+        specs = {"w_gate": ("fsdp", "ff"), "w_up": ("fsdp", "ff"),
+                 "w_down": ("ff", "fsdp")}
+    else:  # gelu
+        k1, k2 = jax.random.split(key, 2)
+        params = {
+            "w_in": _init(k1, (d, f), d ** -0.5, dt),
+            "w_out": _init(k2, (f, d), f ** -0.5, dt),
+        }
+        specs = {"w_in": ("fsdp", "ff"), "w_out": ("ff", "fsdp")}
+    return params, specs
+
+
+def mlp_fwd(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.mlp == "gated_silu":
+        g = constrain(x @ p["w_gate"], "batch", "seq", "ff")
+        u = constrain(x @ p["w_up"], "batch", "seq", "ff")
+        return constrain((jax.nn.silu(g) * u) @ p["w_down"],
+                         "batch", "res_seq", "embed")
+    h = constrain(x @ p["w_in"], "batch", "seq", "ff")
+    return constrain(jax.nn.gelu(h) @ p["w_out"], "batch", "res_seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# MoE — top-k routing with per-expert capacity, gather/scatter dispatch.
+# ---------------------------------------------------------------------------
+# No (tokens × experts × capacity) one-hot and no dispatch einsum: token slots
+# are materialized with argsort-derived positions and moved with gather /
+# scatter ops (O(1) FLOPs), so HLO compute stays ≈ the useful expert FFN
+# FLOPs — this is what makes the 384-expert kimi-k2 config tractable.
+def init_moe(cfg: ArchConfig, key) -> Tuple[Params, Params]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = _dtype(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "router": _init(k1, (d, e), d ** -0.5, jnp.float32),
+        "w_gate": _init(k2, (e, d, f), d ** -0.5, dt),
+        "w_up": _init(k3, (e, d, f), d ** -0.5, dt),
+        "w_down": _init(k4, (e, f, d), f ** -0.5, dt),
+    }
+    specs = {
+        "router": ("embed", "experts"),
+        "w_gate": ("experts", "fsdp", "expert_ff"),
+        "w_up": ("experts", "fsdp", "expert_ff"),
+        "w_down": ("experts", "expert_ff", "fsdp"),
+    }
+    return params, specs
+
+
+def _moe_route(cfg: ArchConfig, gate: jax.Array, eidx: jax.Array, cap: int,
+               g: int):
+    """Per-group slot assignment (vmapped over groups; small int ops only).
+    Returns (table (E,cap) slot->token id w/ sentinel g, gate_slot (E,cap))."""
+    e, k = cfg.n_experts, cfg.top_k
+    flat_e = eidx.reshape(-1)                                  # (g*K,)
+    tok_id = jnp.repeat(jnp.arange(g), k)                      # (g*K,)
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    order = jnp.argsort(flat_e, stable=True)                   # (g*K,)
+    rank = jnp.zeros((g * k,), jnp.int32).at[order].set(
+        jnp.arange(g * k, dtype=jnp.int32))
+    pos = rank - starts[flat_e]                                # position in expert
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)        # overflow bucket
+    table = jnp.full((e * cap + 1,), g, jnp.int32).at[slot].set(
+        jnp.where(keep, tok_id, g))[: e * cap].reshape(e, cap)
+    gate_slot = jnp.zeros((e * cap + 1,), jnp.float32).at[slot].set(
+        jnp.where(keep, gate.reshape(-1), 0.0))[: e * cap].reshape(e, cap)
+    return table, gate_slot
+
+
+def moe_fwd(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
+    """x (B, S, d) -> (B, S, d).
+
+    Sharding-aware layout: every large tensor keeps an EXPLICIT group axis
+    (sharded over "data") and expert axis (sharded over "model"), and all
+    sharding constraints are applied to the STACKED tensors — constraining
+    inside a vmapped function would leave the group axis unspecified and
+    GSPMD then all-gathers the (G, E, cap, d) activations across the data
+    axis in the backward pass (observed as a 2.7x collective-bound blowup on
+    granite-moe; see EXPERIMENTS.md §Perf).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    g = min(cfg.moe_group_size, t)
+    n_groups = -(-t // g)
+    t_pad = n_groups * g
+    xt = x.reshape(t, d)
+    if t_pad != t:
+        xt = jnp.pad(xt, ((0, t_pad - t), (0, 0)))
+    xt = constrain(xt.reshape(n_groups, g, d), "groups", None, "embed")
+    cap = max(1, int(g * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+
+    # routing (f32) + per-group slot assignment
+    logits = jnp.einsum("Ggd,de->Gge", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                       # (G,g,K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    table, gate_slot = jax.vmap(
+        lambda gt, ei: _moe_route(cfg, gt, ei, cap, g))(gate, eidx)
+    table = constrain(table, "groups", "experts", None)
+    gate_slot = constrain(gate_slot, "groups", "experts", None)
+
+    # dispatch: gather tokens into (G, E, cap, d); tokens are replicated
+    # across "model", so each model shard gathers its own experts locally
+    x_pad = jnp.concatenate(
+        [xt, jnp.zeros((n_groups, 1, d), xt.dtype)], axis=1)   # (G,g+1,d)
+    xe = jax.vmap(lambda xp, tb: jnp.take(xp, tb, axis=0))(x_pad, table)
+    xe = constrain(xe, "groups", "experts", "capacity", "embed")
+
+    # expert FFNs (E sharded over "model", G over "data")
+    hg = jnp.einsum("Gecd,edf->Gecf", xe, p["w_gate"])
+    hu = jnp.einsum("Gecd,edf->Gecf", xe, p["w_up"])
+    ye = jnp.einsum("Gecf,efd->Gecd", jax.nn.silu(hg) * hu, p["w_down"])
+    ye = constrain(ye, "groups", "experts", "capacity", "embed")
+
+    # combine: scatter-add weighted expert outputs back to token space; each
+    # model shard contributes its local experts and GSPMD reduces the (g, d)
+    # partials (tokens x d traffic, not (E, cap, d) resharding)
+    contrib = (ye * gate_slot[..., None].astype(ye.dtype)).reshape(
+        n_groups, e * cap, d)
+    flat_tb = table.reshape(n_groups, e * cap)
+
+    def _scatter(tb, ct):
+        return jnp.zeros((g + 1, d), ct.dtype).at[tb].add(ct)[:g]
+
+    out = jax.vmap(_scatter)(flat_tb, contrib)
+    out = constrain(out, "groups", None, "embed")
+    out = out.reshape(t_pad, d)[:t].reshape(b, s, d)
+    return constrain(out, "batch", "res_seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 block
+# ---------------------------------------------------------------------------
+def init_mamba(cfg: ArchConfig, key) -> Tuple[Params, Params]:
+    d, di, ns, dr, w = (cfg.d_model, cfg.dinner, cfg.ssm_state, cfg.dtrank,
+                        cfg.conv_width)
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    params = {
+        "in_proj": _init(ks[0], (d, 2 * di), d ** -0.5, dt),
+        "conv_w": _init(ks[1], (di, w), w ** -0.5, dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": _init(ks[2], (di, dr + 2 * ns), di ** -0.5, dt),
+        "dt_proj": _init(ks[3], (dr, di), dr ** -0.5, dt),
+        "dt_bias": jnp.full((di,), -4.0, jnp.float32),  # softplus ≈ 0.018
+        "a_log": jnp.log(jnp.tile(
+            jnp.arange(1, ns + 1, dtype=jnp.float32)[None, :], (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": _init(ks[5], (di, d), di ** -0.5, dt),
+    }
+    specs = {
+        "in_proj": ("fsdp", "ff"),
+        "conv_w": ("ff", "conv"),
+        "conv_b": ("ff",),
+        "x_proj": ("ff", None),
+        "dt_proj": (None, "ff"),
+        "dt_bias": ("ff",),
+        "a_log": ("ff", "state"),
+        "d_skip": ("ff",),
+        "out_proj": ("ff", "fsdp"),
+    }
+    return params, specs
+
+
+def _causal_conv(xz: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv along seq via shifted adds (width ≤ ~8).
+    xz (B,S,di); w (di,W); state (B, W-1, di) prefix for chunked decode."""
+    bsz, s, di = xz.shape
+    width = w.shape[1]
+    if state is None:
+        state = jnp.zeros((bsz, width - 1, di), xz.dtype)
+    ext = jnp.concatenate([state, xz], axis=1)  # (B, S+W-1, di)
+    out = jnp.zeros_like(xz, dtype=jnp.float32)
+    for i in range(width):
+        out = out + ext[:, i:i + s, :].astype(jnp.float32) * w[:, i]
+    return (out + b).astype(xz.dtype)
+
+
+def mamba_fwd(cfg: ArchConfig, p: Params, x: jax.Array,
+              state: Optional[Tuple[jax.Array, jax.Array]] = None,
+              impl: str = "xla"):
+    """x (B,S,d) -> (y (B,S,d), (ssm_state (B,di,N), conv_state (B,W-1,di)))."""
+    b, s, d = x.shape
+    di, ns = cfg.dinner, cfg.ssm_state
+    h0, conv0 = state if state is not None else (None, None)
+
+    xz = constrain(x @ p["in_proj"], "batch", "seq", "ff")
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = _causal_conv(xin, p["conv_w"], p["conv_b"], conv0)
+    xc = jax.nn.silu(xc)
+    # roll the conv state forward: last (W-1) raw inputs
+    prefix = conv0 if conv0 is not None else jnp.zeros(
+        (b, cfg.conv_width - 1, di), x.dtype)
+    new_conv = jax.lax.dynamic_slice_in_dim(
+        jnp.concatenate([prefix, xin], axis=1), s, cfg.conv_width - 1, axis=1)
+
+    proj = xc @ p["x_proj"]                                   # (B,S,dr+2N)
+    dt_raw = proj[..., : cfg.dtrank]
+    b_in = proj[..., cfg.dtrank: cfg.dtrank + ns]
+    c_in = proj[..., cfg.dtrank + ns:]
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"]).astype(xc.dtype)
+    a = -jnp.exp(p["a_log"])                                   # (di, N)
+
+    y, h_t = ops.selective_scan(xc, dt, a, b_in, c_in, p["d_skip"], h0,
+                                impl=impl)
+    y = y * jax.nn.silu(z)
+    out = constrain(y @ p["out_proj"], "batch", "res_seq", "embed")
+    return out, (h_t, new_conv)
+
+
+def mamba_decode(cfg: ArchConfig, p: Params, x: jax.Array,
+                 state: Tuple[jax.Array, jax.Array]):
+    """Single-token decode: x (B,1,d); state (h (B,di,N), conv (B,W-1,di))."""
+    return mamba_fwd(cfg, p, x, state)
+
+
+# ---------------------------------------------------------------------------
+# Hymba: parallel attention + SSM heads in one block
+# ---------------------------------------------------------------------------
+def init_hymba_mixer(cfg: ArchConfig, key) -> Tuple[Params, Params]:
+    k1, k2 = jax.random.split(key)
+    attn_p, attn_s = init_attention(cfg, k1)
+    mamba_p, mamba_s = init_mamba(cfg, k2)
+    d = cfg.d_model
+    params = {"attn": attn_p, "mamba": mamba_p,
+              "norm_a": jnp.ones((d,), jnp.float32),
+              "norm_s": jnp.ones((d,), jnp.float32)}
+    specs = {"attn": attn_s, "mamba": mamba_s,
+             "norm_a": ("embed",), "norm_s": ("embed",)}
+    return params, specs
+
+
+def hymba_fwd(cfg: ArchConfig, p: Params, x: jax.Array,
+              state=None, pos0: int = 0, impl: str = "xla"):
+    ao, kv = attention_fwd(cfg, p["attn"], x, pos0=pos0, impl=impl)
+    so, new_state = mamba_fwd(cfg, p["mamba"], x, state, impl=impl)
+    out = 0.5 * (rmsnorm(ao, p["norm_a"]) + rmsnorm(so, p["norm_s"]))
+    return out.astype(x.dtype), kv, new_state
+
+
+def hymba_decode(cfg: ArchConfig, p: Params, x: jax.Array, kv_cache,
+                 ssm_state, pos):
+    ao, kv = attention_decode(cfg, p["attn"], x, kv_cache, pos)
+    so, new_state = mamba_decode(cfg, p["mamba"], x, ssm_state)
+    out = 0.5 * (rmsnorm(ao, p["norm_a"]) + rmsnorm(so, p["norm_s"]))
+    return out.astype(x.dtype), kv, new_state

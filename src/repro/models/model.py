@@ -1,0 +1,326 @@
+"""Model assembly: init / forward / prefill / decode for all four families.
+
+Layer stacks run under ``jax.lax.scan`` over stacked per-layer parameters
+(compact HLO, fast AOT compiles at 126 layers) with optional remat.  Decode
+threads per-layer caches through the same scan.
+
+Modality handling: ``text`` models embed integer tokens; ``vlm``/``audio``
+backbones accept precomputed (B, S, d_model) embeddings from the (stubbed)
+frontend, per the assignment spec.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import (
+    attention_decode,
+    attention_fwd,
+    hymba_decode,
+    hymba_fwd,
+    init_attention,
+    init_hymba_mixer,
+    init_mamba,
+    init_mlp,
+    init_moe,
+    mamba_decode,
+    mamba_fwd,
+    mlp_fwd,
+    moe_fwd,
+    rmsnorm,
+)
+from .sharding import constrain
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_layer(cfg: ArchConfig, key) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    params: Params = {"ln1": jnp.ones((d,), jnp.float32)}
+    specs: Params = {"ln1": ("embed",)}
+    if cfg.family == "dense" or cfg.family == "moe":
+        p, s = init_attention(cfg, ks[0])
+        params["attn"], specs["attn"] = p, s
+        params["ln2"] = jnp.ones((d,), jnp.float32)
+        specs["ln2"] = ("embed",)
+        if cfg.is_moe:
+            p, s = init_moe(cfg, ks[1])
+            params["moe"], specs["moe"] = p, s
+        else:
+            p, s = init_mlp(cfg, ks[1])
+            params["mlp"], specs["mlp"] = p, s
+    elif cfg.family == "ssm":
+        p, s = init_mamba(cfg, ks[0])
+        params["mamba"], specs["mamba"] = p, s
+    elif cfg.family == "hybrid":
+        p, s = init_hymba_mixer(cfg, ks[0])
+        params["mixer"], specs["mixer"] = p, s
+        params["ln2"] = jnp.ones((d,), jnp.float32)
+        specs["ln2"] = ("embed",)
+        p, s = init_mlp(cfg, ks[1])
+        params["mlp"], specs["mlp"] = p, s
+    else:
+        raise ValueError(cfg.family)
+    return params, specs
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    kemb, khead, *kl = jax.random.split(key, 2 + cfg.n_layers)
+    d, v = cfg.d_model, cfg.vocab
+    dt = jnp.dtype(cfg.dtype)
+    params: Params = {}
+    if cfg.modality == "text":
+        params["embed"] = (jax.random.normal(kemb, (v, d), jnp.float32)
+                           ).astype(dt)
+    params["final_ln"] = jnp.ones((d,), jnp.float32)
+    params["lm_head"] = (d ** -0.5 * jax.random.normal(
+        khead, (d, v), jnp.float32)).astype(dt)
+
+    layers = [_init_layer(cfg, k)[0] for k in kl]
+    if cfg.scan_layers:
+        params["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    else:
+        params["layers"] = layers
+    return params
+
+
+def param_specs(cfg: ArchConfig) -> Params:
+    """Logical-axis tree matching init_params structure (no materialization)."""
+    specs: Params = {}
+    if cfg.modality == "text":
+        specs["embed"] = ("vocab", "fsdp")
+    specs["final_ln"] = ("embed",)
+    specs["lm_head"] = ("fsdp", "vocab")
+    from .sharding import is_spec_leaf
+    layer_specs = _init_layer_specs(cfg)
+    if cfg.scan_layers:
+        specs["layers"] = jax.tree.map(
+            lambda names: (None,) + tuple(names), layer_specs,
+            is_leaf=is_spec_leaf)
+    else:
+        specs["layers"] = [layer_specs] * cfg.n_layers
+    return specs
+
+
+def _init_layer_specs(cfg: ArchConfig):
+    # Build the specs tree without touching RNG/materialization.
+    d = cfg.d_model
+    specs: Params = {"ln1": ("embed",)}
+    if cfg.family in ("dense", "moe"):
+        specs["attn"] = {
+            "wq": ("fsdp", "heads"), "wk": ("fsdp", "kv_heads"),
+            "wv": ("fsdp", "kv_heads"), "wo": ("heads", "fsdp")}
+        specs["ln2"] = ("embed",)
+        if cfg.is_moe:
+            specs["moe"] = {
+                "router": ("embed", "experts"),
+                "w_gate": ("experts", "fsdp", "expert_ff"),
+                "w_up": ("experts", "fsdp", "expert_ff"),
+                "w_down": ("experts", "expert_ff", "fsdp")}
+        else:
+            specs["mlp"] = (
+                {"w_gate": ("fsdp", "ff"), "w_up": ("fsdp", "ff"),
+                 "w_down": ("ff", "fsdp")} if cfg.mlp == "gated_silu" else
+                {"w_in": ("fsdp", "ff"), "w_out": ("ff", "fsdp")})
+    elif cfg.family == "ssm":
+        specs["mamba"] = _MAMBA_SPECS
+    elif cfg.family == "hybrid":
+        specs["mixer"] = {
+            "attn": {"wq": ("fsdp", "heads"), "wk": ("fsdp", "kv_heads"),
+                     "wv": ("fsdp", "kv_heads"), "wo": ("heads", "fsdp")},
+            "mamba": _MAMBA_SPECS,
+            "norm_a": ("embed",), "norm_s": ("embed",)}
+        specs["ln2"] = ("embed",)
+        specs["mlp"] = (
+            {"w_gate": ("fsdp", "ff"), "w_up": ("fsdp", "ff"),
+             "w_down": ("ff", "fsdp")} if cfg.mlp == "gated_silu" else
+            {"w_in": ("fsdp", "ff"), "w_out": ("ff", "fsdp")})
+    return specs
+
+
+_MAMBA_SPECS = {
+    "in_proj": ("fsdp", "ff"), "conv_w": ("ff", "conv"), "conv_b": ("ff",),
+    "x_proj": ("ff", None), "dt_proj": (None, "ff"), "dt_bias": ("ff",),
+    "a_log": ("ff", "state"), "d_skip": ("ff",), "out_proj": ("ff", "fsdp"),
+}
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+def _layer_fwd(cfg: ArchConfig, lp: Params, x: jax.Array, pos0: int,
+               impl: str):
+    """One transformer block. Returns (x, cache_contrib)."""
+    h = rmsnorm(x, lp["ln1"])
+    if cfg.family in ("dense", "moe"):
+        ao, kv = attention_fwd(cfg, lp["attn"], h, pos0=pos0, impl=impl)
+        x = x + ao
+        h2 = rmsnorm(x, lp["ln2"])
+        ff = moe_fwd(cfg, lp["moe"], h2) if cfg.is_moe else \
+            mlp_fwd(cfg, lp["mlp"], h2)
+        x = x + ff
+        return x, (kv, None)
+    if cfg.family == "ssm":
+        mo, state = mamba_fwd(cfg, lp["mamba"], h, impl=impl)
+        return x + mo, (None, state)
+    if cfg.family == "hybrid":
+        mo, kv, state = hymba_fwd(cfg, lp["mixer"], h, pos0=pos0, impl=impl)
+        x = x + mo
+        h2 = rmsnorm(x, lp["ln2"])
+        x = x + mlp_fwd(cfg, lp["mlp"], h2)
+        return x, (kv, state)
+    raise ValueError(cfg.family)
+
+
+def embed_tokens(cfg: ArchConfig, params: Params, tokens: jax.Array):
+    if cfg.modality == "text":
+        x = jnp.take(params["embed"], tokens, axis=0)
+    else:
+        x = tokens  # precomputed frontend embeddings (B, S, d)
+    return constrain(x.astype(jnp.dtype(cfg.dtype)), "batch", "res_seq", "embed")
+
+
+def forward(cfg: ArchConfig, params: Params, tokens: jax.Array,
+            pos0: int = 0, impl: str = "xla", return_caches: bool = False):
+    """tokens: int (B,S) for text, float (B,S,d) otherwise. -> logits (B,S,V).
+
+    ``return_caches`` also returns per-layer (kv, ssm_state) stacks for
+    prefill→decode handoff.
+    """
+    x = embed_tokens(cfg, params, tokens)
+
+    def body(x, lp):
+        x, cache = _layer_fwd(cfg, lp, x, pos0, impl)
+        return x, (cache if return_caches else None)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    if cfg.scan_layers:
+        x, caches = jax.lax.scan(body, x, params["layers"])
+    else:
+        caches = []
+        for lp in params["layers"]:
+            x, c = body(x, lp)
+            caches.append(c)
+
+    x = rmsnorm(x, params["final_ln"])
+    logits = constrain(x @ params["lm_head"], "batch", "seq", "vocab")
+    if return_caches:
+        return logits, caches
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# decode (serving): one new token against populated caches
+# ---------------------------------------------------------------------------
+class DecodeState(NamedTuple):
+    """Per-layer caches stacked on a leading layer axis (scan-compatible)."""
+    kv_k: Optional[jax.Array]       # (L, B, Hkv, T_cache, hd)
+    kv_v: Optional[jax.Array]
+    ssm_h: Optional[jax.Array]      # (L, B, d_inner, N)
+    ssm_conv: Optional[jax.Array]   # (L, B, W-1, d_inner)
+    pos: jax.Array                  # scalar int32 — next write position
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int,
+                      dtype=None) -> DecodeState:
+    dt = dtype or jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    kv_k = kv_v = ssm_h = ssm_conv = None
+    if cfg.has_attention:
+        t = cache_len if cfg.sliding_window is None else min(
+            cache_len, cfg.sliding_window)
+        shape = (L, batch, cfg.n_kv_heads, t, cfg.hd)
+        kv_k = jnp.zeros(shape, dt)
+        kv_v = jnp.zeros(shape, dt)
+    if cfg.has_ssm:
+        ssm_h = jnp.zeros((L, batch, cfg.dinner, cfg.ssm_state), jnp.float32)
+        ssm_conv = jnp.zeros((L, batch, cfg.conv_width - 1, cfg.dinner), dt)
+    return DecodeState(kv_k, kv_v, ssm_h, ssm_conv,
+                       jnp.zeros((), jnp.int32))
+
+
+def decode_state_specs(cfg: ArchConfig):
+    """Logical-axis tuples for DecodeState (for dry-run in_shardings)."""
+    return DecodeState(
+        kv_k=(None, "batch", "kv_heads", "kv_seq", None)
+        if cfg.has_attention else None,
+        kv_v=(None, "batch", "kv_heads", "kv_seq", None)
+        if cfg.has_attention else None,
+        ssm_h=(None, "batch", "ff", "state") if cfg.has_ssm else None,
+        ssm_conv=(None, "batch", None, "ff") if cfg.has_ssm else None,
+        pos=(),
+    )
+
+
+def decode_step(cfg: ArchConfig, params: Params, token: jax.Array,
+                state: DecodeState) -> Tuple[jax.Array, DecodeState]:
+    """token: int (B,1) text / float (B,1,d) otherwise.
+    Returns (logits (B,1,V), new state)."""
+    x = embed_tokens(cfg, params, token)
+    pos = state.pos
+
+    def body(x, per_layer):
+        lp, kv_k, kv_v, ssm_h, ssm_conv = per_layer
+        h = rmsnorm(x, lp["ln1"])
+        if cfg.family in ("dense", "moe"):
+            ao, (kv_k, kv_v) = attention_decode(
+                cfg, lp["attn"], h, (kv_k, kv_v), pos)
+            x = x + ao
+            h2 = rmsnorm(x, lp["ln2"])
+            ff = moe_fwd(cfg, lp["moe"], h2) if cfg.is_moe else \
+                mlp_fwd(cfg, lp["mlp"], h2)
+            x = x + ff
+        elif cfg.family == "ssm":
+            mo, (ssm_h, ssm_conv_t) = mamba_decode(
+                cfg, lp["mamba"], h, (ssm_h, ssm_conv))
+            ssm_conv = ssm_conv_t
+            x = x + mo
+        else:  # hybrid
+            mo, (kv_k, kv_v), (ssm_h, ssm_conv) = hymba_decode(
+                cfg, lp["mixer"], h, (kv_k, kv_v), (ssm_h, ssm_conv), pos)
+            x = x + mo
+            h2 = rmsnorm(x, lp["ln2"])
+            x = x + mlp_fwd(cfg, lp["mlp"], h2)
+        return x, (kv_k, kv_v, ssm_h, ssm_conv)
+
+    L = cfg.n_layers
+    dummy = jnp.zeros((L, 1))
+    xs = (params["layers"],
+          state.kv_k if state.kv_k is not None else dummy,
+          state.kv_v if state.kv_v is not None else dummy,
+          state.ssm_h if state.ssm_h is not None else dummy,
+          state.ssm_conv if state.ssm_conv is not None else dummy)
+
+    def scan_body(x, per_layer):
+        lp, kk, vv, hh, cc = per_layer
+        x, (kk2, vv2, hh2, cc2) = body(
+            x, (lp,
+                kk if state.kv_k is not None else None,
+                vv if state.kv_v is not None else None,
+                hh if state.ssm_h is not None else None,
+                cc if state.ssm_conv is not None else None))
+        return x, (kk2 if kk2 is not None else kk,
+                   vv2 if vv2 is not None else vv,
+                   hh2 if hh2 is not None else hh,
+                   cc2 if cc2 is not None else cc)
+
+    x, (kk, vv, hh, cc) = jax.lax.scan(scan_body, x, xs)
+    x = rmsnorm(x, params["final_ln"])
+    logits = constrain(x @ params["lm_head"], "batch", "seq", "vocab")
+    new_state = DecodeState(
+        kk if state.kv_k is not None else None,
+        vv if state.kv_v is not None else None,
+        hh if state.ssm_h is not None else None,
+        cc if state.ssm_conv is not None else None,
+        pos + 1)
+    return logits, new_state

@@ -1,0 +1,197 @@
+"""Logical-axis sharding rules (GSPMD/pjit style).
+
+We deliberately use jit + NamedSharding + with_sharding_constraint rather than
+shard_map: GSPMD tolerates non-divisible dimension/axis pairs by padding,
+which several assigned architectures require (granite's 24 heads and 49 155
+vocab on a 16-way model axis, hymba's 25 heads).
+
+Logical axes:
+  batch    -> ("pod", "data")   activations' batch dim
+  seq      -> None (or "model" under sequence-parallel contexts)
+  embed    -> None              residual stream
+  heads/kv_heads/ff/vocab/experts -> "model"   tensor parallel
+  fsdp     -> "data"            ZeRO-3 parameter sharding dim
+  groups   -> ("pod", "data")   MoE token groups
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "groups": ("pod", "data"),
+    "seq": None,
+    "res_seq": None,            # residual-stream seq dim; "model" under seq-parallel
+    "kv_seq": None,             # decode KV-cache seq dim; "model" for serve cells
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_ff": None,
+    "capacity": None,
+    "state": None,
+    "conv": None,
+    "layers": None,
+    "fsdp": "data",
+    "replicated": None,
+}
+
+_tls = threading.local()
+
+
+def _state():
+    if not hasattr(_tls, "mesh"):
+        _tls.mesh = None
+        _tls.rules = dict(DEFAULT_RULES)
+    return _tls
+
+
+def set_mesh(mesh: Optional[Mesh], rules: Optional[Dict[str, Axis]] = None):
+    st = _state()
+    st.mesh = mesh
+    st.rules = dict(DEFAULT_RULES)
+    if rules:
+        st.rules.update(rules)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _state().mesh
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[Dict[str, Axis]] = None):
+    st = _state()
+    prev = (st.mesh, st.rules)
+    set_mesh(mesh, rules)
+    try:
+        yield
+    finally:
+        st.mesh, st.rules = prev
+
+
+def _resolve(name: Optional[str], mesh: Mesh) -> Axis:
+    if name is None:
+        return None
+    st = _state()
+    ax = st.rules.get(name, None)
+    if ax is None:
+        return None
+    if isinstance(ax, str):
+        return ax if ax in mesh.axis_names else None
+    present = tuple(a for a in ax if a in mesh.axis_names)
+    return present if present else None
+
+
+def spec(*names: Optional[str]) -> P:
+    """Logical axis names -> PartitionSpec under the current mesh/rules."""
+    mesh = current_mesh()
+    if mesh is None:
+        return P()
+    return P(*(_resolve(n, mesh) for n in names))
+
+
+def named_sharding(*names: Optional[str]) -> Optional[NamedSharding]:
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec(*names))
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """with_sharding_constraint under the active mesh (no-op without one)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec(*names)))
+
+
+def is_spec_leaf(t) -> bool:
+    """Spec leaves are PLAIN tuples of logical names (or empty = replicated).
+    NamedTuples (TrainState etc.) are containers, not leaves."""
+    return type(t) is tuple and all(n is None or isinstance(n, str) for n in t)
+
+
+def tree_shardings(spec_tree):
+    """Map a pytree of logical-name tuples to NamedShardings."""
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return jax.tree.map(
+        lambda names: NamedSharding(mesh, spec(*names)),
+        spec_tree, is_leaf=is_spec_leaf)
+
+
+def _axis_size(mesh: Mesh, ax: Axis) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, str):
+        return mesh.shape[ax]
+    n = 1
+    for a in ax:
+        n *= mesh.shape[a]
+    return n
+
+
+def divisible_spec(shape, names, mesh: Mesh) -> P:
+    """Resolve logical names to a PartitionSpec, replicating any dim whose
+    size is not divisible by its mesh-axis product.
+
+    jit *argument* shardings must tile arrays exactly (unlike internal
+    with_sharding_constraint, where GSPMD pads) — granite's 49 155 vocab or
+    24 heads on a 16-way model axis degrade to replication at the argument
+    boundary while staying model-sharded inside the program.
+    """
+    base = spec(*names)
+    fixed = []
+    for i, ax in enumerate(base):
+        if i >= len(shape):
+            break
+        fixed.append(ax if shape[i] % _axis_size(mesh, ax) == 0 else None)
+    return P(*fixed)
+
+
+def constrain_tree(tree, spec_tree):
+    """with_sharding_constraint over a pytree with a logical-spec tree
+    (e.g. pin a gradient accumulator to the parameter shardings so GSPMD
+    reduce-scatters microbatch gradients instead of all-reducing them)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return tree
+    flat, treedef = jax.tree.flatten(tree)
+    flat_specs = jax.tree.flatten(spec_tree, is_leaf=is_spec_leaf)[0]
+    assert len(flat) == len(flat_specs), (len(flat), len(flat_specs))
+    out = [
+        jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec(*names)))
+        for x, names in zip(flat, flat_specs)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+def attach(shape_tree, spec_tree):
+    """Zip a ShapeDtypeStruct tree with a logical-spec tree -> structs with
+    shardings attached (the dry-run's argument maker)."""
+    mesh = current_mesh()
+    flat_shapes, treedef = jax.tree.flatten(shape_tree)
+    flat_specs = jax.tree.flatten(spec_tree, is_leaf=is_spec_leaf)[0]
+    assert len(flat_shapes) == len(flat_specs), (
+        f"shape/spec tree mismatch: {len(flat_shapes)} vs {len(flat_specs)}")
+    out = [
+        jax.ShapeDtypeStruct(
+            s.shape, s.dtype,
+            sharding=NamedSharding(
+                mesh, divisible_spec(s.shape, names, mesh)) if mesh else None)
+        for s, names in zip(flat_shapes, flat_specs)
+    ]
+    return jax.tree.unflatten(treedef, out)

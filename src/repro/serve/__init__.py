@@ -1,0 +1,9 @@
+from .engine import (
+    Request,
+    SpotServingScheduler,
+    greedy_generate,
+    make_prefill_step,
+    make_serve_step,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,169 @@
+"""Serving engine: prefill → batched decode with KV/SSM caches, plus an
+interruption-aware request scheduler (requests on spot capacity are requeued
+or hibernated exactly like the paper's VMs).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ArchConfig
+from ..models.model import (
+    DecodeState,
+    decode_step,
+    forward,
+    init_decode_state,
+)
+
+Params = Any
+
+
+def make_prefill_step(cfg: ArchConfig, cache_len: int, impl: str = "xla"):
+    """Returns prefill(params, tokens) -> (last_logits (B,V), DecodeState).
+
+    Builds caches sized ``cache_len`` with the prompt written at the front
+    (or, for ring-buffer sliding-window caches, the last W positions).
+    """
+
+    def prefill(params, tokens):
+        b = tokens.shape[0]
+        s = tokens.shape[1]
+        logits, caches = forward(cfg, params, tokens, impl=impl,
+                                 return_caches=True)
+        state = init_decode_state(cfg, b, cache_len)
+        kv_k, kv_v, ssm_h, ssm_conv = (state.kv_k, state.kv_v,
+                                       state.ssm_h, state.ssm_conv)
+        kv, ssm = caches
+        if cfg.has_attention:
+            k_new, v_new = kv  # (L, B, Hkv, S, hd)
+            t_cache = kv_k.shape[3]
+            if t_cache >= s:
+                kv_k = jax.lax.dynamic_update_slice(
+                    kv_k, k_new.astype(kv_k.dtype), (0, 0, 0, 0, 0))
+                kv_v = jax.lax.dynamic_update_slice(
+                    kv_v, v_new.astype(kv_v.dtype), (0, 0, 0, 0, 0))
+            else:  # ring buffer: keep the last t_cache positions
+                kv_k = k_new[:, :, :, s - t_cache:, :].astype(kv_k.dtype)
+                kv_v = v_new[:, :, :, s - t_cache:, :].astype(kv_v.dtype)
+        if cfg.has_ssm:
+            h_t, conv_t = ssm
+            ssm_h = h_t.astype(ssm_h.dtype)
+            ssm_conv = conv_t.astype(ssm_conv.dtype)
+        st = DecodeState(kv_k, kv_v, ssm_h, ssm_conv,
+                         jnp.asarray(s, jnp.int32))
+        return logits[:, -1, :], st
+
+    return prefill
+
+
+def make_serve_step(cfg: ArchConfig):
+    """One decode step: (params, token, state) -> (logits (B,1,V), state).
+
+    This is the unit the multi-pod dry-run lowers for decode_* / long_* cells.
+    """
+
+    def serve_step(params, token, state: DecodeState):
+        return decode_step(cfg, params, token, state)
+
+    return serve_step
+
+
+def greedy_generate(cfg: ArchConfig, params, prompt, n_tokens: int,
+                    cache_len: Optional[int] = None, impl: str = "xla"):
+    """Greedy decode helper for tests/examples (text modality)."""
+    b, s = prompt.shape[0], prompt.shape[1]
+    cache_len = cache_len or (s + n_tokens)
+    prefill = make_prefill_step(cfg, cache_len, impl=impl)
+    step = jax.jit(make_serve_step(cfg))
+    logits, state = prefill(params, prompt)
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+    out = [tok]
+    for _ in range(n_tokens - 1):
+        lg, state = step(params, tok, state)
+        tok = jnp.argmax(lg[:, -1, :], axis=-1)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Interruption-aware request scheduling (ties serving to the spot market)
+# ---------------------------------------------------------------------------
+@dataclass
+class Request:
+    id: int
+    prompt_len: int
+    target_tokens: int
+    generated: int = 0
+    state: str = "queued"     # queued | running | hibernated | done | dropped
+    interruptions: int = 0
+
+
+@dataclass
+class SpotServingScheduler:
+    """Schedules decode batches over capacity that can be reclaimed.
+
+    When the market simulator interrupts the serving instance, in-flight
+    requests are either *hibernated* (their decode state checkpointed and
+    resumed later — like the paper's HIBERNATE behavior) or requeued from
+    scratch (TERMINATE).  Mirrors the VM lifecycle at request granularity.
+    """
+    batch_size: int
+    hibernate: bool = True
+    queue: List[Request] = field(default_factory=list)
+    running: List[Request] = field(default_factory=list)
+    hibernated: List[Request] = field(default_factory=list)
+    done: List[Request] = field(default_factory=list)
+
+    def add(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def fill_batch(self) -> List[Request]:
+        # resume hibernated requests first (paper's resubmission order)
+        while self.hibernated and len(self.running) < self.batch_size:
+            r = self.hibernated.pop(0)
+            r.state = "running"
+            self.running.append(r)
+        while self.queue and len(self.running) < self.batch_size:
+            r = self.queue.pop(0)
+            r.state = "running"
+            self.running.append(r)
+        return self.running
+
+    def step(self, n: int = 1) -> None:
+        finished = []
+        for r in self.running:
+            r.generated += n
+            if r.generated >= r.target_tokens:
+                r.state = "done"
+                finished.append(r)
+        for r in finished:
+            self.running.remove(r)
+            self.done.append(r)
+
+    def interrupt(self) -> None:
+        """Capacity reclaimed: hibernate or requeue all running requests."""
+        for r in self.running:
+            r.interruptions += 1
+            if self.hibernate:
+                r.state = "hibernated"
+                self.hibernated.append(r)
+            else:
+                r.state = "queued"
+                r.generated = 0
+                self.queue.append(r)
+        self.running = []
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "done": len(self.done),
+            "queued": len(self.queue),
+            "hibernated": len(self.hibernated),
+            "running": len(self.running),
+            "interruptions": sum(
+                r.interruptions for r in
+                self.done + self.queue + self.hibernated + self.running),
+        }

@@ -1,0 +1,182 @@
+"""Sharded optimizers: AdamW and Adafactor (pure JAX, no optax).
+
+Optimizer states inherit the parameter shardings (ZeRO-3 style): the spec
+tree for states is derived from the param spec tree, so the dry-run can build
+in_shardings for the full train state without materializing anything.
+
+Moment dtypes are configurable — trillion-parameter configs (kimi-k2) use
+Adafactor (factored second moment) because fp32 Adam moments alone would
+exceed 512 x 16 GB HBM; see DESIGN.md.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Params
+    v: Params
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    # per-leaf: for matrices, (row, col) factored second moments; for vectors
+    # an unfactored accumulator (stored in `row`, col is a (1,) placeholder).
+    row: Params
+    col: Params
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw_init(params: Params, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(params: Params, grads: Params, state: AdamWState, *,
+                 lr: jax.Array, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 ) -> Tuple[Params, AdamWState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - jnp.power(b1, t)
+    c2 = 1.0 - jnp.power(b2, t)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v2 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mh = m2 / c1
+        vh = v2 / c2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        p2 = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p2, m2.astype(m.dtype), v2.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, AdamWState(step, new_m, new_v)
+
+
+def adamw_specs(param_specs: Params) -> Any:
+    """State spec tree matching adamw_init structure."""
+    return AdamWState(step=(), m=param_specs, v=param_specs)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no first moment)
+# ---------------------------------------------------------------------------
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params: Params) -> AdafactorState:
+    def row_init(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def col_init(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((1,), jnp.float32)
+
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        row=jax.tree.map(row_init, params),
+        col=jax.tree.map(col_init, params),
+    )
+
+
+def adafactor_update(params: Params, grads: Params, state: AdafactorState, *,
+                     lr: jax.Array, decay: float = 0.8, eps: float = 1e-30,
+                     clip_threshold: float = 1.0, weight_decay: float = 0.0,
+                     ) -> Tuple[Params, AdafactorState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - jnp.power(t, -decay)   # t^-0.8 schedule, as in the paper
+
+    def upd(p, g, r, c):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + eps
+        if _factored(p):
+            r2 = beta * r + (1 - beta) * g2.mean(axis=-1)
+            c2 = beta * c + (1 - beta) * g2.mean(axis=-2)
+            rmean = r2.mean(axis=-1, keepdims=True)
+            vhat = (r2 / jnp.maximum(rmean, eps))[..., None] * c2[..., None, :]
+            u = gf / jnp.sqrt(jnp.maximum(vhat, eps))
+        else:
+            r2 = beta * r + (1 - beta) * g2
+            c2 = c
+            u = gf / jnp.sqrt(jnp.maximum(r2, eps))
+        # update clipping (RMS(u) <= clip_threshold)
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        p2 = p.astype(jnp.float32) - lr * u
+        if weight_decay:
+            p2 = p2 - lr * weight_decay * p.astype(jnp.float32)
+        return p2.astype(p.dtype), r2, c2
+
+    out = jax.tree.map(upd, params, grads, state.row, state.col)
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_r = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_c = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, AdafactorState(step, new_r, new_c)
+
+
+def adafactor_specs(param_specs: Params, params_shape: Params) -> Any:
+    """Spec tree: row drops the last logical axis, col drops the second-last."""
+    def row_spec(names, shp):
+        if len(shp.shape) >= 2:
+            return tuple(names[:-1])
+        return tuple(names)
+
+    def col_spec(names, shp):
+        if len(shp.shape) >= 2:
+            return tuple(names[:-2]) + (names[-1],)
+        return (None,)
+
+    is_names = lambda t: isinstance(t, tuple) and all(
+        n is None or isinstance(n, str) for n in t)
+    row = jax.tree.map(row_spec, param_specs, params_shape, is_leaf=is_names)
+    col = jax.tree.map(col_spec, param_specs, params_shape, is_leaf=is_names)
+    return AdafactorState(step=(), row=row, col=col)
+
+
+# ---------------------------------------------------------------------------
+# uniform front-end
+# ---------------------------------------------------------------------------
+def make_optimizer(name: str, **defaults):
+    """Returns (init_fn, update_fn, specs_fn(param_specs, param_shapes))."""
+    if name == "adamw":
+        return (adamw_init,
+                functools.partial(adamw_update, **defaults),
+                lambda specs, shapes: adamw_specs(specs))
+    if name == "adafactor":
+        return (adafactor_init,
+                functools.partial(adafactor_update, **defaults),
+                adafactor_specs)
+    raise ValueError(name)
+
+
+def lr_schedule(step: jax.Array, *, peak: float = 3e-4, warmup: int = 100,
+                total: int = 10_000, min_ratio: float = 0.1) -> jax.Array:
+    """Linear warmup + cosine decay."""
+    t = step.astype(jnp.float32)
+    warm = t / jnp.maximum(warmup, 1)
+    frac = jnp.clip((t - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return peak * jnp.where(t < warmup, warm, cos)

@@ -1,0 +1,148 @@
+"""Training step: next-token cross-entropy, gradient accumulation, optimizer
+apply — assembled so that ``jax.jit(make_train_step(cfg), in_shardings=...)``
+is the single unit the launcher lowers/compiles for the dry-run and runs for
+real training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ArchConfig
+from ..models.model import forward, init_params, param_specs
+from ..models.sharding import constrain, constrain_tree, current_mesh
+from .optimizer import lr_schedule, make_optimizer
+
+Params = Any
+
+
+class TrainState(NamedTuple):
+    params: Params
+    opt: Any
+    step: jax.Array
+    rng: jax.Array
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE in fp32. logits (B,S,V), labels (B,S) int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def make_loss_fn(cfg: ArchConfig, impl: str = "xla"):
+    def loss_fn(params, batch):
+        logits = forward(cfg, params, batch["tokens"], impl=impl)
+        return cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss_fn
+
+
+def _opt_kwargs(cfg: ArchConfig) -> dict:
+    if cfg.optimizer == "adamw":
+        return {"moment_dtype": jnp.dtype(cfg.moment_dtype)}
+    return {}
+
+
+def init_train_state(cfg: ArchConfig, key: jax.Array) -> TrainState:
+    params = init_params(cfg, key)
+    opt_init, _, _ = make_optimizer(cfg.optimizer)
+    if cfg.optimizer == "adamw":
+        import functools as _ft
+        opt_init = _ft.partial(opt_init, **_opt_kwargs(cfg))
+    return TrainState(
+        params=params,
+        opt=opt_init(params),
+        step=jnp.zeros((), jnp.int32),
+        rng=key,
+    )
+
+
+def train_state_specs(cfg: ArchConfig):
+    """Logical-axis tree for TrainState (dry-run in_shardings)."""
+    p_specs = param_specs(cfg)
+    _, _, opt_specs_fn = make_optimizer(cfg.optimizer)
+    p_shapes = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    return TrainState(
+        params=p_specs,
+        opt=opt_specs_fn(p_specs, p_shapes),
+        step=(),
+        rng=(),  # PRNG key: replicated (empty tuple == fully-replicated spec)
+    )
+
+
+def make_train_step(cfg: ArchConfig, *, impl: str = "xla",
+                    lr_kwargs: Optional[dict] = None,
+                    grad_accum: Optional[int] = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``grad_accum`` > 1 splits the batch into microbatches scanned
+    sequentially, accumulating fp32 gradients — the standard lever to fit
+    large-model activations (llama3-405b train_4k uses 4).
+    """
+    loss_fn = make_loss_fn(cfg, impl)
+    _, opt_update, _ = make_optimizer(cfg.optimizer)
+    accum = grad_accum or cfg.grad_accum
+    lr_kw = lr_kwargs or {}
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, dict]:
+        if accum <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        else:
+            acc_dt = jnp.dtype(cfg.accum_dtype)
+            p_specs = param_specs(cfg)
+
+            def micro(carry, mb):
+                loss_sum, gacc = carry
+                l, g = jax.value_and_grad(loss_fn)(state.params, mb)
+                gacc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(acc_dt), gacc, g)
+                # pin the accumulator to the parameter shardings: without
+                # this the scan carry is unconstrained and GSPMD all-reduces
+                # full per-layer weight-gradient tuples every microbatch
+                # instead of reduce-scattering to the ZeRO-3 shard
+                # (EXPERIMENTS.md §Perf Cell C iter 3: ~2 TB/device/step on
+                # kimi-k2)
+                gacc = constrain_tree(gacc, p_specs)
+                return (loss_sum + l, gacc), None
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(accum, b // accum, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), state.params)
+            (loss_sum, grads), _ = jax.lax.scan(micro, (0.0, g0), mbs)
+            loss = loss_sum / accum
+            grads = jax.tree.map(lambda g: (g / accum), grads)
+
+        grads = jax.tree.map(lambda g, p: g.astype(p.dtype) if g.dtype != p.dtype
+                             else g, grads, state.params)
+        lr = lr_schedule(state.step, **lr_kw)
+        new_params, new_opt = opt_update(state.params, grads, state.opt, lr=lr)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        metrics = {"loss": loss, "lr": lr, "grad_norm": gnorm}
+        return TrainState(new_params, new_opt, state.step + 1, state.rng), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, impl: str = "xla"):
+    loss_fn = make_loss_fn(cfg, impl)
+
+    def eval_step(params, batch):
+        return loss_fn(params, batch)
+
+    return eval_step

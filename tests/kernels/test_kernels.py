@@ -1,0 +1,159 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.hlem_score import hlem_score_pallas
+from repro.kernels.ssm_scan import ssm_scan
+
+def _rng():
+    return np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# hlem_score
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [1, 3, 100, 512, 513, 2000])
+@pytest.mark.parametrize("alpha", [0.0, -0.5])
+def test_hlem_score_sweep(n, alpha):
+    rng = _rng()
+    free = jnp.asarray(rng.uniform(0, 100, (n, 4)), jnp.float32)
+    mask = jnp.asarray(rng.random(n) < 0.7)
+    spot = jnp.asarray(rng.uniform(0, 1, (n, 4)), jnp.float32)
+    out = hlem_score_pallas(free, mask, spot, jnp.float32(alpha),
+                            interpret=True)
+    want = ref.hlem_score_ref(free, mask, spot, jnp.float32(alpha))
+    m = np.asarray(mask)
+    if m.any():
+        np.testing.assert_allclose(np.asarray(out)[m], np.asarray(want)[m],
+                                   rtol=1e-4, atol=1e-5)
+        assert int(np.argmax(out)) == int(np.argmax(want))
+
+
+def test_hlem_score_all_masked():
+    rng = _rng()
+    n = 64
+    free = jnp.zeros((n, 4), jnp.float32)
+    mask = jnp.zeros((n,), bool)
+    spot = jnp.zeros((n, 4), jnp.float32)
+    out = hlem_score_pallas(free, mask, spot, jnp.float32(0.0),
+                            interpret=True)
+    assert bool((out <= -1e37).all())
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+CASES = [
+    # b, h, hkv, tq, tk, dh, window, dtype
+    (2, 4, 4, 128, 128, 64, None, jnp.float32),
+    (1, 8, 2, 96, 96, 64, None, jnp.float32),      # GQA, ragged
+    (1, 4, 2, 1, 200, 64, None, jnp.float32),      # decode tq=1
+    (2, 4, 4, 128, 128, 64, 32, jnp.float32),      # sliding window
+    (1, 2, 1, 64, 64, 128, None, jnp.bfloat16),
+    (1, 5, 1, 70, 70, 16, 16, jnp.float32),        # odd heads (hymba-like)
+]
+
+
+@pytest.mark.parametrize("b,h,hkv,tq,tk,dh,window,dtype", CASES)
+def test_flash_attention_sweep(b, h, hkv, tq, tk, dh, window, dtype):
+    rng = _rng()
+    q = jnp.asarray(rng.normal(0, 1, (b, h, tq, dh)), dtype)
+    k = jnp.asarray(rng.normal(0, 1, (b, hkv, tk, dh)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (b, hkv, tk, dh)), dtype)
+    out = flash_attention(q, k, v, window=window, block_q=64, block_k=64,
+                          interpret=True)
+    want = ref.mha_ref(q, k, v, window=window)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), atol=tol)
+
+
+def test_flash_attention_noncausal():
+    rng = _rng()
+    q = jnp.asarray(rng.normal(0, 1, (1, 2, 50, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 2, 50, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (1, 2, 50, 32)), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, block_q=32, block_k=32,
+                          interpret=True)
+    want = ref.mha_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_chunked_ref_matches_dense():
+    rng = _rng()
+    q = jnp.asarray(rng.normal(0, 1, (1, 4, 257, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 2, 257, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (1, 2, 257, 64)), jnp.float32)
+    a = ref.mha_chunked_ref(q, k, v, chunk=64)
+    b = ref.mha_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssm scan
+# ---------------------------------------------------------------------------
+SSM_CASES = [
+    (2, 64, 128, 16, False, jnp.float32),
+    (1, 100, 96, 16, True, jnp.float32),
+    (1, 1, 64, 16, True, jnp.float32),      # decode single step
+    (2, 64, 128, 16, False, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,t,dm,n,with_h0,dtype", SSM_CASES)
+def test_ssm_scan_sweep(b, t, dm, n, with_h0, dtype):
+    rng = _rng()
+    x = jnp.asarray(rng.normal(0, 1, (b, t, dm)), dtype)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (b, t, dm)), dtype)
+    a = jnp.asarray(-rng.uniform(0.1, 1, (dm, n)), jnp.float32)
+    bb = jnp.asarray(rng.normal(0, 1, (b, t, n)), dtype)
+    c = jnp.asarray(rng.normal(0, 1, (b, t, n)), dtype)
+    d = jnp.asarray(rng.normal(0, 1, (dm,)), jnp.float32)
+    h0 = (jnp.asarray(rng.normal(0, 1, (b, dm, n)), jnp.float32)
+          if with_h0 else None)
+    y, hT = ssm_scan(x, dt, a, bb, c, d, h0, block_d=64, block_t=32,
+                     interpret=True)
+    yr, hTr = ref.ssm_scan_ref(x, dt, a, bb, c, d, h0)
+    ytol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    htol = 5e-3 if dtype == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=ytol)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hTr), atol=htol)
+
+
+def test_ssm_chunked_equals_full():
+    rng = _rng()
+    """Running two chunks with carried state == one full scan."""
+    b, t, dm, n = 1, 64, 64, 16
+    x = jnp.asarray(rng.normal(0, 1, (b, t, dm)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (b, t, dm)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.1, 1, (dm, n)), jnp.float32)
+    bb = jnp.asarray(rng.normal(0, 1, (b, t, n)), jnp.float32)
+    c = jnp.asarray(rng.normal(0, 1, (b, t, n)), jnp.float32)
+    d = jnp.asarray(rng.normal(0, 1, (dm,)), jnp.float32)
+    y_full, h_full = ref.ssm_scan_ref(x, dt, a, bb, c, d)
+    half = t // 2
+    y1, h1 = ref.ssm_scan_ref(x[:, :half], dt[:, :half], a, bb[:, :half],
+                              c[:, :half], d)
+    y2, h2 = ref.ssm_scan_ref(x[:, half:], dt[:, half:], a, bb[:, half:],
+                              c[:, half:], d, h1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ops dispatcher
+# ---------------------------------------------------------------------------
+def test_ops_impl_switch():
+    rng = _rng()
+    q = jnp.asarray(rng.normal(0, 1, (1, 2, 32, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 2, 32, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (1, 2, 32, 16)), jnp.float32)
+    a = ops.attention(q, k, v, impl="xla")
+    b = ops.attention(q, k, v, impl="interp", block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

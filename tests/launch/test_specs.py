@@ -1,0 +1,54 @@
+"""Launch-layer unit tests: shapes, skip rules, spec trees (1 device)."""
+import jax
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.specs import SHAPES, batch_specs, cell_supported, rules_for
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].kind == "train"
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].kind == "prefill"
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524_288
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_long_500k_skip_rule(arch):
+    cfg = get_config(arch)
+    ok, reason = cell_supported(cfg, SHAPES["long_500k"])
+    if arch in ("falcon_mamba_7b", "hymba_1_5b"):
+        assert ok, (arch, reason)
+    else:
+        assert not ok and "quadratic" in reason
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_all_other_shapes_supported(arch):
+    cfg = get_config(arch)
+    for name in ("train_4k", "prefill_32k", "decode_32k"):
+        ok, _ = cell_supported(cfg, SHAPES[name])
+        assert ok
+
+
+def test_batch_specs_modality():
+    vlm = get_config("phi_3_vision_4_2b")
+    shapes, specs = batch_specs(vlm, SHAPES["train_4k"])
+    assert len(shapes["tokens"].shape) == 3  # precomputed embeddings
+    txt = get_config("deepseek_7b")
+    shapes, specs = batch_specs(txt, SHAPES["train_4k"])
+    assert len(shapes["tokens"].shape) == 2
+
+
+def test_rules_for_overrides():
+    llama = get_config("llama3_405b")
+    r = rules_for(llama, SHAPES["train_4k"])
+    assert r["fsdp"] == ("pod", "data")
+    assert r["res_seq"] == "model"
+    # decode: no sequence-parallel residual
+    r2 = rules_for(llama, SHAPES["decode_32k"])
+    assert "res_seq" not in r2
+    small = get_config("deepseek_7b")
+    assert rules_for(small, SHAPES["train_4k"]) == {}

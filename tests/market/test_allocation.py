@@ -1,0 +1,147 @@
+"""Allocation policy unit tests (paper §VI + Algorithm 1)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    BestFit,
+    FirstFit,
+    HlemVmp,
+    HlemVmpAdjusted,
+    HostPool,
+    WorstFit,
+    clearing_mask,
+    direct_mask,
+    hlem_scores_np,
+    hlem_select_np,
+    hlem_weights_np,
+    make_on_demand,
+    make_spot,
+    resources,
+    rsdiff_np,
+)
+
+
+def pool_of(caps):
+    p = HostPool()
+    for c in caps:
+        p.add_host(c)
+    return p
+
+
+def test_first_fit_takes_lowest_index():
+    p = pool_of([resources(4, 4096, 100, 100)] * 3)
+    vm = make_on_demand(0, resources(2, 1024, 10, 10), 10.0)
+    hid, clearing = FirstFit().find_host(vm, p, 0.0, True)
+    assert (hid, clearing) == (0, False)
+
+
+def test_best_and_worst_fit():
+    p = pool_of([resources(8, 8192, 100, 100),
+                 resources(2, 8192, 100, 100),
+                 resources(4, 8192, 100, 100)])
+    vm = make_on_demand(0, resources(2, 1024, 10, 10), 10.0)
+    assert BestFit().find_host(vm, p, 0.0, True)[0] == 1   # tightest
+    assert WorstFit().find_host(vm, p, 0.0, True)[0] == 0  # most headroom
+
+
+def test_direct_and_clearing_masks():
+    p = pool_of([resources(2, 2048, 100, 100)] * 2)
+    spot = make_spot(0, resources(2, 1024, 10, 10), 100.0)
+    spot.state = spot.state.__class__.RUNNING
+    p.place(spot, 0)
+    spot.run_start = 0.0
+    from repro.core import VmState
+    spot.state = VmState.RUNNING
+
+    od = make_on_demand(1, resources(2, 1024, 10, 10), 10.0)
+    d = direct_mask(od, p)
+    c = clearing_mask(od, p, now=10.0)
+    assert list(d) == [False, True]
+    assert list(c) == [True, True]
+
+    # not yet past min runtime -> host 0 not clearable
+    spot.min_running_time = 50.0
+    c2 = clearing_mask(od, p, now=10.0)
+    assert list(c2) == [False, True]
+
+
+def test_rsdiff_filters_loaded_hosts():
+    # Eq. 1-2: host with high CPU utilization relative to request is filtered
+    used = np.array([7.0, 0.0])
+    total = np.array([8.0, 8.0])
+    rs = rsdiff_np(2.0, used, total, rc=0.95)
+    assert rs[0] < 0 < rs[1]
+
+
+def test_hlem_weights_normalized():
+    rng = np.random.default_rng(0)
+    free = rng.uniform(0, 100, (20, 4))
+    mask = np.ones(20, bool)
+    c_std, w = hlem_weights_np(free, mask)
+    assert w.shape == (4,)
+    assert np.all(w >= 0)
+    assert np.isclose(w.sum(), 1.0)
+    assert np.all((0.0 <= c_std) & (c_std <= 1.0 + 1e-9))
+
+
+def test_hlem_degenerate_cases():
+    # single candidate
+    free = np.array([[1.0, 2.0, 3.0, 4.0], [5.0, 6.0, 7.0, 8.0]])
+    mask = np.array([False, True])
+    assert hlem_select_np(free, mask) == 1
+    # no candidates
+    assert hlem_select_np(free, np.zeros(2, bool)) == -1
+    # identical hosts: any valid pick, scores equal
+    free = np.ones((4, 4))
+    scores = hlem_scores_np(free, np.ones(4, bool))
+    assert np.allclose(scores[0], scores)
+
+
+def test_hlem_prefers_most_free_host():
+    # one dominant host in every dimension must win
+    free = np.array([
+        [10.0, 10_000, 100, 1_000],
+        [80.0, 90_000, 900, 9_000],
+        [20.0, 20_000, 200, 2_000],
+    ])
+    assert hlem_select_np(free, np.ones(3, bool)) == 1
+
+
+def test_adjusted_hlem_penalizes_spot_heavy_hosts():
+    p = pool_of([resources(8, 8192, 1000, 1000)] * 2)
+    # load host 0 with a spot VM
+    s = make_spot(0, resources(4, 4096, 500, 500), 100.0)
+    from repro.core import VmState
+    p.place(s, 0)
+    s.state = VmState.RUNNING
+    s.run_start = 0.0
+
+    new_spot = make_spot(1, resources(2, 1024, 100, 100), 10.0)
+    base = HlemVmp()
+    adj = HlemVmpAdjusted(alpha=-0.9)
+    hid_adj, _ = adj.find_host(new_spot, p, 1.0, False)
+    assert hid_adj == 1  # spreads spot load away from host 0
+
+    # with alpha=0 the adjusted policy reduces to the base policy
+    adj0 = HlemVmpAdjusted(alpha=0.0)
+    assert adj0.find_host(new_spot, p, 1.0, False)[0] == \
+        base.find_host(new_spot, p, 1.0, False)[0]
+
+
+def test_hlem_spot_clearing_candidate_list():
+    """Algorithm 1 lines 8-10: when no host fits directly, score the
+    spot-clearing list (on-demand only)."""
+    p = pool_of([resources(2, 2048, 100, 100)] * 2)
+    from repro.core import VmState
+    for hid in range(2):
+        s = make_spot(hid, resources(2, 1024, 10, 10), 100.0)
+        p.place(s, hid)
+        s.state = VmState.RUNNING
+        s.run_start = 0.0
+    od = make_on_demand(5, resources(2, 1024, 10, 10), 10.0)
+    hid, clearing = HlemVmp().find_host(od, p, 10.0, True)
+    assert hid >= 0 and clearing
+
+    spot = make_spot(6, resources(2, 1024, 10, 10), 10.0)
+    hid2, clearing2 = HlemVmp().find_host(spot, p, 10.0, True)
+    assert hid2 == -1 and not clearing2

@@ -1,0 +1,59 @@
+"""Association-measure properties (paper §VII-F)."""
+import numpy as np
+import pytest
+
+from repro.market import (
+    association_matrix,
+    correlation_ratio,
+    generate_advisor_dataset,
+    pearson,
+    theils_u,
+)
+from repro.market.advisor import KINDS
+
+
+def test_theils_u_identity_and_independence():
+    rng = np.random.default_rng(0)
+    x = list(rng.integers(0, 4, 500))
+    y = list(rng.integers(0, 4, 500))
+    assert theils_u(x, x) == pytest.approx(1.0)
+    assert theils_u(x, y) < 0.05
+    assert 0.0 <= theils_u(x, y) <= 1.0
+
+
+def test_theils_u_asymmetric_determinism():
+    # y determines x fully, but not vice versa
+    y = [0, 1, 2, 3] * 100
+    x = [v % 2 for v in y]
+    assert theils_u(x, y) == pytest.approx(1.0)
+    assert theils_u(y, x) < 1.0
+
+
+def test_correlation_ratio_bounds():
+    rng = np.random.default_rng(1)
+    cats = list(rng.integers(0, 3, 400))
+    # values fully determined by category
+    vals = np.asarray(cats, float) * 10.0
+    assert correlation_ratio(cats, vals) == pytest.approx(1.0)
+    # independent values
+    assert correlation_ratio(cats, rng.normal(0, 1, 400)) < 0.2
+
+
+def test_pearson_basic():
+    x = np.arange(100, dtype=float)
+    assert pearson(x, 2 * x + 1) == pytest.approx(1.0)
+    assert pearson(x, -x) == pytest.approx(-1.0)
+    assert pearson(x, np.zeros(100)) == 0.0
+
+
+def test_advisor_analysis_recovers_paper_ordering():
+    cols = generate_advisor_dataset(600, seed=1)
+    am = association_matrix(cols, KINDS)
+    row = am["interruption_band"]
+    assert row["instance_type"] > row["family"] > row["category"]
+    assert row["day"] < 0.15 and row["free_tier"] < 0.15
+    # matrix diagonal is 1, all entries in [0, 1]
+    for a in am:
+        assert am[a][a] == 1.0
+        for b in am[a]:
+            assert -1e-9 <= am[a][b] <= 1.0 + 1e-9

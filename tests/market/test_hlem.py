@@ -1,0 +1,81 @@
+"""HLEM scoring math: numpy oracle vs jitted JAX vs properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    hlem_scores_jax,
+    hlem_scores_np,
+    hlem_select_batch_jax,
+    hlem_select_jax,
+    hlem_select_np,
+)
+
+BIG = 3.4e38
+
+
+@pytest.mark.parametrize("n", [2, 5, 33, 200])
+@pytest.mark.parametrize("alpha", [0.0, -0.5, 0.7])
+def test_np_vs_jax_scores(n, alpha):
+    rng = np.random.default_rng(n)
+    free = rng.uniform(0, 100, (n, 4))
+    mask = rng.random(n) < 0.7
+    spot = rng.uniform(0, 1, (n, 4))
+    s_np = hlem_scores_np(free, mask, spot, alpha)
+    s_jx = np.asarray(hlem_scores_jax(
+        jnp.asarray(free, jnp.float32), jnp.asarray(mask),
+        jnp.asarray(spot, jnp.float32), jnp.float32(alpha)))
+    if mask.any():
+        np.testing.assert_allclose(s_np[mask], s_jx[mask], rtol=2e-3,
+                                   atol=2e-4)
+        assert np.argmax(s_np) == np.argmax(s_jx)
+    assert np.all(s_jx[~mask] <= -BIG / 2)
+
+
+def test_select_consistency():
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        n = int(rng.integers(2, 50))
+        free = rng.uniform(0, 10, (n, 4))
+        mask = rng.random(n) < 0.5
+        spot = rng.uniform(0, 1, (n, 4))
+        i_np = hlem_select_np(free, mask, spot, -0.5)
+        i_jx = int(hlem_select_jax(
+            jnp.asarray(free, jnp.float32), jnp.asarray(mask),
+            jnp.asarray(spot, jnp.float32), jnp.float32(-0.5)))
+        assert i_np == i_jx
+
+
+def test_batched_select_matches_loop():
+    rng = np.random.default_rng(3)
+    n, b = 40, 8
+    free = jnp.asarray(rng.uniform(0, 10, (n, 4)), jnp.float32)
+    masks = jnp.asarray(rng.random((b, n)) < 0.6)
+    spot = jnp.asarray(rng.uniform(0, 1, (n, 4)), jnp.float32)
+    batched = np.asarray(hlem_select_batch_jax(free, masks, spot,
+                                               jnp.float32(-0.5)))
+    for i in range(b):
+        single = int(hlem_select_jax(free, masks[i], spot,
+                                     jnp.float32(-0.5)))
+        assert batched[i] == single
+
+
+def test_score_scale_invariance_of_selection():
+    """Min-max standardization makes selection invariant to per-dimension
+    affine rescaling of free capacities."""
+    rng = np.random.default_rng(11)
+    free = rng.uniform(1, 9, (12, 4))
+    mask = np.ones(12, bool)
+    base = hlem_select_np(free, mask)
+    scaled = free * np.array([10.0, 0.5, 3.0, 100.0])
+    assert hlem_select_np(scaled, mask) == base
+
+
+def test_alpha_zero_equals_unadjusted():
+    rng = np.random.default_rng(5)
+    free = rng.uniform(0, 10, (9, 4))
+    mask = rng.random(9) < 0.8
+    spot = rng.uniform(0, 1, (9, 4))
+    np.testing.assert_allclose(
+        hlem_scores_np(free, mask, spot, 0.0),
+        hlem_scores_np(free, mask, None, 0.0))

@@ -1,0 +1,177 @@
+"""Spot lifecycle unit tests (paper Fig. 4 / §VII-A / §VII-B)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    FirstFit,
+    HlemVmp,
+    InterruptionBehavior,
+    MarketSimulator,
+    SimConfig,
+    VmState,
+    make_on_demand,
+    make_spot,
+    resources,
+)
+
+
+def two_slot_host_sim(policy=None, **sim_kw):
+    sim = MarketSimulator(policy=policy or FirstFit(),
+                          config=SimConfig(strict_invariants=True, **sim_kw))
+    sim.add_host(resources(2, 2048, 10_000, 1_000_000))
+    return sim
+
+
+def test_restarting_interrupted_spot_matches_paper_example():
+    """Reproduces the paper's RESTARTINGINTERRUPTEDSPOT timing: spot runs
+    0-10, on-demand preempts 10-32, spot resumes 32-42, avg interruption 22 s
+    (paper Fig. 6 shows exactly 22)."""
+    sim = two_slot_host_sim(policy=HlemVmp())
+    spot = make_spot(0, resources(2, 512, 1000, 10_000), 20.0,
+                     behavior=InterruptionBehavior.HIBERNATE,
+                     hibernation_timeout=100.0)
+    od = make_on_demand(1, resources(2, 512, 1000, 10_000), 22.0,
+                        submit_time=10.0)
+    sim.submit(spot)
+    sim.submit(od)
+    sim.run(until=200.0)
+
+    assert spot.state is VmState.FINISHED
+    assert od.state is VmState.FINISHED
+    assert spot.interruptions == 1
+    assert [(h.start, h.stop) for h in spot.history] == [(0.0, 10.0),
+                                                         (32.0, 42.0)]
+    assert spot.average_interruption_time() == pytest.approx(22.0)
+
+
+def test_terminate_behavior():
+    sim = two_slot_host_sim()
+    spot = make_spot(0, resources(2, 512, 1000, 10_000), 50.0,
+                     behavior=InterruptionBehavior.TERMINATE)
+    od = make_on_demand(1, resources(2, 512, 1000, 10_000), 10.0,
+                        submit_time=5.0)
+    sim.submit(spot)
+    sim.submit(od)
+    sim.run(until=100.0)
+    assert spot.state is VmState.TERMINATED
+    assert spot.interruptions == 1
+    assert od.state is VmState.FINISHED
+
+
+def test_minimum_running_time_blocks_interruption():
+    sim = two_slot_host_sim()
+    spot = make_spot(0, resources(2, 512, 1000, 10_000), 50.0,
+                     min_running_time=30.0,
+                     behavior=InterruptionBehavior.TERMINATE)
+    # od arrives at t=5 < min_running_time: spot must NOT be interrupted
+    od = make_on_demand(1, resources(2, 512, 1000, 10_000), 10.0,
+                        submit_time=5.0, persistent=False)
+    sim.submit(spot)
+    sim.submit(od)
+    sim.run(until=100.0)
+    assert spot.state is VmState.FINISHED
+    assert spot.interruptions == 0
+    assert od.state is VmState.FAILED  # non-persistent, could not be placed
+
+
+def test_hibernation_timeout_terminates():
+    sim = two_slot_host_sim()
+    spot = make_spot(0, resources(2, 512, 1000, 10_000), 50.0,
+                     behavior=InterruptionBehavior.HIBERNATE,
+                     hibernation_timeout=20.0)
+    # long-running od keeps the host occupied past the hibernation timeout
+    od = make_on_demand(1, resources(2, 512, 1000, 10_000), 500.0,
+                        submit_time=5.0)
+    sim.submit(spot)
+    sim.submit(od)
+    sim.run(until=600.0)
+    assert spot.state is VmState.TERMINATED
+    assert spot.hibernated_at == 5.0
+    assert spot.interruptions == 1
+
+
+def test_waiting_timeout_fails_persistent_request():
+    sim = two_slot_host_sim()
+    od1 = make_on_demand(0, resources(2, 512, 1000, 10_000), 500.0)
+    od2 = make_on_demand(1, resources(2, 512, 1000, 10_000), 10.0,
+                         submit_time=1.0, waiting_timeout=30.0)
+    sim.submit(od1)
+    sim.submit(od2)
+    sim.run(until=600.0)
+    assert od2.state is VmState.FAILED
+    assert od1.state is VmState.FINISHED
+
+
+def test_persistent_request_fulfilled_when_capacity_frees():
+    sim = two_slot_host_sim()
+    od1 = make_on_demand(0, resources(2, 512, 1000, 10_000), 15.0)
+    od2 = make_on_demand(1, resources(2, 512, 1000, 10_000), 10.0,
+                         submit_time=1.0, waiting_timeout=100.0)
+    sim.submit(od1)
+    sim.submit(od2)
+    sim.run(until=200.0)
+    assert od1.state is VmState.FINISHED
+    assert od2.state is VmState.FINISHED
+    assert od2.history[0].start == 15.0  # started when od1 freed the host
+
+
+def test_warning_time_grace_period():
+    """With warning_time=3, the victim keeps running 3 s after the signal."""
+    sim = two_slot_host_sim(warning_time=3.0)
+    spot = make_spot(0, resources(2, 512, 1000, 10_000), 50.0,
+                     behavior=InterruptionBehavior.HIBERNATE,
+                     hibernation_timeout=1000.0)
+    od = make_on_demand(1, resources(2, 512, 1000, 10_000), 10.0,
+                        submit_time=5.0)
+    sim.submit(spot)
+    sim.submit(od)
+    sim.run(until=200.0)
+    assert spot.history[0].stop == pytest.approx(8.0)   # 5 + warning 3
+    assert od.history[0].start == pytest.approx(8.0)
+    assert spot.state is VmState.FINISHED
+
+
+def test_spot_finishing_during_warning_window():
+    sim = two_slot_host_sim(warning_time=10.0)
+    spot = make_spot(0, resources(2, 512, 1000, 10_000), 12.0,
+                     behavior=InterruptionBehavior.TERMINATE)
+    od = make_on_demand(1, resources(2, 512, 1000, 10_000), 10.0,
+                        submit_time=5.0)
+    sim.submit(spot)
+    sim.submit(od)
+    sim.run(until=200.0)
+    # spot needed 12 s and the warning ends at 15 — it finishes, not terminates
+    assert spot.state is VmState.FINISHED
+    assert od.state is VmState.FINISHED
+
+
+def test_spot_never_preempts_spot():
+    sim = two_slot_host_sim()
+    s1 = make_spot(0, resources(2, 512, 1000, 10_000), 50.0)
+    s2 = make_spot(1, resources(2, 512, 1000, 10_000), 10.0, submit_time=5.0,
+                   waiting_timeout=10.0)
+    sim.submit(s1)
+    sim.submit(s2)
+    sim.run(until=200.0)
+    assert s1.interruptions == 0
+    assert s2.state is VmState.FAILED  # waited out, never preempted s1
+
+
+def test_host_removal_interrupts_residents():
+    sim = MarketSimulator(policy=FirstFit(),
+                          config=SimConfig(strict_invariants=True))
+    h0 = sim.add_host(resources(4, 4096, 10_000, 1_000_000))
+    sim.add_host(resources(4, 4096, 10_000, 1_000_000))
+    spot = make_spot(0, resources(2, 512, 1000, 10_000), 50.0,
+                     behavior=InterruptionBehavior.HIBERNATE,
+                     hibernation_timeout=1000.0)
+    od = make_on_demand(1, resources(2, 512, 1000, 10_000), 50.0)
+    sim.submit(spot)
+    sim.submit(od)
+    sim.schedule_host_remove(10.0, h0)
+    sim.run(until=300.0)
+    # both were on host 0; after removal they must migrate to host 1 and finish
+    assert spot.state is VmState.FINISHED
+    assert od.state is VmState.FINISHED
+    assert spot.history[-1].host == 1
+    assert od.history[-1].host == 1

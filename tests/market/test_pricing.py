@@ -1,0 +1,56 @@
+"""Cost-accounting tests (beyond-paper pricing extension)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    FirstFit,
+    InterruptionBehavior,
+    MarketSimulator,
+    SimConfig,
+    VmState,
+    make_on_demand,
+    make_spot,
+    resources,
+)
+from repro.market import PriceModel, cost_stats
+
+
+def test_rate_linear_in_resources():
+    pm = PriceModel()
+    r1 = pm.rate(resources(1, 1024, 0, 0))
+    r2 = pm.rate(resources(2, 2048, 0, 0))
+    assert r2 == pytest.approx(2 * r1)
+
+
+def test_spot_discount_applied():
+    pm = PriceModel(spot_discount=0.3)
+    sim = MarketSimulator(policy=FirstFit(), config=SimConfig())
+    sim.add_host(resources(4, 8192, 10_000, 1_000_000))
+    spot = make_spot(0, resources(2, 1024, 100, 10_000), 3600.0)
+    od = make_on_demand(1, resources(2, 1024, 100, 10_000), 3600.0)
+    sim.submit(spot)
+    sim.submit(od)
+    sim.run(until=7200.0)
+    c_spot = pm.vm_cost(spot)
+    c_od = pm.vm_cost(od)
+    assert c_spot == pytest.approx(0.3 * c_od)
+    s = cost_stats([spot, od], pm)
+    assert s["savings"] == pytest.approx(0.7 * c_od)
+    assert s["wasted_cost"] == 0.0
+
+
+def test_terminated_spot_counts_as_waste():
+    pm = PriceModel()
+    sim = MarketSimulator(policy=FirstFit(), config=SimConfig())
+    sim.add_host(resources(2, 2048, 10_000, 1_000_000))
+    spot = make_spot(0, resources(2, 512, 1000, 10_000), 5000.0,
+                     behavior=InterruptionBehavior.TERMINATE)
+    od = make_on_demand(1, resources(2, 512, 1000, 10_000), 1000.0,
+                        submit_time=100.0)
+    sim.submit(spot)
+    sim.submit(od)
+    sim.run(until=10_000.0)
+    assert spot.state is VmState.TERMINATED
+    s = cost_stats(sim.all_vms(), pm)
+    assert s["wasted_cost"] > 0.0
+    assert s["wasted_cost"] == pytest.approx(pm.vm_cost(spot))

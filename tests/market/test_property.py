@@ -1,0 +1,128 @@
+"""Hypothesis property tests: simulator invariants under random workloads."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    InterruptionBehavior,
+    MarketSimulator,
+    SimConfig,
+    VmState,
+    make_on_demand,
+    make_spot,
+    make_policy,
+    resources,
+)
+
+TERMINAL = {VmState.FINISHED, VmState.TERMINATED, VmState.FAILED}
+
+
+def run_random_sim(seed, n_hosts, n_vms, policy_name, behavior, selector,
+                   warning):
+    rng = np.random.default_rng(seed)
+    sim = MarketSimulator(
+        policy=make_policy(policy_name),
+        config=SimConfig(strict_invariants=True, warning_time=warning,
+                         interruption_selector=selector))
+    for _ in range(n_hosts):
+        cpu = float(rng.choice([4, 8, 16]))
+        sim.add_host(resources(cpu, cpu * 2048, 1_000, 100_000))
+    for i in range(n_vms):
+        cpu = float(rng.choice([1, 2, 4]))
+        demand = resources(cpu, cpu * 1024, 100, 10_000)
+        dur = float(rng.uniform(5, 60))
+        t0 = float(rng.uniform(0, 80))
+        if rng.random() < 0.5:
+            sim.submit(make_spot(
+                i, demand, dur, behavior=behavior,
+                min_running_time=float(rng.uniform(0, 5)),
+                hibernation_timeout=float(rng.uniform(20, 100)),
+                waiting_timeout=float(rng.uniform(20, 100)),
+                submit_time=t0))
+        else:
+            sim.submit(make_on_demand(
+                i, demand, dur, waiting_timeout=float(rng.uniform(20, 100)),
+                submit_time=t0, persistent=bool(rng.random() < 0.9)))
+    sim.run(until=500.0)
+    return sim
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n_hosts=st.integers(1, 6),
+    n_vms=st.integers(1, 40),
+    policy_name=st.sampled_from(
+        ["first-fit", "best-fit", "hlem-vmp", "hlem-vmp-adjusted"]),
+    behavior=st.sampled_from(
+        [InterruptionBehavior.HIBERNATE, InterruptionBehavior.TERMINATE]),
+    selector=st.sampled_from(
+        ["list_order", "best_fit_remaining", "max_progress"]),
+    warning=st.sampled_from([0.0, 2.0]),
+)
+def test_simulation_invariants(seed, n_hosts, n_vms, policy_name, behavior,
+                               selector, warning):
+    sim = run_random_sim(seed, n_hosts, n_vms, policy_name, behavior,
+                         selector, warning)
+    # 1. host accounting consistent (strict_invariants already re-checked
+    #    per event); final check:
+    sim.pool.check_invariants()
+
+    for vm in sim.all_vms():
+        # 2. every VM reaches a terminal state by the horizon
+        assert vm.state in TERMINAL, (vm.id, vm.state)
+        # 3. execution intervals are well-formed, non-overlapping, ordered
+        for itv in vm.history:
+            assert itv.stop is not None and itv.stop >= itv.start - 1e-9
+        for a, b in zip(vm.history, vm.history[1:]):
+            assert b.start >= a.stop - 1e-9
+        # 4. work conservation: executed time == duration for FINISHED,
+        #    < duration (+eps) otherwise
+        executed = sum(itv.stop - itv.start for itv in vm.history)
+        if vm.state is VmState.FINISHED:
+            assert executed == pytest.approx(vm.duration, abs=1e-6)
+        else:
+            assert executed <= vm.duration + 1e-6
+        # 5. on-demand VMs are never interrupted by capacity reclamation
+        if not vm.is_spot:
+            assert vm.interruptions == 0
+        # 6. minimum running time respected for capacity interruptions
+    for ev in sim.metrics.interruption_events:
+        vm = sim.vms[ev.vm_id]
+        if ev.kind == "host-removed":
+            continue
+        # find the interval ending at the interruption
+        for itv in vm.history:
+            if itv.stop is not None and abs(itv.stop - ev.time) < 1e-9:
+                assert itv.stop - itv.start >= vm.min_running_time - \
+                    max(1e-9, 0.0) or vm.remaining <= 1e-9
+                break
+
+    # 7. interruption gaps non-negative
+    for vm in sim.all_vms():
+        for g in vm.interruption_gaps():
+            assert g >= -1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_policies_see_identical_workload_and_all_terminate(seed):
+    """Determinism: same seed -> same workload; every policy terminates it."""
+    results = {}
+    for pol in ["first-fit", "hlem-vmp"]:
+        sim = run_random_sim(seed, 4, 25, pol,
+                             InterruptionBehavior.HIBERNATE, "list_order",
+                             0.0)
+        results[pol] = sorted(
+            (v.id, v.duration, v.submit_time) for v in sim.all_vms())
+    assert results["first-fit"] == results["hlem-vmp"]
+
+
+def test_determinism_same_seed_same_metrics():
+    a = run_random_sim(42, 4, 30, "hlem-vmp-adjusted",
+                       InterruptionBehavior.HIBERNATE, "list_order", 0.0)
+    b = run_random_sim(42, 4, 30, "hlem-vmp-adjusted",
+                       InterruptionBehavior.HIBERNATE, "list_order", 0.0)
+    sa = a.metrics.spot_stats(a.vms)
+    sb = b.metrics.spot_stats(b.vms)
+    assert sa == sb

@@ -1,0 +1,56 @@
+"""Trace generation, CSV roundtrip, and trace-driven simulation."""
+import numpy as np
+import pytest
+
+from repro.core import VmState, make_policy
+from repro.market import (
+    TraceConfig,
+    generate_trace,
+    load_trace,
+    simulate_trace,
+    write_trace_csv,
+)
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return TraceConfig(seed=3, n_machines=12, sim_days=0.03, n_spot=40,
+                       load_per_machine=40.0, spot_durations_h=(0.2, 0.4))
+
+
+@pytest.fixture(scope="module")
+def trace(small_cfg):
+    return generate_trace(small_cfg)
+
+
+def test_trace_structure(trace, small_cfg):
+    adds = [e for e in trace.machine_events if e[2] == "add"]
+    assert len(adds) >= small_cfg.n_machines
+    kinds = {e[7] for e in trace.task_events}
+    assert kinds == {"od", "spot"}
+    times = [e[0] for e in trace.task_events]
+    assert times == sorted(times)
+
+
+def test_csv_roundtrip(trace, tmp_path):
+    write_trace_csv(trace, str(tmp_path))
+    tr2 = load_trace(str(tmp_path))
+    assert len(tr2.machine_events) == len(trace.machine_events)
+    assert len(tr2.task_events) == len(trace.task_events)
+    assert tr2.task_events[0][0] == pytest.approx(trace.task_events[0][0])
+
+
+def test_simulate_trace_runs_and_interrupts(trace, small_cfg):
+    sim, metrics = simulate_trace(
+        trace, policy=make_policy("hlem-vmp-adjusted"), cfg=small_cfg)
+    stats = metrics.spot_stats(sim.vms)
+    assert len(sim.vms) == len(trace.task_events)
+    assert stats["interruptions"] > 0          # contended by construction
+    sim.pool.check_invariants()
+
+
+def test_same_seed_same_trace(small_cfg):
+    a = generate_trace(small_cfg)
+    b = generate_trace(small_cfg)
+    assert a.task_events == b.task_events
+    assert a.machine_events == b.machine_events

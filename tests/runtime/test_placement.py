@@ -1,0 +1,33 @@
+"""Cluster-level HLEM-VMP job placement (the paper's algorithm as the
+launcher's scheduler)."""
+import numpy as np
+
+from repro.elastic import ClusterScheduler, JobSpec
+
+
+def test_jobs_placed_and_spread():
+    cs = ClusterScheduler(n_slices=4, warning_s=0.0)
+    for i in range(4):
+        cs.submit(JobSpec(f"train-{i}", chips=128, hbm_gb=2048,
+                          ici_gbps=10_000, host_ram_gb=6_000,
+                          duration_h=2.0, preemptible=True))
+    cs.run(until_h=0.01)
+    placement = cs.placement()
+    assert all(h >= 0 for h in placement.values())
+    # adjusted HLEM spreads spot jobs across slices
+    assert len(set(placement.values())) == 4
+
+
+def test_reserved_job_preempts_spot():
+    cs = ClusterScheduler(n_slices=1, warning_s=0.0)
+    cs.submit(JobSpec("spot-a", chips=200, hbm_gb=3000, ici_gbps=20_000,
+                      host_ram_gb=10_000, duration_h=10.0, preemptible=True))
+    cs.submit(JobSpec("prod", chips=200, hbm_gb=3000, ici_gbps=20_000,
+                      host_ram_gb=10_000, duration_h=1.0, preemptible=False),
+              at=3600.0)  # after min_running_time
+    cs.run(until_h=1.2)
+    states = cs.states()
+    assert states["prod"] in ("running", "finished")
+    assert states["spot-a"] in ("hibernated", "waiting", "running")
+    vm = cs._jobs["spot-a"]
+    assert vm.interruptions >= 1
