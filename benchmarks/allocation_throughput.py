@@ -1,37 +1,65 @@
-"""§VII-D1 — allocation scoring throughput (the paper\'s 1.5-day-per-
-simulated-day bottleneck): numpy oracle vs jitted JAX vs Pallas kernel
-(interpret), swept over fleet sizes."""
+"""§VII-D1 — allocation scoring throughput (the paper's 1.5-day-per-
+simulated-day bottleneck): numpy oracle vs fused pick vs jitted JAX vs Pallas
+kernel (interpret), plus the batched B×n scoring paths, swept over fleet
+sizes."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hlem_scores_np
-from repro.core.hlem import hlem_scores_jax
-from repro.kernels.hlem_score import hlem_score_pallas
+from repro.core.hlem import (
+    hlem_pick_np,
+    hlem_scores_batch_np,
+    hlem_scores_jax,
+)
 
 from .common import emit, timeit
 
 
 def run(quick: bool = True):
     rows = []
-    sizes = [100, 1000, 12600] if not quick else [100, 1000, 12600]
+    sizes = [100, 1000] if quick else [100, 1000, 12600]
     rng = np.random.default_rng(0)
     for n in sizes:
         free = rng.uniform(0, 100, (n, 4)).astype(np.float32)
         mask = rng.random(n) < 0.7
         spot = rng.uniform(0, 1, (n, 4)).astype(np.float32)
         t_np = timeit(lambda: hlem_scores_np(free, mask, spot, -0.5), n=9)
+        t_pick = timeit(lambda: hlem_pick_np(free, mask, spot, -0.5), n=9)
         fj = jnp.asarray(free); mj = jnp.asarray(mask); sj = jnp.asarray(spot)
         a = jnp.float32(-0.5)
         t_jax = timeit(
             lambda: hlem_scores_jax(fj, mj, sj, a).block_until_ready(), n=9)
         rows.append(emit(f"alloc/numpy_n{n}", t_np, ""))
+        rows.append(emit(f"alloc/pick_np_n{n}", t_pick,
+                         f"speedup_vs_numpy={t_np / t_pick:.1f}x"))
         rows.append(emit(f"alloc/jax_n{n}", t_jax,
                          f"speedup_vs_numpy={t_np / t_jax:.1f}x"))
+        # batched resubmission-queue scoring: B pending VMs in one pass
+        b = 8 if quick else 32
+        masks = rng.random((b, n)) < 0.7
+        alphas = np.where(rng.random(b) < 0.5, -0.5, 0.0)
+        t_loop = timeit(lambda: [hlem_scores_np(free, masks[i], spot,
+                                                alphas[i])
+                                 for i in range(b)], n=5)
+        t_batch = timeit(lambda: hlem_scores_batch_np(free, masks, spot,
+                                                      alphas), n=5)
+        rows.append(emit(f"alloc/batch_np_B{b}_n{n}", t_batch,
+                         f"speedup_vs_loop={t_loop / t_batch:.1f}x"))
         if n <= 1000:  # interpret mode is slow; correctness-scale only
+            from repro.kernels.hlem_score import (
+                hlem_score_pallas,
+                hlem_score_pallas_batch,
+            )
             t_pl = timeit(lambda: hlem_score_pallas(
                 fj, mj, sj, a, interpret=True).block_until_ready(), n=3)
             rows.append(emit(f"alloc/pallas_interp_n{n}", t_pl,
+                             "interpret-mode (CPU); TPU target"))
+            bj = jnp.asarray(masks[:4])
+            aj = jnp.asarray(alphas[:4], jnp.float32)
+            t_plb = timeit(lambda: hlem_score_pallas_batch(
+                fj, bj, sj, aj, interpret=True).block_until_ready(), n=3)
+            rows.append(emit(f"alloc/pallas_batch_interp_B4_n{n}", t_plb,
                              "interpret-mode (CPU); TPU target"))
     return rows

@@ -11,10 +11,12 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
                            "bench")
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> str:
-    row = f"{name},{us_per_call:.3f},{derived}"
-    print(row, flush=True)
-    return row
+def emit(name: str, us_per_call: float, derived: str = "") -> dict:
+    """Print one CSV row and return it as a dict (collected by run.py into
+    the machine-readable ``BENCH_<label>.json`` artifact)."""
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+    return {"name": name, "us_per_call": round(us_per_call, 3),
+            "derived": derived}
 
 
 def timeit(fn: Callable, n: int = 5, warmup: int = 1) -> float:

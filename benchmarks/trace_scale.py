@@ -3,13 +3,36 @@
 The paper runs 12.6k machines / 2.38M VMs / 200k spot for 2 days; offline we
 run a seeded synthetic trace with the same structure at configurable scale
 and report the paper's §VII-D2 statistics (completion/interruption mix,
-average and max interruption durations)."""
+average and max interruption durations).
+
+The headline row (``trace/hlem-vmp-adjusted``) is the cross-PR perf metric:
+us-per-allocation, best of ``REPS`` back-to-back runs (the shared CI/dev
+hosts are noisy; best-of-N is the stable comparison against the committed
+``BENCH_seed.json``).  A ``trace/per_vm_reference`` row runs the legacy
+one-VM-at-a-time resubmission path for an engine-level A/B at identical
+decisions."""
 from __future__ import annotations
+
+import time
 
 from repro.core import SimConfig, make_policy
 from repro.market import TraceConfig, generate_trace, simulate_trace
 
 from .common import emit
+
+REPS = 3
+
+
+def _one(tr, cfg, flush_mode: str):
+    best, sim, metrics = float("inf"), None, None
+    for _ in range(REPS):
+        t0 = time.time()
+        sim, metrics = simulate_trace(
+            tr, policy=make_policy("hlem-vmp-adjusted"), cfg=cfg,
+            sim_config=SimConfig(record_timeline=False,
+                                 flush_mode=flush_mode))
+        best = min(best, time.time() - t0)
+    return best, sim, metrics
 
 
 def run(quick: bool = True):
@@ -20,11 +43,7 @@ def run(quick: bool = True):
                       load_per_machine=30.0,
                       spot_durations_h=(1.0, 2.0) if quick else (20.0, 40.0))
     tr = generate_trace(cfg)
-    import time
-    t0 = time.time()
-    sim, metrics = simulate_trace(
-        tr, policy=make_policy("hlem-vmp-adjusted"), cfg=cfg)
-    wall = time.time() - t0
+    wall, sim, metrics = _one(tr, cfg, "batched")
     s = metrics.spot_stats(sim.vms)
     uninterrupted_pct = 100.0 * s["spot_finished_uninterrupted"] / max(
         cfg.n_spot, 1)
@@ -32,9 +51,18 @@ def run(quick: bool = True):
         "trace/hlem-vmp-adjusted",
         wall * 1e6 / max(metrics.allocations, 1),
         f"machines={cfg.n_machines};vms={len(sim.vms)};"
+        f"allocations={metrics.allocations};"
         f"interruptions={s['interruptions']};"
         f"uninterrupted_pct={uninterrupted_pct:.1f};"
         f"avg_interruption_s={s['avg_interruption_time']:.0f};"
         f"max_interruption_s={s['max_interruption_time']:.0f};"
         f"redeployed={s['spot_finished_after_interruption']}")]
+    wall_ref, sim_ref, metrics_ref = _one(tr, cfg, "per_vm")
+    s_ref = metrics_ref.spot_stats(sim_ref.vms)
+    match = (s_ref == s and metrics_ref.allocations == metrics.allocations)
+    rows.append(emit(
+        "trace/per_vm_reference",
+        wall_ref * 1e6 / max(metrics_ref.allocations, 1),
+        f"batched_speedup={wall_ref / max(wall, 1e-9):.2f}x;"
+        f"decisions_match={match}"))
     return rows

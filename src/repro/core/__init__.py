@@ -20,6 +20,8 @@ from .allocation import (
     make_policy,
 )
 from .hlem import (
+    hlem_scores_batch_jax,
+    hlem_scores_batch_np,
     hlem_scores_jax,
     hlem_scores_np,
     hlem_select_batch_jax,

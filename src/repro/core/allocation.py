@@ -7,15 +7,33 @@ interrupting (some of) its spot VMs — the simulator performs the actual victim
 selection and interruption (DynamicAllocation.spotAllocation in the paper).
 
 Spot-clearing feasibility counts only *interruptible* spot VMs: those past
-their minimum running time (§IV-B "minimum runtime must be enforced").
+their minimum running time (§IV-B "minimum runtime must be enforced") — the
+pool maintains that sum incrementally (see ``hosts.HostPool``), so both masks
+are single vectorized comparisons against cached arrays.
+
+Batched paths (clearing is never considered: queued VMs do not trigger new
+preemption cascades, see simulator._flush_pending):
+
+* ``find_first_direct(vms, pool)`` is the engine of the simulator's batched
+  flush — one feasibility matrix decides which VM places, then a single-row
+  scoring pass (bit-identical to the per-VM path) picks its host;
+* ``find_hosts_batch(vms, pool, now)`` decides ALL rows in one shot (one
+  feasibility matrix + one batched HLEM scoring pass) for offline/accelerator
+  use; rows match per-VM ``find_host`` up to float summation order (a
+  near-tie argmax can differ at the ulp level).
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Sequence, Tuple
 
 import numpy as np
 
-from .hlem import hlem_scores_np, hlem_select_jax, rsdiff_np
+from .hlem import (
+    hlem_pick_candidates_np,
+    hlem_pick_np,
+    hlem_scores_batch_np,
+    hlem_select_jax,
+)
 from .hosts import HostPool
 from .types import Vm
 
@@ -23,9 +41,9 @@ _EPS = 1e-9
 
 
 def direct_mask(vm: Vm, pool: HostPool) -> np.ndarray:
-    """Hosts that fit the demand right now."""
-    free = pool.free()
-    return pool.active_view() & np.all(free >= vm.demand - _EPS, axis=1)
+    """Hosts that fit the demand right now (fresh array; hot paths use
+    ``pool.direct_mask_into`` which is scratch-backed)."""
+    return pool.direct_mask_into(vm.demand).copy()
 
 
 def clearing_mask(vm: Vm, pool: HostPool, now: float) -> np.ndarray:
@@ -33,21 +51,12 @@ def clearing_mask(vm: Vm, pool: HostPool, now: float) -> np.ndarray:
     spot VMs (§VI-A: "checks the potential capacity of hosts if active spot
     instances were to be deallocated").
 
-    Vectorized pre-filter: ``free + spot_used`` upper-bounds the reclaimable
-    capacity, so only hosts passing that cheap test get the exact per-VM
-    minimum-running-time check.
+    One vectorized comparison against the pool's incrementally maintained
+    reclaimable-capacity cache; min-running-time expiries up to ``now`` are
+    folded in first.
     """
-    free = pool.free()
-    active = pool.active_view()
-    upper = active & np.all(free + pool.spot_used_view() >= vm.demand - _EPS, axis=1)
-    out = np.zeros_like(upper)
-    for hid in np.flatnonzero(upper):
-        reclaim = free[hid].copy()
-        for v in pool.residents[hid].values():
-            if v.interruptible(now):
-                reclaim += v.demand
-        out[hid] = np.all(reclaim >= vm.demand - _EPS)
-    return out
+    pool.refresh_reclaim(now)
+    return pool.clearing_mask_into(vm.demand).copy()
 
 
 def feasibility_masks(vm: Vm, pool: HostPool, now: float):
@@ -58,23 +67,74 @@ def feasibility_masks(vm: Vm, pool: HostPool, now: float):
 class AllocationPolicy:
     name = "abstract"
 
-    def find_host(
-        self, vm: Vm, pool: HostPool, now: float, allow_spot_clearing: bool
-    ) -> Tuple[int, bool]:
-        raise NotImplementedError
-
     def _pick(self, mask: np.ndarray, vm: Vm, pool: HostPool) -> int:
         raise NotImplementedError
 
-    def find_host(self, vm, pool, now, allow_spot_clearing):
-        hid = self._pick(direct_mask(vm, pool), vm, pool)
+    def find_host(
+        self, vm: Vm, pool: HostPool, now: float, allow_spot_clearing: bool
+    ) -> Tuple[int, bool]:
+        hid = self._pick(pool.direct_mask_into(vm.demand), vm, pool)
         if hid >= 0:
             return hid, False
         if allow_spot_clearing and not vm.is_spot:
-            hid = self._pick(clearing_mask(vm, pool, now), vm, pool)
+            pool.refresh_reclaim(now)
+            hid = self._pick(pool.clearing_mask_into(vm.demand), vm, pool)
             if hid >= 0:
                 return hid, True
         return -1, False
+
+    def _pick_direct(self, mask: np.ndarray, vm: Vm, pool: HostPool) -> int:
+        """Select from a direct-feasibility mask; >= 0 whenever mask is
+        non-empty.  Shared by ``find_host`` and the batched flush."""
+        return self._pick(mask, vm, pool)
+
+    def find_direct(self, vm: Vm, pool: HostPool) -> int:
+        """Direct placement only (no spot clearing): chosen host or -1."""
+        mask = pool.direct_mask_into(vm.demand)
+        if not mask.any():
+            return -1
+        return self._pick_direct(mask, vm, pool)
+
+    # -- batched path --------------------------------------------------------
+    def find_hosts_batch(
+        self, vms: Sequence[Vm], pool: HostPool, now: float
+    ) -> np.ndarray:
+        """(B,) chosen host per VM (-1 = none), direct placements only.
+
+        Row b matches ``find_host(vms[b], ...)`` against the same pool state
+        with spot clearing ignored (for HLEM, up to float summation order in
+        the batched scorer).  The result is only valid until the pool mutates
+        (committing one row invalidates the rest)."""
+        demands = np.stack([vm.demand for vm in vms])
+        feas = pool.direct_mask_batch(demands)
+        return self._pick_batch(feas, vms, pool)
+
+    def find_first_direct(
+        self, vms: Sequence[Vm], pool: HostPool
+    ) -> Tuple[int, int]:
+        """(index, host) of the first VM in ``vms`` that fits somewhere right
+        now, or (B, -1) if none does.
+
+        One vectorized feasibility matrix decides *which* VM places (a VM
+        places iff its feasibility row is non-empty); scoring then runs for
+        that single row only.  This is the engine of the batched flush: the
+        greedy commit loop re-decides only the suffix after each placement,
+        so scoring work is one pass per placement instead of per queued VM."""
+        nvm = len(vms)
+        demands = np.empty((nvm, vms[0].demand.shape[0]))
+        for b, vm in enumerate(vms):
+            demands[b] = vm.demand
+        feas = pool.direct_mask_batch(demands)
+        any_row = feas.any(axis=1)
+        for b in np.flatnonzero(any_row):
+            return int(b), self._pick_direct(feas[b], vms[b], pool)
+        return nvm, -1
+
+    def _pick_batch(self, feas: np.ndarray, vms: Sequence[Vm],
+                    pool: HostPool) -> np.ndarray:
+        # generic fallback: per-row _pick on the shared feasibility matrix
+        return np.array([self._pick(feas[b], vms[b], pool)
+                         for b in range(feas.shape[0])], dtype=np.int64)
 
 
 class FirstFit(AllocationPolicy):
@@ -85,6 +145,10 @@ class FirstFit(AllocationPolicy):
     def _pick(self, mask, vm, pool):
         idx = np.flatnonzero(mask)
         return int(idx[0]) if idx.size else -1
+
+    def _pick_batch(self, feas, vms, pool):
+        any_row = feas.any(axis=1)
+        return np.where(any_row, feas.argmax(axis=1), -1)
 
 
 class BestFit(AllocationPolicy):
@@ -98,6 +162,12 @@ class BestFit(AllocationPolicy):
         free_cpu = np.where(mask, pool.free()[:, 0], np.inf)
         return int(np.argmin(free_cpu))
 
+    def _pick_batch(self, feas, vms, pool):
+        any_row = feas.any(axis=1)
+        free_cpu = np.where(feas, pool.free()[None, :, 0], np.inf)
+        return np.where(any_row, free_cpu.argmin(axis=1), -1)
+
+
 class WorstFit(AllocationPolicy):
     """Host with the most free CPU (max headroom)."""
 
@@ -108,6 +178,11 @@ class WorstFit(AllocationPolicy):
             return -1
         free_cpu = np.where(mask, pool.free()[:, 0], -np.inf)
         return int(np.argmax(free_cpu))
+
+    def _pick_batch(self, feas, vms, pool):
+        any_row = feas.any(axis=1)
+        free_cpu = np.where(feas, pool.free()[None, :, 0], -np.inf)
+        return np.where(any_row, free_cpu.argmax(axis=1), -1)
 
 
 class HlemVmp(AllocationPolicy):
@@ -133,8 +208,8 @@ class HlemVmp(AllocationPolicy):
 
     # -- phase 1 ------------------------------------------------------------
     def _rsdiff_ok(self, vm: Vm, pool: HostPool) -> np.ndarray:
-        rs = rsdiff_np(vm.demand[0], pool.used_view()[:, 0],
-                       pool.totals()[:, 0], self.rc)
+        tot, util = pool.rsdiff_inputs()
+        rs = vm.demand[0] / tot - util * self.rc
         return rs > self.threshold
 
     # -- phases 2-3 ---------------------------------------------------------
@@ -147,36 +222,78 @@ class HlemVmp(AllocationPolicy):
         if not mask.any():
             return -1
         free = pool.free()
-        tot = np.maximum(pool.totals(), _EPS)
-        spot_frac = pool.spot_used_view() / tot
+        spot_frac = pool.spot_frac_view()
         alpha = self._alpha_for(vm)
         if self.backend == "jax":
             hid = int(hlem_select_jax(free, mask, spot_frac, np.float32(alpha)))
             return hid
-        scores = hlem_scores_np(free, mask, spot_frac, alpha)
-        return int(np.argmax(scores))
+        return hlem_pick_np(free, mask, spot_frac, alpha)
+
+    def _pick_direct(self, mask, vm, pool):
+        # primary candidate list: feasible AND RsDiff above threshold;
+        # relaxed to plain feasibility if that leaves no candidate
+        if self.backend == "jax":
+            rs_ok = self._rsdiff_ok(vm, pool)
+            hid = self._score_pick(mask & rs_ok, vm, pool)
+            if hid >= 0:
+                return hid
+            return self._score_pick(mask, vm, pool)
+        # numpy hot path: compress once, apply Eqs. 1-2 on the candidates only
+        return self._pick_direct_idx(np.flatnonzero(mask), vm, pool)
+
+    def _pick_direct_idx(self, idx: np.ndarray, vm, pool) -> int:
+        if idx.size == 0:
+            return -1
+        if idx.size == 1:
+            return int(idx[0])  # RsDiff filtering cannot change a 1-set pick
+        tot, util = pool.rsdiff_inputs()
+        rs_ok = (vm.demand[0] / tot[idx] - util[idx] * self.rc
+                 ) > self.threshold
+        cand = idx[rs_ok] if rs_ok.any() else idx
+        return hlem_pick_candidates_np(
+            pool.free(), cand, pool.spot_frac_view(), self._alpha_for(vm))
 
     def find_host(self, vm, pool, now, allow_spot_clearing):
-        direct = direct_mask(vm, pool)
-        rs_ok = self._rsdiff_ok(vm, pool)
-        # primary candidate list: feasible AND RsDiff above threshold
-        hid = self._score_pick(direct & rs_ok, vm, pool)
-        if hid >= 0:
-            return hid, False
-        # relaxed: feasible regardless of RsDiff
-        hid = self._score_pick(direct, vm, pool)
-        if hid >= 0:
-            return hid, False
+        if self.backend == "jax":
+            direct = pool.direct_mask_into(vm.demand)
+            if direct.any():
+                return self._pick_direct(direct, vm, pool), False
+        else:
+            idx = pool.direct_idx_into(vm.demand)
+            if idx.size:
+                return self._pick_direct_idx(idx, vm, pool), False
         # spot-clearing list (Algorithm 1, lines 8-10) — on-demand only
         if allow_spot_clearing and not vm.is_spot:
-            clearing = clearing_mask(vm, pool, now)
-            hid = self._score_pick(clearing & rs_ok, vm, pool)
-            if hid >= 0:
-                return hid, True
-            hid = self._score_pick(clearing, vm, pool)
-            if hid >= 0:
-                return hid, True
+            pool.refresh_reclaim(now)
+            clearing = pool.clearing_mask_into(vm.demand)
+            if clearing.any():
+                return self._pick_direct(clearing, vm, pool), True
         return -1, False
+
+    def find_direct(self, vm, pool):
+        if self.backend == "jax":
+            return super().find_direct(vm, pool)
+        return self._pick_direct_idx(pool.direct_idx_into(vm.demand), vm, pool)
+
+    def _pick_batch(self, feas, vms, pool):
+        B = feas.shape[0]
+        out = np.full(B, -1, dtype=np.int64)
+        rows = np.flatnonzero(feas.any(axis=1))
+        if rows.size == 0:
+            return out
+        # Eqs. 1-2 vectorized over the batch: rs[b, i] for every (VM, host)
+        tot, util = pool.rsdiff_inputs()
+        demands_cpu = np.array([vms[b].demand[0] for b in rows])
+        rs_ok = (demands_cpu[:, None] / tot[None] - util[None] * self.rc
+                 ) > self.threshold
+        primary = feas[rows] & rs_ok
+        use_primary = primary.any(axis=1)
+        masks = np.where(use_primary[:, None], primary, feas[rows])
+        alphas = np.array([self._alpha_for(vms[b]) for b in rows])
+        scores = hlem_scores_batch_np(
+            pool.free(), masks, pool.spot_frac_view(), alphas)
+        out[rows] = np.argmax(scores, axis=1)
+        return out
 
 
 class HlemVmpAdjusted(HlemVmp):

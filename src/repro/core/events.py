@@ -54,21 +54,27 @@ class Event:
 
 
 class EventQueue:
+    """Future event queue ordered by (time, priority, seq).
+
+    The heap holds plain key tuples (C-speed comparisons; the unique ``seq``
+    guarantees the Event itself is never compared) — at trace scale heap
+    sifting is a measurable slice of the event loop."""
+
     def __init__(self) -> None:
-        self._heap: list[Event] = []
+        self._heap: list[tuple] = []
         self._seq = itertools.count()
 
     def push(self, time: float, kind: EventKind, payload: Any = None,
              generation: int = -1) -> Event:
         ev = Event(time, PRIORITY[kind], next(self._seq), kind, payload, generation)
-        heapq.heappush(self._heap, ev)
+        heapq.heappush(self._heap, (ev.time, ev.priority, ev.seq, ev))
         return ev
 
     def pop(self) -> Optional[Event]:
-        return heapq.heappop(self._heap) if self._heap else None
+        return heapq.heappop(self._heap)[3] if self._heap else None
 
     def peek_time(self) -> Optional[float]:
-        return self._heap[0].time if self._heap else None
+        return self._heap[0][0] if self._heap else None
 
     def __len__(self) -> int:
         return len(self._heap)

@@ -27,6 +27,7 @@ describes ("distribute spot instances more evenly"); the magnitude is tunable.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -102,6 +103,160 @@ def hlem_select_np(free, mask, spot_frac=None, alpha=0.0) -> int:
     return int(np.argmax(hlem_scores_np(free, mask, spot_frac, alpha)))
 
 
+def hlem_pick_np(
+    free: np.ndarray,
+    mask: np.ndarray,
+    spot_frac: np.ndarray,
+    alpha: float = 0.0,
+) -> int:
+    """Fused single-VM selection: ``argmax(hlem_scores_np(...))`` without
+    materializing full-fleet score arrays.
+
+    Decision-identical to scoring + argmax: the standardization/entropy math
+    (Eqs. 3-9) runs on the *compressed* candidate rows — exactly the arrays
+    ``hlem_scores_np`` reduces over — and the compressed argmax maps back
+    through ``flatnonzero`` (order-preserving, so ties break to the same
+    host).  This is the allocation hot path's scorer; ``hlem_scores_np``
+    remains the readable oracle."""
+    idx = np.flatnonzero(mask)
+    return hlem_pick_candidates_np(free, idx, spot_frac, alpha)
+
+
+class _PickWorkspace:
+    """Preallocated scratch for the fused pick — the hot path allocates
+    nothing per call (arrays grow monotonically with the fleet)."""
+
+    def __init__(self):
+        self.cap = 0
+
+    def ensure(self, m: int, d: int) -> None:
+        if m <= self.cap:
+            return
+        cap = max(m, max(self.cap * 2, 64))
+        self.sel = np.empty((cap, d))
+        self.tmp = np.empty((cap, d))
+        self.tmp2 = np.empty((cap, d))
+        self.boolbuf = np.empty((cap, d), dtype=bool)
+        self.hs = np.empty(cap)
+        self.cap = cap
+
+
+_WS = _PickWorkspace()
+
+
+def hlem_pick_candidates_np(
+    free: np.ndarray,
+    idx: np.ndarray,
+    spot_frac: np.ndarray,
+    alpha: float = 0.0,
+) -> int:
+    """:func:`hlem_pick_np` over an explicit candidate-id array (the policy
+    layer already holds ``flatnonzero`` of its masks).
+
+    Runs the oracle's exact operation sequence on compressed candidate rows
+    with preallocated workspace buffers — values (and therefore the argmax
+    decision, ties included) match scoring + argmax bit for bit."""
+    m = idx.size
+    if m == 0:
+        return -1
+    if m == 1:
+        return int(idx[0])  # degenerate candidate set: any weighting agrees
+    free = np.asarray(free, dtype=np.float64)
+    d = free.shape[1]
+    _WS.ensure(m, d)
+    sel = np.take(free, idx, axis=0, out=_WS.sel[:m])
+    lo, hi = sel.min(axis=0), sel.max(axis=0)
+    span = hi - lo
+    nondegen = span > _EPS
+    c_std = _WS.tmp[:m]
+    np.subtract(sel, lo, out=c_std)
+    if nondegen.all():
+        np.divide(c_std, span, out=c_std)
+    else:
+        if alpha == 0.0 and not nondegen.any():
+            # all dims degenerate: HS identical for every candidate and the
+            # adjustment is off, so the argmax tie-breaks to the first
+            return int(idx[0])
+        np.divide(c_std, np.where(nondegen, span, 1.0), out=c_std)
+        np.copyto(c_std, 1.0, where=~nondegen)
+    # each column sums to >= 1 (its max candidate standardizes to 1.0, or the
+    # degenerate all-ones case sums to m), so the col > eps guard of the
+    # oracle never fires and plain division is value-identical
+    col = c_std.sum(axis=0)
+    # p reuses the gather buffer (sel is not read past this point); the
+    # entropy chain below computes where(p > eps, p*log(max(p, eps)), 0)
+    # elementwise-identically with zero allocation
+    p = np.divide(c_std, col, out=_WS.sel[:m])
+    small = np.less_equal(p, _EPS, out=_WS.boolbuf[:m])
+    plogp = np.maximum(p, _EPS, out=_WS.tmp2[:m])
+    np.log(plogp, out=plogp)
+    np.multiply(p, plogp, out=plogp)
+    np.copyto(plogp, 0.0, where=small)
+    k = 1.0 / math.log(m)
+    e = -k * plogp.sum(axis=0)
+    g = 1.0 - e
+    gsum = g.sum()
+    w = g / gsum if gsum > _EPS else np.full(d, 1.0 / d)
+    hs = np.dot(c_std, w, out=_WS.hs[:m])
+    if alpha != 0.0:
+        sl = np.take(np.asarray(spot_frac, dtype=np.float64), idx, axis=0) @ w
+        hs = hs * (1.0 + alpha * sl)
+    return int(idx[np.argmax(hs)])
+
+
+def hlem_scores_batch_np(
+    free: np.ndarray,          # (n, D) shared host state
+    masks: np.ndarray,         # (B, n) per-VM candidate masks
+    spot_frac: np.ndarray,     # (n, D)
+    alphas: np.ndarray | float = 0.0,   # (B,) or scalar per-VM adjustment
+) -> np.ndarray:               # (B, n) scores, -inf outside each row's mask
+    """Score B pending VMs against the same host state in one pass.
+
+    Row b equals ``hlem_scores_np(free, masks[b], spot_frac, alphas[b])`` up
+    to summation order (each row's entropy weights are derived from its own
+    candidate set, Eqs. 3-9; Eq. 11 applied with the row's alpha).  This is
+    the oracle for the batched Pallas kernel and the engine of the batched
+    resubmission path.
+    """
+    free = np.asarray(free, dtype=np.float64)
+    masks = np.asarray(masks, dtype=bool)
+    spot_frac = np.asarray(spot_frac, dtype=np.float64)
+    b, n = masks.shape
+    d = free.shape[1]
+    alphas = np.broadcast_to(np.asarray(alphas, dtype=np.float64), (b,))
+    maskf = masks[..., None].astype(np.float64)        # (B, n, 1)
+    m = masks.sum(axis=1).astype(np.float64)           # (B,) candidate counts
+
+    # Eq. 3 — per-row min-max standardization over each candidate set
+    lo = np.where(masks[..., None], free[None], np.inf).min(axis=1)   # (B, D)
+    hi = np.where(masks[..., None], free[None], -np.inf).max(axis=1)
+    span = hi - lo
+    degen = span <= _EPS
+    c = np.where(degen[:, None, :], 1.0,
+                 (free[None] - lo[:, None]) / np.where(degen, 1.0, span)[:, None])
+    c = c * maskf
+    # Eq. 4 — proportions over each row's candidates
+    col = c.sum(axis=1)                                # (B, D)
+    p = np.where(col[:, None] > _EPS,
+                 c / np.where(col > _EPS, col, 1.0)[:, None],
+                 maskf / np.maximum(m, 1.0)[:, None, None])
+    p = p * maskf
+    # Eqs. 5-6 — entropy with k = 1/ln(m); m <= 1 degenerates to zero entropy
+    k = np.where(m > 1.0, 1.0 / np.log(np.maximum(m, 2.0)), 0.0)
+    plogp = np.where(p > _EPS, p * np.log(np.maximum(p, _EPS)), 0.0)
+    e = -k[:, None] * plogp.sum(axis=1)                # (B, D)
+    # Eqs. 7-8 — variation factors and weights
+    g = 1.0 - e
+    gsum = g.sum(axis=1)
+    w = np.where(gsum[:, None] > _EPS,
+                 g / np.where(gsum > _EPS, gsum, 1.0)[:, None], 1.0 / d)
+    # Eqs. 9-11
+    hs = np.einsum("bnd,bd->bn", c, w)
+    sl = np.einsum("nd,bd->bn", spot_frac, w)
+    hs = hs * (1.0 + alphas[:, None] * sl)
+    return np.where(masks, hs, -np.inf)
+
+
 # ---------------------------------------------------------------------------
 # JAX (jitted, mask-based — fixed shapes, no data-dependent control flow)
 # ---------------------------------------------------------------------------
@@ -152,9 +307,20 @@ def hlem_select_jax(free, mask, spot_frac, alpha) -> jax.Array:
     return jnp.where(jnp.any(mask), idx, -1)
 
 
-# Batched variant: score B pending VM demands against the same host state in one
-# call (used when flushing the resubmission queue) — a beyond-CloudSim
+# Batched variants: score B pending VM demands against the same host state in
+# one call (used when flushing the resubmission queue) — a beyond-CloudSim
 # vectorization enabled by the masked formulation.
+@jax.jit
+def hlem_scores_batch_jax(
+    free: jax.Array,        # (n, D) shared host state
+    masks: jax.Array,       # (B, n) per-VM feasibility masks
+    spot_frac: jax.Array,   # (n, D)
+    alphas: jax.Array,      # (B,) per-VM adjustment
+) -> jax.Array:             # (B, n) scores, -big outside each row's mask
+    fn = jax.vmap(lambda m, a: hlem_scores_jax(free, m, spot_frac, a))
+    return fn(masks, alphas)
+
+
 @jax.jit
 def hlem_select_batch_jax(
     free: jax.Array,        # (n, D)

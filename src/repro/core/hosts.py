@@ -1,23 +1,51 @@
-"""Vectorized host pool.
+"""Vectorized host pool with incremental accounting.
 
 Host state lives in dense numpy arrays (capacity / used / spot-used per
 resource dimension) so allocation policies can score *all* hosts in one
 vectorized pass — this is the JAX/TPU-native replacement for CloudSim Plus's
 per-host Java object iteration (the paper reports 1.5 real days per simulated
 day, bottlenecked on per-entity updates; §VII-D1).
+
+Incremental accounting (the trace-scale hot path):
+
+* ``free`` / ``spot_frac`` / cpu-utilization caches are updated **in place**
+  on every ``place``/``release``/host add/remove/update, so feasibility masks
+  and HLEM scoring read cached rows instead of recomputing ``total - used``
+  for the whole fleet per call.
+* Reclaimable spot capacity (what ``clearing_mask`` needs) is maintained as a
+  per-host running sum over *interruptible* resident spot VMs.  Minimum
+  running time (§IV-B) is handled by a time-threshold index: a VM placed with
+  ``min_running_time > 0`` sits in a ready-time heap and is folded into the
+  reclaimable sum by :meth:`refresh_reclaim` once its threshold passes — no
+  per-call Python walk over residents.
+* A monotone *gain log* records every host whose free capacity increased
+  (release / add / reactivate / capacity update).  The simulator's
+  resubmission queue uses it to skip VMs whose placement can't possibly have
+  become feasible since their last failed attempt.
+
+Contract: a spot VM's ``min_running_time`` must be set **before** it is
+placed; the reclaim index snapshots it at placement time.
+
+Every mutation bumps ``epoch``; ``check_invariants`` cross-checks all cached
+arrays against from-scratch recomputation.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Optional, Set
+import heapq
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .types import N_DIMS, Vm
+from .types import N_DIMS, Vm, VmState, VmType
+
+_EPS = 1e-9          # feasibility slack (matches the allocation layer)
+_EPS_RS = 1e-12      # RsDiff clamp (matches repro.core.hlem._EPS)
 
 
 class HostPool:
     """Dense, growable pool of hosts supporting dynamic add/remove (trace
-    machine events) and spot/on-demand accounting."""
+    machine events), spot/on-demand accounting, and O(1)-amortized cached
+    views for the allocation hot path."""
 
     def __init__(self, capacity_hint: int = 64):
         n = max(capacity_hint, 1)
@@ -28,6 +56,38 @@ class HostPool:
         self.n_hosts = 0
         # host -> set of resident VM ids, in insertion order (dict preserves it)
         self.residents: List[Dict[int, Vm]] = [dict() for _ in range(n)]
+        # -- incremental caches (epoch-stamped) ------------------------------
+        self.epoch = 0
+        #: total - used where active, 0 elsewhere; updated row-wise in place
+        self._free = np.zeros((n, N_DIMS), dtype=np.float64)
+        #: spot_used / max(total, 1e-9) per (host, dim)
+        self._spot_frac = np.zeros((n, N_DIMS), dtype=np.float64)
+        #: max(total, 1e-9) — the spot_frac denominator, refreshed only when
+        #: capacity changes (place/release divide by the cached row)
+        self._tot_clamped = np.full((n, N_DIMS), _EPS, dtype=np.float64)
+        #: max(total_cpu, 1e-12) and used_cpu / that — RsDiff inputs (Eq. 1)
+        self._rs_tot_cpu = np.full(n, _EPS_RS, dtype=np.float64)
+        self._rs_util_cpu = np.zeros(n, dtype=np.float64)
+        #: per-host sum of demands of interruptible-now resident spot VMs
+        self._reclaim_ready = np.zeros((n, N_DIMS), dtype=np.float64)
+        # min-running-time index: vm_id -> (ready_time, hid) awaiting expiry,
+        # vm_id -> hid once folded into _reclaim_ready; heap entries are
+        # lazily invalidated against _reclaim_pending.
+        self._reclaim_pending: Dict[int, Tuple[float, int]] = {}
+        self._reclaim_counted: Dict[int, int] = {}
+        self._reclaim_heap: List[Tuple[float, int]] = []
+        #: log of hosts whose free capacity increased; consumers remember a
+        #: position (``gain_pos``) and later scan the suffix.  Positions are
+        #: absolute: ``_gain_base`` counts entries dropped by
+        #: :meth:`compact_gain_log`, which bounds memory over long runs.
+        self.gain_log: List[int] = []
+        self._gain_base = 0
+        # scratch buffers for zero-allocation mask computation
+        self._scratch_ge = np.zeros((n, N_DIMS), dtype=bool)
+        self._scratch_row = np.zeros(n, dtype=bool)
+        self._scratch_row2 = np.zeros(n, dtype=bool)
+        self._scratch_sum = np.zeros((n, N_DIMS), dtype=np.float64)
+        self._scratch_dm = np.zeros(N_DIMS, dtype=np.float64)
 
     # -- structural ---------------------------------------------------------
     def _grow(self, need: int) -> None:
@@ -36,11 +96,47 @@ class HostPool:
             return
         new_cap = max(need, cap * 2)
         pad = new_cap - cap
-        self.total = np.vstack([self.total, np.zeros((pad, N_DIMS))])
-        self.used = np.vstack([self.used, np.zeros((pad, N_DIMS))])
-        self.spot_used = np.vstack([self.spot_used, np.zeros((pad, N_DIMS))])
+
+        def vpad(a, fill=0.0):
+            return np.vstack([a, np.full((pad, N_DIMS), fill)])
+
+        self.total = vpad(self.total)
+        self.used = vpad(self.used)
+        self.spot_used = vpad(self.spot_used)
         self.active = np.concatenate([self.active, np.zeros(pad, dtype=bool)])
         self.residents.extend(dict() for _ in range(pad))
+        self._free = vpad(self._free)
+        self._spot_frac = vpad(self._spot_frac)
+        self._tot_clamped = vpad(self._tot_clamped, _EPS)
+        self._rs_tot_cpu = np.concatenate(
+            [self._rs_tot_cpu, np.full(pad, _EPS_RS)])
+        self._rs_util_cpu = np.concatenate(
+            [self._rs_util_cpu, np.zeros(pad)])
+        self._reclaim_ready = vpad(self._reclaim_ready)
+        self._scratch_ge = np.zeros((new_cap, N_DIMS), dtype=bool)
+        self._scratch_row = np.zeros(new_cap, dtype=bool)
+        self._scratch_row2 = np.zeros(new_cap, dtype=bool)
+        self._scratch_sum = np.zeros((new_cap, N_DIMS), dtype=np.float64)
+
+    def _refresh_static_row(self, hid: int) -> None:
+        """Recompute capacity-derived caches (host add / capacity update)."""
+        np.maximum(self.total[hid], _EPS, out=self._tot_clamped[hid])
+        self._rs_tot_cpu[hid] = max(float(self.total[hid, 0]), _EPS_RS)
+
+    def _refresh_row(self, hid: int, spot_changed: bool = True) -> None:
+        """Recompute load-derived caches for one host (place/release path)."""
+        if self.active[hid]:
+            np.subtract(self.total[hid], self.used[hid], out=self._free[hid])
+        else:
+            self._free[hid] = 0.0
+        if spot_changed:
+            np.divide(self.spot_used[hid], self._tot_clamped[hid],
+                      out=self._spot_frac[hid])
+        self._rs_util_cpu[hid] = self.used[hid, 0] / self._rs_tot_cpu[hid]
+
+    def _log_gain(self, hid: int) -> None:
+        if self.active[hid]:
+            self.gain_log.append(hid)
 
     def add_host(self, capacity: np.ndarray) -> int:
         """Register a new host; returns its id."""
@@ -52,20 +148,34 @@ class HostPool:
         self.active[hid] = True
         self.residents[hid] = dict()
         self.n_hosts += 1
+        self._reclaim_ready[hid] = 0.0
+        self._refresh_static_row(hid)
+        self._refresh_row(hid)
+        self._log_gain(hid)
+        self.epoch += 1
         return hid
 
     def update_host(self, hid: int, capacity: np.ndarray) -> None:
         """Trace 'UPDATE' machine event — change host capacity in place."""
         self.total[hid] = np.asarray(capacity, dtype=np.float64)
+        self._refresh_static_row(hid)
+        self._refresh_row(hid)
+        self._log_gain(hid)  # capacity may have grown; rechecks are cheap
+        self.epoch += 1
 
     def remove_host(self, hid: int) -> List[Vm]:
         """Deactivate a host; returns resident VMs (caller decides their fate)."""
         victims = list(self.residents[hid].values())
         self.active[hid] = False
+        self._refresh_row(hid)
+        self.epoch += 1
         return victims
 
     def reactivate_host(self, hid: int) -> None:
         self.active[hid] = True
+        self._refresh_row(hid)
+        self._log_gain(hid)
+        self.epoch += 1
 
     # -- views --------------------------------------------------------------
     @property
@@ -73,9 +183,14 @@ class HostPool:
         return self.n_hosts
 
     def free(self) -> np.ndarray:
-        """(n_hosts, 4) free capacity (inactive hosts report 0 free)."""
-        f = self.total[: self.n] - self.used[: self.n]
-        return np.where(self.active[: self.n, None], f, 0.0)
+        """(n_hosts, 4) free capacity (inactive hosts report 0 free).
+
+        Returns a cached read-only-by-convention view; do not mutate."""
+        return self._free[: self.n]
+
+    def spot_frac_view(self) -> np.ndarray:
+        """(n_hosts, 4) spot_used / total (cached)."""
+        return self._spot_frac[: self.n]
 
     def totals(self) -> np.ndarray:
         return self.total[: self.n]
@@ -89,46 +204,190 @@ class HostPool:
     def active_view(self) -> np.ndarray:
         return self.active[: self.n]
 
+    def reclaim_ready_view(self) -> np.ndarray:
+        """(n_hosts, 4) reclaimable (interruptible-now) spot capacity.
+
+        Call :meth:`refresh_reclaim` first so min-running-time expiries up to
+        ``now`` are folded in."""
+        return self._reclaim_ready[: self.n]
+
     def cpu_utilization(self) -> np.ndarray:
         tot = self.total[: self.n, 0]
         return np.divide(self.used[: self.n, 0], tot, out=np.zeros(self.n), where=tot > 0)
+
+    def rsdiff_inputs(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Cached (clamped cpu totals, cpu utilization) for Eq. 1."""
+        return self._rs_tot_cpu[: self.n], self._rs_util_cpu[: self.n]
+
+    # -- feasibility masks (scratch-backed, zero per-call allocation) --------
+    def direct_mask_into(self, demand: np.ndarray) -> np.ndarray:
+        """Hosts that fit ``demand`` right now.  Returns a view into a scratch
+        buffer — consume (or copy) before the next ``*_mask_into`` call."""
+        n = self.n
+        np.subtract(demand, _EPS, out=self._scratch_dm)
+        np.greater_equal(self._free[:n], self._scratch_dm,
+                         out=self._scratch_ge[:n])
+        np.logical_and.reduce(self._scratch_ge[:n], axis=1,
+                              out=self._scratch_row[:n])
+        np.logical_and(self._scratch_row[:n], self.active[:n],
+                       out=self._scratch_row[:n])
+        return self._scratch_row[:n]
+
+    def clearing_mask_into(self, demand: np.ndarray) -> np.ndarray:
+        """Hosts that fit ``demand`` after deallocating interruptible spot VMs
+        (§VI-A).  Uses the cached reclaimable sums; callers must
+        :meth:`refresh_reclaim` first.  Scratch-backed like
+        :meth:`direct_mask_into` (separate buffer, so one direct + one
+        clearing mask may be alive simultaneously)."""
+        n = self.n
+        np.add(self._free[:n], self._reclaim_ready[:n],
+               out=self._scratch_sum[:n])
+        np.greater_equal(self._scratch_sum[:n], demand - _EPS,
+                         out=self._scratch_ge[:n])
+        np.logical_and.reduce(self._scratch_ge[:n], axis=1,
+                              out=self._scratch_row2[:n])
+        np.logical_and(self._scratch_row2[:n], self.active[:n],
+                       out=self._scratch_row2[:n])
+        return self._scratch_row2[:n]
+
+    def direct_idx_into(self, demand: np.ndarray) -> np.ndarray:
+        """Candidate host ids fitting ``demand`` (fresh index array; one
+        C-level nonzero pass over the scratch mask)."""
+        return self.direct_mask_into(demand).nonzero()[0]
+
+    def direct_mask_batch(self, demands: np.ndarray) -> np.ndarray:
+        """(B, n) feasibility matrix for a batch of demands — one vectorized
+        comparison for the whole resubmission queue."""
+        demands = np.asarray(demands, dtype=np.float64)
+        n = self.n
+        ok = np.all(self._free[None, :n] >= demands[:, None] - _EPS, axis=2)
+        return ok & self.active[:n][None]
 
     # -- allocation ---------------------------------------------------------
     def fits(self, hid: int, demand: np.ndarray) -> bool:
         return bool(
             self.active[hid]
-            and np.all(self.total[hid] - self.used[hid] >= demand - 1e-9)
+            and np.all(self.total[hid] - self.used[hid] >= demand - _EPS)
         )
 
-    def place(self, vm: Vm, hid: int) -> None:
-        assert self.fits(hid, vm.demand), f"host {hid} cannot fit vm {vm.id}"
+    def fits_fast(self, hid: int, demand: np.ndarray) -> bool:
+        """Same predicate as :meth:`fits` via the cached free row and scalar
+        compares — the gain-log memo filter calls this per (VM, gained host),
+        so it must not pay vectorized-numpy call overhead."""
+        if not self.active[hid]:
+            return False
+        f = self._free[hid]
+        for k in range(N_DIMS):
+            if f[k] < demand[k] - _EPS:
+                return False
+        return True
+
+    def place(self, vm: Vm, hid: int, now: float = 0.0) -> None:
+        assert self.fits_fast(hid, vm.demand), \
+            f"host {hid} cannot fit vm {vm.id}"
+        spot = vm.vm_type is VmType.SPOT
         self.used[hid] += vm.demand
-        if vm.is_spot:
+        if spot:
             self.spot_used[hid] += vm.demand
+            self._register_reclaim(vm, hid, now)
         self.residents[hid][vm.id] = vm
         vm.host = hid
+        self._refresh_row(hid, spot_changed=spot)
+        self.epoch += 1
 
     def release(self, vm: Vm) -> None:
         hid = vm.host
         assert hid >= 0 and vm.id in self.residents[hid], (
             f"vm {vm.id} not resident on host {hid}"
         )
+        spot = vm.vm_type is VmType.SPOT
         self.used[hid] -= vm.demand
-        if vm.is_spot:
-            self.spot_used[hid] -= vm.demand
         # numerical hygiene: clamp tiny negatives from float accumulation
-        np.clip(self.used[hid], 0.0, None, out=self.used[hid])
-        np.clip(self.spot_used[hid], 0.0, None, out=self.spot_used[hid])
+        np.maximum(self.used[hid], 0.0, out=self.used[hid])
+        if spot:
+            self.spot_used[hid] -= vm.demand
+            self._drop_reclaim(vm, hid)
+            np.maximum(self.spot_used[hid], 0.0, out=self.spot_used[hid])
         del self.residents[hid][vm.id]
         vm.host = -1
+        self._refresh_row(hid, spot_changed=spot)
+        self._log_gain(hid)
+        self.epoch += 1
 
     def spot_vms_on(self, hid: int) -> List[Vm]:
         """Resident spot VMs in insertion order (CloudSim host-VM-list order)."""
         return [v for v in self.residents[hid].values() if v.is_spot]
 
+    # -- reclaimable-capacity index ------------------------------------------
+    def _register_reclaim(self, vm: Vm, hid: int, now: float) -> None:
+        if vm.min_running_time <= 0.0:
+            self._reclaim_ready[hid] += vm.demand
+            self._reclaim_counted[vm.id] = hid
+        else:
+            ready = now + vm.min_running_time
+            self._reclaim_pending[vm.id] = (ready, hid)
+            heapq.heappush(self._reclaim_heap, (ready, vm.id))
+
+    def _drop_reclaim(self, vm: Vm, hid: int) -> None:
+        counted = self._reclaim_counted.pop(vm.id, None)
+        if counted is not None:
+            self._reclaim_ready[hid] -= vm.demand
+            np.clip(self._reclaim_ready[hid], 0.0, None,
+                    out=self._reclaim_ready[hid])
+        else:
+            self._reclaim_pending.pop(vm.id, None)
+
+    def mark_uninterruptible(self, vm: Vm) -> None:
+        """Remove a still-resident spot VM from the reclaimable pool (it has
+        left RUNNING, e.g. received an interruption warning)."""
+        if vm.host >= 0:
+            self._drop_reclaim(vm, vm.host)
+            self.epoch += 1
+
+    def refresh_reclaim(self, now: float) -> None:
+        """Fold min-running-time expiries up to ``now`` into the reclaimable
+        sums.  O(expired log n); O(1) when nothing expired."""
+        heap = self._reclaim_heap
+        while heap and heap[0][0] <= now:
+            ready, vid = heapq.heappop(heap)
+            ent = self._reclaim_pending.get(vid)
+            if ent is None or ent[0] != ready:
+                continue  # stale heap entry (VM released / re-placed)
+            del self._reclaim_pending[vid]
+            hid = ent[1]
+            vm = self.residents[hid].get(vid)
+            if vm is None or not vm.is_spot or vm.state is not VmState.RUNNING:
+                continue
+            self._reclaim_ready[hid] += vm.demand
+            self._reclaim_counted[vid] = hid
+            self.epoch += 1
+
+    # -- gain log ------------------------------------------------------------
+    def gain_pos(self) -> int:
+        """Current (absolute) position in the gain log; pass to
+        :meth:`gained_since`."""
+        return self._gain_base + len(self.gain_log)
+
+    def gained_since(self, pos: int) -> List[int]:
+        """Host ids whose free capacity increased since ``pos``."""
+        start = pos - self._gain_base
+        if start <= 0:
+            return self.gain_log[:]
+        return self.gain_log[start:]
+
+    def compact_gain_log(self, min_live_pos: int) -> None:
+        """Drop log entries before ``min_live_pos`` (the smallest position any
+        consumer still holds).  Keeps memory bounded over trace-length runs;
+        absolute positions remain valid."""
+        drop = min(min_live_pos - self._gain_base, len(self.gain_log))
+        if drop > 0:
+            del self.gain_log[:drop]
+            self._gain_base += drop
+
     # -- invariant checks (used by property tests) ---------------------------
-    def check_invariants(self) -> None:
-        for hid in range(self.n):
+    def check_invariants(self, now: Optional[float] = None) -> None:
+        n = self.n
+        for hid in range(n):
             res = sum(
                 (v.demand for v in self.residents[hid].values()),
                 np.zeros(N_DIMS),
@@ -144,3 +403,40 @@ class HostPool:
             assert np.all(self.used[hid] <= self.total[hid] + 1e-6), (
                 f"host {hid} over capacity: {self.used[hid]} > {self.total[hid]}"
             )
+        # cached arrays vs from-scratch recomputation
+        f = np.where(self.active[:n, None], self.total[:n] - self.used[:n], 0.0)
+        assert np.allclose(f, self._free[:n], atol=1e-9), "stale free cache"
+        sf = self.spot_used[:n] / np.maximum(self.total[:n], _EPS)
+        assert np.allclose(sf, self._spot_frac[:n], atol=1e-12), (
+            "stale spot_frac cache")
+        tc = np.maximum(self.total[:n, 0], _EPS_RS)
+        assert np.allclose(tc, self._rs_tot_cpu[:n])
+        assert np.allclose(self.used[:n, 0] / tc, self._rs_util_cpu[:n])
+        # reclaim index: every counted VM is a resident spot VM; per-host sums
+        # match; every RUNNING resident spot VM is tracked exactly once
+        ready_sum = np.zeros((n, N_DIMS))
+        for vid, hid in self._reclaim_counted.items():
+            vm = self.residents[hid].get(vid)
+            assert vm is not None and vm.is_spot, (
+                f"reclaim-counted vm {vid} not a resident spot VM of {hid}")
+            ready_sum[hid] += vm.demand
+        assert np.allclose(ready_sum, self._reclaim_ready[:n], atol=1e-6), (
+            "stale reclaim_ready cache")
+        for hid in range(n):
+            for vm in self.residents[hid].values():
+                if vm.is_spot and vm.state is VmState.RUNNING:
+                    assert (vm.id in self._reclaim_counted
+                            or vm.id in self._reclaim_pending), (
+                        f"running spot vm {vm.id} missing from reclaim index")
+        if now is not None:
+            self.refresh_reclaim(now)
+            for hid in range(n):
+                expect = sum(
+                    (v.demand for v in self.residents[hid].values()
+                     if v.interruptible(now)),
+                    np.zeros(N_DIMS),
+                )
+                assert np.allclose(expect, self._reclaim_ready[hid],
+                                   atol=1e-6), (
+                    f"host {hid}: reclaimable {self._reclaim_ready[hid]} != "
+                    f"interruptible sum {expect} at t={now}")

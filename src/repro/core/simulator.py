@@ -14,11 +14,20 @@ Design notes vs. the Java original:
 * Resubmission is triggered on every deallocation (the paper's
   onHostDeallocationListener variant) in the order: waiting on-demand →
   waiting spot → hibernated spot (configurable).
+
+Trace-scale performance (§VII-D1): the resubmission pass is *batched* —
+one feasibility matrix and one batched scoring call decide the whole queue,
+and a gain-log memo skips VMs whose placement cannot have become feasible
+since their last failed attempt (only hosts whose free capacity has since
+*increased* need rechecking).  ``SimConfig.flush_mode = "per_vm"`` selects the
+original one-VM-at-a-time loop, kept as the decision-identical reference the
+batched path is regression-tested against.
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -45,6 +54,7 @@ class SimConfig:
     max_time: float = float("inf")
     record_timeline: bool = True
     strict_invariants: bool = False        # re-check host accounting each event
+    flush_mode: str = "batched"            # | "per_vm" (legacy reference path)
 
 
 class MarketSimulator:
@@ -54,6 +64,7 @@ class MarketSimulator:
                  config: Optional[SimConfig] = None):
         self.policy = policy or FirstFit()
         self.config = config or SimConfig()
+        assert self.config.flush_mode in ("batched", "per_vm")
         self.pool = HostPool()
         self.queue = EventQueue()
         self.vms: Dict[int, Vm] = {}
@@ -64,6 +75,9 @@ class MarketSimulator:
         self._hibernated: Dict[int, Vm] = {}
         # hosts with a pending interruption commit: host -> reserved VM ids
         self._pending_victims: Dict[int, List[int]] = {}
+        # gain-log position at a queued VM's last failed full placement test;
+        # absent = never tested against current membership (full check needed)
+        self._retry_pos: Dict[int, int] = {}
         self.listeners: Dict[str, List[Callable]] = {}
         self._next_vm_id = 0
 
@@ -79,6 +93,8 @@ class MarketSimulator:
         self.listeners.setdefault(event_name, []).append(fn)
 
     def _emit(self, name: str, **kw) -> None:
+        if not self.listeners:
+            return
         for fn in self.listeners.get(name, ()):
             fn(sim=self, time=self.now, **kw)
 
@@ -105,18 +121,28 @@ class MarketSimulator:
         self.queue.push(time, EventKind.HOST_UPDATE,
                         (hid, np.asarray(capacity, float)))
 
+    # ----------------------------------------------------------- transitions
+    def _set_state(self, vm: Vm, new: VmState) -> None:
+        """Single funnel for VM state changes — keeps the metrics' incremental
+        state counters exact (replaces the per-event full-VM scan)."""
+        old = vm.state
+        if old is new:
+            return
+        self.metrics.on_transition(vm, old, new)
+        vm.state = new
+
     # ------------------------------------------------------------------- run
     def run(self, until: Optional[float] = None) -> Metrics:
         limit = until if until is not None else self.config.max_time
-        while True:
-            t = self.queue.peek_time()
-            if t is None or t > limit:
-                break
-            ev = self.queue.pop()
+        heap = self.queue._heap  # hot loop: skip peek/pop wrapper calls
+        heappop = heapq.heappop
+        strict = self.config.strict_invariants
+        while heap and heap[0][0] <= limit:
+            ev = heappop(heap)[3]
             self.now = ev.time
             self._dispatch(ev)
-            if self.config.strict_invariants:
-                self.pool.check_invariants()
+            if strict:
+                self.pool.check_invariants(self.now)
         self.now = min(limit, self.now) if limit != float("inf") else self.now
         return self.metrics
 
@@ -146,11 +172,12 @@ class MarketSimulator:
         elif kind is EventKind.HOST_UPDATE:
             hid, cap = ev.payload
             self.pool.update_host(hid, cap)
-        self._emit("clock_tick")
+        if self.listeners:
+            self._emit("clock_tick")
 
     # ------------------------------------------------------------ allocation
     def _on_submit(self, vm: Vm) -> None:
-        vm.state = VmState.WAITING
+        self._set_state(vm, VmState.WAITING)
         vm.waiting_since = self.now
         self._try_allocate(vm, fresh=True)
         self._record()
@@ -160,23 +187,30 @@ class MarketSimulator:
             vm, self.pool, self.now, allow_spot_clearing=True
         )
         if hid < 0:
-            self._enqueue_pending(vm, fresh)
+            self._enqueue_pending(vm, fresh, tested=True)
             return False
         if needs_clearing:
             self.metrics.preemption_scans += 1
             started = self._preempt_for(vm, hid)
             if not started:
-                self._enqueue_pending(vm, fresh)
+                self._enqueue_pending(vm, fresh, tested=True)
             return False  # allocation happens at INTERRUPT_COMMIT
         self._start_vm(vm, hid)
         return True
 
-    def _enqueue_pending(self, vm: Vm, fresh: bool) -> None:
+    def _enqueue_pending(self, vm: Vm, fresh: bool, tested: bool = False) -> None:
         if not vm.persistent:
-            vm.state = VmState.FAILED
+            self._set_state(vm, VmState.FAILED)
             self._emit("vm_failed", vm=vm)
             return
-        vm.state = VmState.HIBERNATED if vm.hibernated_at >= 0 else VmState.WAITING
+        if tested:
+            # direct placement just failed against the current pool state:
+            # only hosts gaining capacity after this point need rechecking
+            self._retry_pos[vm.id] = self.pool.gain_pos()
+        else:
+            self._retry_pos.pop(vm.id, None)
+        self._set_state(vm, VmState.HIBERNATED if vm.hibernated_at >= 0
+                        else VmState.WAITING)
         if vm.hibernated_at >= 0:
             self._hibernated[vm.id] = vm
         elif vm.vm_type is VmType.ON_DEMAND:
@@ -190,9 +224,10 @@ class MarketSimulator:
     def _start_vm(self, vm: Vm, hid: int) -> None:
         self._waiting_od.pop(vm.id, None)
         self._waiting_spot.pop(vm.id, None)
+        self._retry_pos.pop(vm.id, None)
         resumed = self._hibernated.pop(vm.id, None) is not None
-        self.pool.place(vm, hid)
-        vm.state = VmState.RUNNING
+        self.pool.place(vm, hid, now=self.now)
+        self._set_state(vm, VmState.RUNNING)
         vm.run_start = self.now
         vm.hibernated_at = -1.0
         vm.generation += 1
@@ -239,7 +274,8 @@ class MarketSimulator:
             # keep the victim's VM_FINISH event valid: a spot VM that
             # completes during the warning window finishes normally (its
             # capacity is then free at commit time anyway).
-            v.state = VmState.INTERRUPTING
+            self._set_state(v, VmState.INTERRUPTING)
+            self.pool.mark_uninterruptible(v)
         self._pending_victims[hid] = [v.id for v in victims]
         self.queue.push(self.now + w, EventKind.INTERRUPT_COMMIT,
                         (hid, vm.id, [v.id for v in victims]))
@@ -274,16 +310,17 @@ class MarketSimulator:
             self._finish_now(vm)
             return
         if kind == "hibernate":
-            vm.state = VmState.HIBERNATED
+            self._set_state(vm, VmState.HIBERNATED)
             vm.hibernated_at = self.now
             vm.generation += 1
             self._hibernated[vm.id] = vm
+            self._retry_pos.pop(vm.id, None)  # untested in hibernated form
             if np.isfinite(vm.hibernation_timeout):
                 self.queue.push(self.now + vm.hibernation_timeout,
                                 EventKind.HIBERNATION_EXPIRE, vm.id,
                                 vm.generation)
         else:
-            vm.state = VmState.TERMINATED
+            self._set_state(vm, VmState.TERMINATED)
             vm.generation += 1
             self._emit("vm_terminated", vm=vm)
 
@@ -305,23 +342,26 @@ class MarketSimulator:
         self._record()
 
     def _finish_now(self, vm: Vm) -> None:
-        vm.state = VmState.FINISHED
+        self._set_state(vm, VmState.FINISHED)
         vm.finish_time = self.now
         vm.generation += 1
         self._hibernated.pop(vm.id, None)
+        self._retry_pos.pop(vm.id, None)
         self._emit("vm_finished", vm=vm)
 
     def _on_wait_expire(self, vm: Vm) -> None:
         self._waiting_od.pop(vm.id, None)
         self._waiting_spot.pop(vm.id, None)
-        vm.state = VmState.FAILED
+        self._retry_pos.pop(vm.id, None)
+        self._set_state(vm, VmState.FAILED)
         vm.generation += 1
         self._emit("vm_failed", vm=vm)
         self._record()
 
     def _on_hibernation_expire(self, vm: Vm) -> None:
         self._hibernated.pop(vm.id, None)
-        vm.state = VmState.TERMINATED
+        self._retry_pos.pop(vm.id, None)
+        self._set_state(vm, VmState.TERMINATED)
         vm.generation += 1
         self._emit("vm_terminated", vm=vm)
         self._record()
@@ -336,10 +376,11 @@ class MarketSimulator:
                 self.metrics.interruption_events.append(
                     InterruptionEvent(v.id, self.now, hid, "host-removed"))
                 if v.behavior is InterruptionBehavior.HIBERNATE and v.remaining > _EPS:
-                    v.state = VmState.HIBERNATED
+                    self._set_state(v, VmState.HIBERNATED)
                     v.hibernated_at = self.now
                     v.generation += 1
                     self._hibernated[v.id] = v
+                    self._retry_pos.pop(v.id, None)
                     if np.isfinite(v.hibernation_timeout):
                         self.queue.push(self.now + v.hibernation_timeout,
                                         EventKind.HIBERNATION_EXPIRE, v.id,
@@ -347,7 +388,7 @@ class MarketSimulator:
                 elif v.remaining <= _EPS:
                     self._finish_now(v)
                 else:
-                    v.state = VmState.TERMINATED
+                    self._set_state(v, VmState.TERMINATED)
                     v.generation += 1
             else:
                 # on-demand VMs are resubmitted as persistent requests
@@ -357,20 +398,32 @@ class MarketSimulator:
                 if v.remaining <= _EPS:
                     self._finish_now(v)
                 else:
-                    v.state = VmState.WAITING
+                    self._set_state(v, VmState.WAITING)
                     v.waiting_since = self.now
                     self._waiting_od[v.id] = v
+                    self._retry_pos.pop(v.id, None)  # untested after removal
         self._flush_pending()
         self._record()
 
     # --------------------------------------------------------- resubmission
     def _flush_pending(self) -> None:
         """Resubmission pass: try to place queued requests (§V-D)."""
-        queues = {
+        if self.config.flush_mode == "per_vm":
+            self._flush_pending_per_vm()
+        else:
+            self._flush_pending_batched()
+
+    def _queues(self) -> Dict[str, Dict[int, Vm]]:
+        return {
             "waiting_od": self._waiting_od,
             "waiting_spot": self._waiting_spot,
             "hibernated": self._hibernated,
         }
+
+    def _flush_pending_per_vm(self) -> None:
+        """Legacy reference path: one full ``find_host`` per queued VM per
+        pass.  Kept verbatim as the oracle the batched path is tested against."""
+        queues = self._queues()
         progress = True
         while progress:
             progress = False
@@ -391,10 +444,105 @@ class MarketSimulator:
                     # note: queued on-demand VMs do not trigger *new* preemption
                     # cascades here — preemption happens on the submit path;
                     # this avoids livelock between queued od and running spot.
+        self._maybe_compact_gains()
+
+    def _flush_pending_batched(self) -> None:
+        """Batched resubmission: decision-identical to the per-VM loop.
+
+        Per pass, one feasibility matrix decides which queued VM places next
+        (a VM places iff its row is non-empty) and scoring runs only for that
+        row; after each placement the not-yet-visited suffix is re-decided
+        (state changed).  A gain-log memo skips VMs for which no host's free
+        capacity has increased since their last failed test — placements
+        can't create feasibility, so the answer is unchanged by construction.
+        Queued VMs never trigger new preemption cascades (see the per-VM
+        loop's note), so only direct placements are considered."""
+        if not (self._waiting_od or self._waiting_spot or self._hibernated):
+            return
+        queues = self._queues()
+        while True:
+            pending: List[Tuple[Dict[int, Vm], Vm]] = []
+            for name in self.config.resubmit_order:
+                q = queues[name]
+                stale = False
+                for vm in q.values():
+                    if vm.state in (VmState.WAITING, VmState.HIBERNATED):
+                        pending.append((q, vm))
+                    else:
+                        stale = True
+                if stale:  # rare: purge invalid entries with a snapshot pass
+                    for vid in list(q.keys()):
+                        if q[vid].state not in (VmState.WAITING,
+                                                VmState.HIBERNATED):
+                            q.pop(vid, None)
+                            self._retry_pos.pop(vid, None)
+            if not pending or not self._flush_batch_pass(pending):
+                self._maybe_compact_gains()
+                return
+
+    def _maybe_compact_gains(self) -> None:
+        """Bound the pool's gain log: drop entries no queued VM still
+        references (positions only move forward, so this is safe)."""
+        pool = self.pool
+        if len(pool.gain_log) > max(1024, 4 * pool.n):
+            pool.compact_gain_log(
+                min(self._retry_pos.values(), default=pool.gain_pos()))
+
+    def _flush_batch_pass(self, pending) -> int:
+        """One pass over the queue snapshot; returns the number placed."""
+        pool, placed, i = self.pool, 0, 0
+        retry, log = self._retry_pos, pool.gain_log
+        fits = pool.fits_fast
+        n_pending = len(pending)
+        while i < n_pending:
+            # memo filter: keep only VMs that might fit under current state —
+            # a VM that failed its last full test can only have become
+            # feasible on a host whose free capacity increased since then.
+            # Positions are absolute (base counts compacted-away entries).
+            base = pool._gain_base
+            glen = base + len(log)
+            check: List[int] = []
+            for j in range(i, n_pending):
+                vm = pending[j][1]
+                pos = retry.get(vm.id)
+                if pos is not None:
+                    if pos >= glen:
+                        continue  # nothing gained since the last failure
+                    hit = False
+                    for h in log[max(pos - base, 0):]:
+                        if fits(h, vm.demand):
+                            hit = True
+                            break
+                    if not hit:
+                        retry[vm.id] = glen
+                        continue
+                check.append(j)
+            if not check:
+                break
+            # one feasibility matrix decides which VM places (a VM places iff
+            # its row is non-empty); scoring runs for that single row only
+            if len(check) == 1:
+                hid = self.policy.find_direct(pending[check[0]][1], pool)
+                b = 0 if hid >= 0 else 1
+            else:
+                b, hid = self.policy.find_first_direct(
+                    [pending[j][1] for j in check], pool)
+            pos_now = base + len(log)
+            for j in check[:b]:
+                retry[pending[j][1].id] = pos_now
+            if hid < 0:
+                break
+            q, vm = pending[check[b]]
+            q.pop(vm.id, None)
+            self._start_vm(vm, hid)
+            placed += 1
+            # pool state changed: re-decide the remaining suffix
+            i = check[b] + 1
+        return placed
 
     def _record(self) -> None:
         if self.config.record_timeline:
-            self.metrics.record_state(self.now, self.vms)
+            self.metrics.record_sample(self.now)
 
     # ------------------------------------------------------------- reporting
     def finished_vms(self) -> List[Vm]:

@@ -32,10 +32,14 @@ DEFAULT_BLOCK = 512
 
 
 def _kernel(alpha_ref, free_ref, spot_ref, mask_ref, out_ref,
-            lo_ref, hi_ref, col_ref, plp_ref, m_ref):
-    stage = pl.program_id(0)
-    jblk = pl.program_id(1)
-    nblk = pl.num_programs(1)
+            lo_ref, hi_ref, col_ref, plp_ref, m_ref, *, batched=False):
+    # batched variant: grid (B, 4, nblk) — same 4-stage pipeline per batch
+    # element; scratch accumulators are re-initialized at (stage 0, block 0)
+    # of every element thanks to the TPU's sequential-grid guarantee.
+    sdim = 1 if batched else 0
+    stage = pl.program_id(sdim)
+    jblk = pl.program_id(sdim + 1)
+    nblk = pl.num_programs(sdim + 1)
 
     free = free_ref[...]          # (SUB, BN) — rows 0..3 are resource dims
     spot = spot_ref[...]          # (SUB, BN)
@@ -152,3 +156,61 @@ def hlem_score_pallas(free: jax.Array, mask: jax.Array, spot_frac: jax.Array,
         interpret=interpret,
     )(alpha_arr, free_t, spot_t, mask_t)
     return out[0, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def hlem_score_pallas_batch(
+    free: jax.Array, masks: jax.Array, spot_frac: jax.Array,
+    alphas: jax.Array, *, block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched scoring: B VM candidate sets × n hosts in ONE ``pallas_call``.
+
+    Drop-in accelerator path for ``repro.core.hlem.hlem_scores_batch_np``:
+    free (n, D) shared host state, masks (B, n) bool per-VM feasibility,
+    spot_frac (n, D), alphas (B,) per-VM adjustment.  Returns (B, n) float32
+    scores with -3.4e38 at masked hosts.
+
+    Grid = (B, 4 stages, n_host_blocks): the batch axis is the new leading
+    grid dimension over the existing 4-stage reduction pipeline; host data is
+    streamed once per (element, stage) while each element's masks/outputs tile
+    its own row of the (B, n_pad) layout.
+    """
+    n, d = free.shape
+    b = masks.shape[0]
+    assert d <= SUB, f"at most {SUB} resource dims supported, got {d}"
+    n_pad = max(pl.cdiv(n, block), 1) * block
+
+    def to_tiles(x):  # (n, D) -> (SUB, n_pad), host axis on lanes
+        x = jnp.asarray(x, jnp.float32)
+        x = jnp.pad(x, ((0, n_pad - n), (0, SUB - d)))
+        return x.T
+
+    free_t = to_tiles(free)
+    spot_t = to_tiles(spot_frac)
+    masks_t = jnp.pad(masks.astype(jnp.float32), ((0, 0), (0, n_pad - n)))
+    alphas_arr = jnp.asarray(alphas, jnp.float32).reshape(b, 1)
+
+    nblk = n_pad // block
+    out = pl.pallas_call(
+        functools.partial(_kernel, batched=True),
+        grid=(b, 4, nblk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bb, s, j: (bb, 0)),
+            pl.BlockSpec((SUB, block), lambda bb, s, j: (0, j)),
+            pl.BlockSpec((SUB, block), lambda bb, s, j: (0, j)),
+            pl.BlockSpec((1, block), lambda bb, s, j: (bb, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda bb, s, j: (bb, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n_pad), jnp.float32),
+        scratch_shapes=[
+            # lo, hi, col, plogp accumulators (SUB,1) + candidate count (1,1)
+            pltpu.VMEM((SUB, 1), jnp.float32),
+            pltpu.VMEM((SUB, 1), jnp.float32),
+            pltpu.VMEM((SUB, 1), jnp.float32),
+            pltpu.VMEM((SUB, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(alphas_arr, free_t, spot_t, masks_t)
+    return out[:, :n]

@@ -44,6 +44,54 @@ def test_hlem_score_all_masked():
     assert bool((out <= -1e37).all())
 
 
+@pytest.mark.parametrize("b,n", [(1, 100), (4, 100), (3, 513), (8, 257)])
+def test_hlem_score_batch_sweep(b, n):
+    """Batched kernel (B VMs x n hosts in ONE pallas_call) vs the numpy
+    batch oracle: <= 1e-5 on unmasked entries, including degenerate
+    (zero-span) columns and a fully-masked row."""
+    from repro.core.hlem import hlem_scores_batch_np
+    from repro.kernels.hlem_score import hlem_score_pallas_batch
+    rng = _rng()
+    free = rng.uniform(0, 100, (n, 4)).astype(np.float32)
+    free[:, 3] = 42.0  # degenerate column across every candidate set
+    masks = rng.random((b, n)) < 0.7
+    if b > 1:
+        masks[0] = False  # fully-masked row -> all -big
+    spot = rng.uniform(0, 1, (n, 4)).astype(np.float32)
+    alphas = np.linspace(-0.5, 0.5, b).astype(np.float32)
+    out = np.asarray(hlem_score_pallas_batch(
+        jnp.asarray(free), jnp.asarray(masks), jnp.asarray(spot),
+        jnp.asarray(alphas), interpret=True))
+    want = hlem_scores_batch_np(free, masks, spot, alphas)
+    assert out.shape == (b, n)
+    for i in range(b):
+        m = masks[i]
+        if m.any():
+            np.testing.assert_allclose(out[i][m], want[i][m], rtol=1e-4,
+                                       atol=1e-5)
+            assert int(np.argmax(out[i])) == int(np.argmax(want[i]))
+        else:
+            assert bool((out[i] <= -1e37).all())
+
+
+def test_hlem_score_batch_consistent_with_single():
+    """Each batch row must equal the single-VM kernel on the same mask."""
+    from repro.kernels.hlem_score import hlem_score_pallas_batch
+    rng = _rng()
+    b, n = 5, 200
+    free = jnp.asarray(rng.uniform(0, 10, (n, 4)), jnp.float32)
+    masks = rng.random((b, n)) < 0.5
+    spot = jnp.asarray(rng.uniform(0, 1, (n, 4)), jnp.float32)
+    alpha = jnp.float32(-0.5)
+    batch = np.asarray(hlem_score_pallas_batch(
+        free, jnp.asarray(masks), spot,
+        jnp.full((b,), -0.5, jnp.float32), interpret=True))
+    for i in range(b):
+        single = np.asarray(hlem_score_pallas(
+            free, jnp.asarray(masks[i]), spot, alpha, interpret=True))
+        np.testing.assert_allclose(batch[i], single, rtol=1e-6, atol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------

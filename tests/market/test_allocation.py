@@ -59,8 +59,12 @@ def test_direct_and_clearing_masks():
     assert list(d) == [False, True]
     assert list(c) == [True, True]
 
-    # not yet past min runtime -> host 0 not clearable
+    # not yet past min runtime -> host 0 not clearable (min_running_time is
+    # snapshotted by the reclaim index at placement time, so re-place)
+    p.release(spot)
     spot.min_running_time = 50.0
+    p.place(spot, 0, now=0.0)
+    spot.state = VmState.RUNNING
     c2 = clearing_mask(od, p, now=10.0)
     assert list(c2) == [False, True]
 

@@ -1,0 +1,275 @@
+"""Batched allocation engine vs the per-VM reference path.
+
+The batched resubmission flush (``SimConfig.flush_mode="batched"``) and the
+incremental host accounting must be *decision-identical* to the legacy
+one-VM-at-a-time loop: same allocations, same interruption counts, same
+execution histories on a seeded trace.  These tests are the contract that
+lets the hot path evolve without changing simulation semantics."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    HostPool,
+    InterruptionBehavior,
+    MarketSimulator,
+    SimConfig,
+    VmState,
+    make_on_demand,
+    make_policy,
+    make_spot,
+    resources,
+)
+from repro.market import TraceConfig, generate_trace, simulate_trace
+
+POLICIES = ["first-fit", "best-fit", "worst-fit", "hlem-vmp",
+            "hlem-vmp-adjusted"]
+
+
+def _histories(sim):
+    return sorted(
+        (v.id, v.state.value,
+         tuple((i.host, i.start, i.stop) for i in v.history))
+        for v in sim.all_vms())
+
+
+def _run_trace(flush_mode, strict=False, policy="hlem-vmp-adjusted"):
+    cfg = TraceConfig(seed=3, n_machines=12, sim_days=0.05, n_spot=60,
+                      load_per_machine=25.0, spot_durations_h=(0.5, 1.0))
+    tr = generate_trace(cfg)
+    sim, metrics = simulate_trace(
+        tr, policy=make_policy(policy), cfg=cfg,
+        sim_config=SimConfig(record_timeline=False, flush_mode=flush_mode,
+                             strict_invariants=strict))
+    return sim, metrics
+
+
+@pytest.mark.parametrize("policy", ["hlem-vmp-adjusted", "first-fit"])
+def test_batched_flush_identical_to_per_vm_on_trace(policy):
+    sim_a, m_a = _run_trace("per_vm", policy=policy)
+    sim_b, m_b = _run_trace("batched", policy=policy)
+    assert m_a.allocations == m_b.allocations
+    assert m_a.resubmissions == m_b.resubmissions
+    assert m_a.interruption_count() == m_b.interruption_count()
+    assert m_a.spot_stats(sim_a.vms) == m_b.spot_stats(sim_b.vms)
+    # full allocation decisions: every execution interval on the same host at
+    # the same times
+    assert _histories(sim_a) == _histories(sim_b)
+
+
+def test_batched_flush_with_strict_invariants():
+    """The incremental caches survive a full seeded trace with per-event
+    from-scratch cross-checks (HostPool.check_invariants(now))."""
+    sim, metrics = _run_trace("batched", strict=True)
+    assert metrics.allocations > 0
+    sim.pool.check_invariants(sim.now)
+
+
+def _random_sim(seed, flush_mode, warning):
+    rng = np.random.default_rng(seed)
+    sim = MarketSimulator(
+        policy=make_policy("hlem-vmp-adjusted"),
+        config=SimConfig(flush_mode=flush_mode, warning_time=warning,
+                         strict_invariants=True))
+    for _ in range(4):
+        cpu = float(rng.choice([4, 8, 16]))
+        sim.add_host(resources(cpu, cpu * 2048, 1_000, 100_000))
+    for i in range(60):
+        cpu = float(rng.choice([1, 2, 4]))
+        demand = resources(cpu, cpu * 1024, 100, 10_000)
+        dur = float(rng.uniform(5, 60))
+        t0 = float(rng.uniform(0, 80))
+        if rng.random() < 0.5:
+            sim.submit(make_spot(
+                i, demand, dur, behavior=InterruptionBehavior.HIBERNATE,
+                min_running_time=float(rng.uniform(0, 5)),
+                hibernation_timeout=float(rng.uniform(20, 100)),
+                waiting_timeout=float(rng.uniform(20, 100)), submit_time=t0))
+        else:
+            sim.submit(make_on_demand(
+                i, demand, dur, waiting_timeout=float(rng.uniform(20, 100)),
+                submit_time=t0))
+    sim.run(until=400.0)
+    return sim
+
+
+@pytest.mark.parametrize("seed", [0, 7, 42])
+@pytest.mark.parametrize("warning", [0.0, 2.0])
+def test_batched_flush_identical_on_random_workloads(seed, warning):
+    a = _random_sim(seed, "per_vm", warning)
+    b = _random_sim(seed, "batched", warning)
+    assert a.metrics.spot_stats(a.vms) == b.metrics.spot_stats(b.vms)
+    assert a.metrics.allocations == b.metrics.allocations
+    assert _histories(a) == _histories(b)
+
+
+# ---------------------------------------------------------------------------
+# find_hosts_batch / find_first_direct vs per-VM find_host at a fixed state
+# ---------------------------------------------------------------------------
+def _loaded_pool(seed=0, n_hosts=12, n_running=25):
+    rng = np.random.default_rng(seed)
+    pool = HostPool()
+    for _ in range(n_hosts):
+        cpu = float(rng.choice([4, 8, 16]))
+        pool.add_host(resources(cpu, cpu * 2048, 1_000, 100_000))
+    placed = []
+    for i in range(n_running):
+        cpu = float(rng.choice([1, 2]))
+        vm = make_spot(1000 + i, resources(cpu, cpu * 1024, 50, 5_000), 100.0)
+        for hid in rng.permutation(pool.n):
+            if pool.fits(hid, vm.demand):
+                pool.place(vm, int(hid), now=0.0)
+                vm.state = VmState.RUNNING
+                vm.run_start = 0.0
+                placed.append(vm)
+                break
+    return pool
+
+
+@pytest.mark.parametrize("policy_name", POLICIES)
+def test_find_hosts_batch_matches_per_vm(policy_name):
+    pool = _loaded_pool()
+    policy = make_policy(policy_name)
+    rng = np.random.default_rng(1)
+    vms = []
+    for i in range(16):
+        cpu = float(rng.choice([1, 2, 4, 8]))
+        vms.append(make_on_demand(i, resources(cpu, cpu * 1024, 50, 5_000),
+                                  10.0))
+    batch = policy.find_hosts_batch(vms, pool, now=5.0)
+    for b, vm in enumerate(vms):
+        hid, clearing = policy.find_host(vm, pool, 5.0,
+                                         allow_spot_clearing=False)
+        assert int(batch[b]) == hid, (policy_name, b)
+        assert not clearing
+        assert policy.find_direct(vm, pool) == hid
+
+
+@pytest.mark.parametrize("policy_name", POLICIES)
+def test_find_first_direct_matches_scan(policy_name):
+    pool = _loaded_pool(seed=2)
+    policy = make_policy(policy_name)
+    rng = np.random.default_rng(3)
+    vms = [make_on_demand(i, resources(float(rng.choice([2, 4, 16])),
+                                       2048.0, 50, 5_000), 10.0)
+           for i in range(10)]
+    b, hid = policy.find_first_direct(vms, pool)
+    # reference: first VM whose per-VM direct search succeeds
+    want_b, want_hid = len(vms), -1
+    for j, vm in enumerate(vms):
+        h = policy.find_direct(vm, pool)
+        if h >= 0:
+            want_b, want_hid = j, h
+            break
+    assert (b, hid) == (want_b, want_hid)
+
+
+# ---------------------------------------------------------------------------
+# incremental accounting invariants under adversarial pool operations
+# ---------------------------------------------------------------------------
+def test_pool_cache_invariants_under_churn():
+    rng = np.random.default_rng(9)
+    pool = HostPool(capacity_hint=2)  # force growth
+    running = []
+    now = 0.0
+    for step in range(300):
+        now += float(rng.uniform(0, 3))
+        op = rng.random()
+        if op < 0.25 or pool.n < 2:
+            pool.add_host(resources(float(rng.choice([4, 8, 16])),
+                                    16_384, 1_000, 100_000))
+        elif op < 0.55:
+            cpu = float(rng.choice([1, 2]))
+            vm = make_spot(10_000 + step,
+                           resources(cpu, cpu * 512, 10, 1_000), 50.0,
+                           min_running_time=float(rng.choice([0.0, 5.0])))
+            hids = [h for h in range(pool.n) if pool.fits(h, vm.demand)]
+            if hids:
+                pool.place(vm, int(rng.choice(hids)), now=now)
+                vm.state = VmState.RUNNING
+                vm.run_start = now
+                running.append(vm)
+        elif op < 0.8 and running:
+            vm = running.pop(int(rng.integers(len(running))))
+            pool.release(vm)
+        elif op < 0.9 and running:
+            vm = running[int(rng.integers(len(running)))]
+            vm.state = VmState.INTERRUPTING
+            pool.mark_uninterruptible(vm)
+        else:
+            # capacity updates only grow here: check_invariants (like the
+            # seed's) asserts used <= total, and shrinking under residents
+            # would trip it by design
+            hid = int(rng.integers(pool.n))
+            pool.update_host(hid, resources(
+                float(rng.choice([32, 64])), 32_768, 2_000, 200_000))
+        pool.refresh_reclaim(now)
+        pool.check_invariants(now)
+
+
+def test_gain_log_monotone_and_epoch_stamped():
+    pool = HostPool()
+    e0 = pool.epoch
+    h = pool.add_host(resources(8, 8192, 100, 100))
+    assert pool.epoch > e0
+    pos = pool.gain_pos()
+    vm = make_on_demand(1, resources(2, 1024, 10, 10), 5.0)
+    pool.place(vm, h)
+    assert pool.gain_pos() == pos  # placements are not gains
+    pool.release(vm)
+    assert pool.gained_since(pos) == [h]
+
+
+def test_gain_log_compaction_preserves_absolute_positions():
+    pool = HostPool()
+    h = pool.add_host(resources(8, 8192, 100, 100))
+    vm = make_on_demand(1, resources(2, 1024, 10, 10), 5.0)
+    for _ in range(10):
+        pool.place(vm, h)
+        pool.release(vm)
+    pos = pool.gain_pos()
+    pool.place(vm, h)
+    pool.release(vm)  # one gain after pos
+    pool.compact_gain_log(pos)
+    assert pool.gained_since(pos) == [h]          # suffix survives
+    assert pool.gained_since(0) == [h]            # pre-base positions clamp
+    assert pool.gain_pos() == pos + 1             # absolute positions stable
+    assert len(pool.gain_log) == 1                # prefix dropped
+
+
+# ---------------------------------------------------------------------------
+# incremental timeline counters vs the legacy full-scan oracle
+# ---------------------------------------------------------------------------
+def test_incremental_timeline_matches_full_scan_oracle():
+    """Metrics.record_state is the O(V) oracle; the engine's incremental
+    state counters must agree with it at every point of a seeded run."""
+    from repro.core import Metrics
+    rng = np.random.default_rng(11)
+    sim = MarketSimulator(
+        policy=make_policy("hlem-vmp-adjusted"),
+        config=SimConfig(record_timeline=True, warning_time=1.0))
+    for _ in range(3):
+        sim.add_host(resources(8, 16_384, 1_000, 100_000))
+    for i in range(50):
+        cpu = float(rng.choice([1, 2, 4]))
+        demand = resources(cpu, cpu * 1024, 10, 1_000)
+        dur = float(rng.uniform(5, 40))
+        t0 = float(rng.uniform(0, 80))
+        if rng.random() < 0.5:
+            sim.submit(make_spot(
+                i, demand, dur, behavior=InterruptionBehavior.HIBERNATE,
+                min_running_time=2.0,
+                hibernation_timeout=30.0, waiting_timeout=50.0,
+                submit_time=t0))
+        else:
+            sim.submit(make_on_demand(i, demand, dur, waiting_timeout=50.0,
+                                      submit_time=t0))
+    # step the clock and compare counters against a fresh full scan each step
+    for t in np.linspace(5.0, 300.0, 60):
+        sim.run(until=float(t))
+        oracle = Metrics()
+        oracle.record_state(sim.now, sim.vms)
+        oracle_counts = oracle.timeline[-1][1:]
+        assert tuple(sim.metrics.state_counts[1:]) == oracle_counts, t
+    # and the recorded timeline's final sample agrees with the oracle
+    if sim.metrics.timeline:
+        assert sim.metrics.timeline[-1][1:] == oracle_counts

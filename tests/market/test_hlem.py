@@ -4,12 +4,15 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    hlem_scores_batch_jax,
+    hlem_scores_batch_np,
     hlem_scores_jax,
     hlem_scores_np,
     hlem_select_batch_jax,
     hlem_select_jax,
     hlem_select_np,
 )
+from repro.core.hlem import hlem_pick_np
 
 BIG = 3.4e38
 
@@ -79,3 +82,67 @@ def test_alpha_zero_equals_unadjusted():
     np.testing.assert_allclose(
         hlem_scores_np(free, mask, spot, 0.0),
         hlem_scores_np(free, mask, None, 0.0))
+
+
+# ---------------------------------------------------------------------------
+# batched oracle (B VMs x n hosts in one pass)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,n", [(1, 5), (4, 33), (16, 200), (8, 64)])
+def test_batch_np_rows_match_single_oracle(b, n):
+    rng = np.random.default_rng(b * 100 + n)
+    free = rng.uniform(0, 50, (n, 4))
+    free[:, 3] = 7.0  # degenerate (zero-span) column among candidates
+    masks = rng.random((b, n)) < 0.6
+    masks[0] = False  # fully-masked row
+    spot = rng.uniform(0, 1, (n, 4))
+    alphas = np.where(rng.random(b) < 0.5, -0.5, 0.0)
+    out = hlem_scores_batch_np(free, masks, spot, alphas)
+    assert out.shape == (b, n)
+    for i in range(b):
+        want = hlem_scores_np(free, masks[i], spot, alphas[i])
+        if masks[i].any():
+            np.testing.assert_allclose(out[i][masks[i]], want[masks[i]],
+                                       rtol=1e-12, atol=1e-12)
+            assert np.argmax(out[i]) == np.argmax(want)
+        assert np.all(np.isneginf(out[i][~masks[i]]))
+
+
+def test_batch_jax_matches_batch_np():
+    rng = np.random.default_rng(17)
+    b, n = 6, 80
+    free = rng.uniform(0, 20, (n, 4)).astype(np.float32)
+    free[:, 2] = 3.0  # degenerate column
+    masks = rng.random((b, n)) < 0.5
+    spot = rng.uniform(0, 1, (n, 4)).astype(np.float32)
+    alphas = np.linspace(-0.9, 0.9, b).astype(np.float32)
+    want = hlem_scores_batch_np(free, masks, spot, alphas)
+    got = np.asarray(hlem_scores_batch_jax(
+        jnp.asarray(free), jnp.asarray(masks), jnp.asarray(spot),
+        jnp.asarray(alphas)))
+    for i in range(b):
+        if masks[i].any():
+            np.testing.assert_allclose(got[i][masks[i]], want[i][masks[i]],
+                                       rtol=1e-4, atol=1e-5)
+            assert np.argmax(got[i]) == np.argmax(want[i])
+
+
+def test_fused_pick_matches_scores_argmax():
+    rng = np.random.default_rng(23)
+    for trial in range(50):
+        n = int(rng.integers(2, 80))
+        free = rng.uniform(0, 10, (n, 4))
+        if trial % 3 == 0:
+            free[:, 1] = 5.0                  # degenerate dim
+        if trial % 7 == 0:
+            free[:] = free[0]                 # all dims degenerate
+        if trial % 5 == 0 and n >= 4:
+            free[2] = free[1]                 # exact duplicate hosts (ties)
+        mask = rng.random(n) < 0.6
+        spot = rng.uniform(0, 1, (n, 4))
+        alpha = float(rng.choice([0.0, -0.5, 0.7]))
+        got = hlem_pick_np(free, mask, spot, alpha)
+        if not mask.any():
+            assert got == -1
+        else:
+            assert got == int(np.argmax(hlem_scores_np(free, mask, spot,
+                                                       alpha)))

@@ -1,6 +1,10 @@
 """Hypothesis property tests: simulator invariants under random workloads."""
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; property tests skipped")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
