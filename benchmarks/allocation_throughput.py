@@ -9,6 +9,7 @@ import numpy as np
 
 from repro.core import hlem_scores_np
 from repro.core.hlem import (
+    BATCH_NP_N_CUTOVER,
     hlem_pick_np,
     hlem_scores_batch_np,
     hlem_scores_jax,
@@ -45,8 +46,15 @@ def run(quick: bool = True):
                                  for i in range(b)], n=5)
         t_batch = timeit(lambda: hlem_scores_batch_np(free, masks, spot,
                                                       alphas), n=5)
-        rows.append(emit(f"alloc/batch_np_B{b}_n{n}", t_batch,
-                         f"speedup_vs_loop={t_loop / t_batch:.1f}x"))
+        derived = f"speedup_vs_loop={t_loop / t_batch:.1f}x"
+        if n > BATCH_NP_N_CUTOVER:
+            # force the (B, n, D) broadcast core to expose the large-n
+            # routing win (the default routes such fleets through the
+            # compressed per-row oracle; below the cutover they coincide)
+            t_bcast = timeit(lambda: hlem_scores_batch_np(
+                free, masks, spot, alphas, n_cutover=10 ** 9), n=5)
+            derived += f";speedup_vs_broadcast={t_bcast / t_batch:.1f}x"
+        rows.append(emit(f"alloc/batch_np_B{b}_n{n}", t_batch, derived))
         if n <= 1000:  # interpret mode is slow; correctness-scale only
             from repro.kernels.hlem_score import (
                 hlem_score_pallas,

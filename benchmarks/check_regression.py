@@ -1,0 +1,60 @@
+"""CI perf gate: fail if a benchmark row regressed vs a committed baseline.
+
+  python -m benchmarks.check_regression results/bench/BENCH_ci.json \\
+      --baseline results/bench/BENCH_pr1.json \\
+      --metric trace/hlem-vmp-adjusted --max-ratio 2.0
+
+Compares ``us_per_call`` of ``--metric`` between the two ``BENCH_*.json``
+artifacts and exits 1 when ``current > max_ratio * baseline``.  The 2x
+default absorbs shared-runner noise (the repo's benchmarks are best-of-N,
+but CI hosts still swing); genuine hot-path regressions are well past it.
+
+``--reference-metric`` makes the gate machine-independent: both sides are
+divided by a same-artifact reference row first (CI uses
+``trace/per_vm_reference`` — the legacy flush path measured in the same
+run), so a CI runner that is uniformly slower than the machine that produced
+the committed baseline does not trip the gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _row(path: str, name: str) -> float:
+    with open(path) as f:
+        data = json.load(f)
+    for r in data.get("results", []):
+        if r.get("name") == name:
+            return float(r["us_per_call"])
+    raise SystemExit(f"error: no row named {name!r} in {path}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="freshly produced BENCH_<label>.json")
+    ap.add_argument("--baseline", default="results/bench/BENCH_pr1.json")
+    ap.add_argument("--metric", default="trace/hlem-vmp-adjusted")
+    ap.add_argument("--max-ratio", type=float, default=2.0)
+    ap.add_argument("--reference-metric", default=None,
+                    help="normalize both sides by this same-artifact row "
+                         "(machine-independent comparison)")
+    args = ap.parse_args(argv)
+
+    cur = _row(args.current, args.metric)
+    base = _row(args.baseline, args.metric)
+    unit = "us"
+    if args.reference_metric:
+        cur /= max(_row(args.current, args.reference_metric), 1e-9)
+        base /= max(_row(args.baseline, args.reference_metric), 1e-9)
+        unit = f"x {args.reference_metric}"
+    ratio = cur / max(base, 1e-9)
+    status = "OK" if ratio <= args.max_ratio else "REGRESSION"
+    print(f"{args.metric}: current={cur:.3f}{unit} baseline={base:.3f}{unit} "
+          f"ratio={ratio:.2f}x (max {args.max_ratio:.1f}x) -> {status}")
+    return 0 if ratio <= args.max_ratio else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,84 @@
+"""Dynamic market engine benchmarks (PR 2 tentpole).
+
+Two rows per registry size:
+
+* ``market/wave_select_m<N>`` — interruption-wave victim selection over a
+  dense registry of N running spot VMs: one masked comparison
+  (:meth:`HostPool.market_victims`) vs the equivalent per-VM Python walk,
+  cross-checked for identical victim sets.
+* ``market/engine_e2e_volatile`` — end-to-end §VII-E run with the engine
+  under the volatile regime (price ticks + waves + price-gated admission),
+  us per allocation.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import HostPool, VmState, make_spot, resources
+
+from .common import emit, timeit
+
+_EPS = 1e-9
+N_POOLS = 4
+
+
+def _build_registry(m: int, seed: int = 0):
+    pool = HostPool()
+    pool.enable_market(N_POOLS)
+    rng = np.random.default_rng(seed)
+    n_hosts = max(m // 50, N_POOLS)
+    huge = resources(1e9, 1e12, 1e9, 1e12)
+    for h in range(n_hosts):
+        pool.add_host(huge, pool=h % N_POOLS)
+    for i in range(m):
+        vm = make_spot(i, resources(1, 1024, 10, 1000), 1e6,
+                       bid=float(rng.uniform(0.15, 1.0)),
+                       min_running_time=float(rng.choice([0.0, 50.0])))
+        hid = int(rng.integers(n_hosts))
+        pool.place(vm, hid, now=0.0)
+        vm.state = VmState.RUNNING
+        vm.run_start = 0.0
+    return pool
+
+
+def _reference_victims(pool: HostPool, prices: np.ndarray, now: float):
+    out = []
+    for h in range(pool.n):
+        price = prices[pool.pool_of[h]]
+        for v in pool.spot_vms_on(h):
+            if v.interruptible(now) and v.bid < price - _EPS:
+                out.append(v.id)
+    return out
+
+
+def run(quick: bool = True):
+    rows = []
+    sizes = [2_000, 20_000] if quick else [2_000, 20_000, 200_000]
+    rng = np.random.default_rng(1)
+    for m in sizes:
+        pool = _build_registry(m)
+        prices = rng.uniform(0.2, 0.9, N_POOLS)
+        now = 30.0  # half the min_running_time population is still protected
+        vec, _ = pool.market_victims(prices, now)
+        ref = _reference_victims(pool, prices, now)
+        assert sorted(vec.tolist()) == sorted(ref), "victim sets diverge"
+        t_vec = timeit(lambda: pool.market_victims(prices, now), n=9)
+        t_ref = timeit(lambda: _reference_victims(pool, prices, now), n=3)
+        rows.append(emit(
+            f"market/wave_select_m{m}", t_vec,
+            f"victims={vec.size};speedup_vs_pyloop={t_ref / t_vec:.1f}x"))
+
+    from repro.launch.market_sim import run_market
+    t0 = time.time()
+    r = run_market("hlem-vmp-adjusted", "volatile", seed=0,
+                   until=1200.0 if quick else 2200.0)
+    wall = time.time() - t0
+    rows.append(emit(
+        "market/engine_e2e_volatile",
+        wall * 1e6 / max(r["allocations"], 1),
+        f"allocations={r['allocations']};waves={r['waves']};"
+        f"price_interruptions={r['price_interruptions']};"
+        f"spot_cost={r['realized_spot_cost']}"))
+    return rows

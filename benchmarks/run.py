@@ -25,6 +25,7 @@ MODULES = [
     "trace_scale",              # §VII-C/D: trace-scale simulation
     "fig16_correlation",        # Fig. 16: advisor association analysis
     "allocation_throughput",    # §VII-D1: scoring throughput (np/jax/pallas)
+    "market_engine",            # PR 2: wave selection + engine end-to-end
     "victim_selection",         # beyond-paper: §IX victim selectors
     "cost_analysis",            # beyond-paper: $ cost / waste per policy
     "roofline",                 # §Roofline from dry-run artifacts

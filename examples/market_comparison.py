@@ -5,7 +5,14 @@ Reproduces the qualitative results of Figs. 14-15: First-Fit causes the most
 spot interruptions, HLEM-VMP fewer, the adjusted HLEM-VMP fewest; HLEM has
 the best average interruption time, adjusted the best maximum (vs HLEM).
 
-Run:  PYTHONPATH=src python examples/market_comparison.py [--quick]
+Each policy row also reports the $ consequences: total cost, savings vs an
+all-on-demand execution, and wasted spend (terminated spot VMs pay for
+partial work that delivers nothing).  By default spot bills at a flat
+discount (``PriceModel.spot_discount``); with ``--market`` the dynamic
+market engine runs underneath and spot bills at each pool's *realized
+clearing price* instead.
+
+Run:  PYTHONPATH=src python examples/market_comparison.py [--quick] [--market]
 """
 import argparse
 import copy
@@ -18,6 +25,14 @@ from repro.core import (
     make_policy,
     synthetic_scenario,
 )
+from repro.market import (
+    MarketEngine,
+    RandomizedBid,
+    assign_bids,
+    cost_stats,
+    make_market,
+    realized_cost_stats,
+)
 
 POLICIES = ["first-fit", "best-fit", "worst-fit", "hlem-vmp",
             "hlem-vmp-adjusted"]
@@ -29,30 +44,51 @@ def main() -> None:
                     help="3 policies only")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--alpha", type=float, default=-0.5)
+    ap.add_argument("--market", action="store_true",
+                    help="attach the market engine (randomized bids; pick "
+                         "the price regime with --regime); cost columns "
+                         "then use realized clearing prices")
+    ap.add_argument("--regime", default="volatile",
+                    choices=["calm", "volatile", "correlated"])
     args = ap.parse_args()
 
     policies = (["first-fit", "hlem-vmp", "hlem-vmp-adjusted"]
                 if args.quick else POLICIES)
     hosts, vms = synthetic_scenario(ScenarioConfig(seed=args.seed))
+    if args.market:
+        assign_bids(vms, RandomizedBid(lo=0.35, hi=1.0), seed=args.seed)
     print(f"fleet: {len(hosts)} hosts | workload: {len(vms)} VMs "
-          f"({sum(1 for v in vms if v.is_spot)} spot)")
+          f"({sum(1 for v in vms if v.is_spot)} spot)"
+          + (f" | market engine: {args.regime}" if args.market else ""))
     print(f"{'policy':20s} {'interrupts':>10s} {'avg_s':>8s} {'max_s':>8s} "
-          f"{'finished':>9s} {'wall_s':>7s}")
+          f"{'finished':>9s} {'cost$':>8s} {'save%':>6s} {'waste$':>7s} "
+          f"{'wall_s':>7s}")
     for name in policies:
         kwargs = {"alpha": args.alpha} if name == "hlem-vmp-adjusted" else {}
+        engine = None
+        if args.market:
+            engine = MarketEngine(make_market(args.regime, n_pools=2,
+                                              seed=args.seed))
         sim = MarketSimulator(policy=make_policy(name, **kwargs),
-                              config=SimConfig(record_timeline=False))
-        for cap in hosts:
-            sim.add_host(cap)
+                              config=SimConfig(record_timeline=False),
+                              engine=engine)
+        for i, cap in enumerate(hosts):
+            sim.add_host(cap, pool=(i % 2 if args.market else 0))
         for v in vms:
             sim.submit(copy.deepcopy(v))
         t0 = time.time()
         metrics = sim.run(until=2200.0)
         s = metrics.spot_stats(sim.vms)
+        if args.market:
+            c = realized_cost_stats(sim.vms.values(), engine, sim.pool)
+        else:
+            c = cost_stats(sim.vms.values())
         print(f"{name:20s} {s['interruptions']:10d} "
               f"{s['avg_interruption_time']:8.2f} "
               f"{s['max_interruption_time']:8.2f} "
-              f"{s['spot_finished']:9d} {time.time()-t0:7.1f}")
+              f"{s['spot_finished']:9d} "
+              f"{c['cost']:8.3f} {c['savings_pct']:6.1f} "
+              f"{c['wasted_cost']:7.3f} {time.time()-t0:7.1f}")
 
 
 if __name__ == "__main__":

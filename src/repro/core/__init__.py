@@ -32,7 +32,9 @@ from .hlem import (
 )
 from .hosts import HostPool
 from .metrics import (
+    InterruptionEvent,
     Metrics,
+    WaveEvent,
     dynamic_vm_table,
     execution_table,
     spot_vm_table,

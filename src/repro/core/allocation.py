@@ -43,7 +43,7 @@ _EPS = 1e-9
 def direct_mask(vm: Vm, pool: HostPool) -> np.ndarray:
     """Hosts that fit the demand right now (fresh array; hot paths use
     ``pool.direct_mask_into`` which is scratch-backed)."""
-    return pool.direct_mask_into(vm.demand).copy()
+    return pool.direct_mask_into(vm.demand, vm.bid, vm.pool).copy()
 
 
 def clearing_mask(vm: Vm, pool: HostPool, now: float) -> np.ndarray:
@@ -56,7 +56,7 @@ def clearing_mask(vm: Vm, pool: HostPool, now: float) -> np.ndarray:
     folded in first.
     """
     pool.refresh_reclaim(now)
-    return pool.clearing_mask_into(vm.demand).copy()
+    return pool.clearing_mask_into(vm.demand, vm.bid, vm.pool).copy()
 
 
 def feasibility_masks(vm: Vm, pool: HostPool, now: float):
@@ -73,12 +73,14 @@ class AllocationPolicy:
     def find_host(
         self, vm: Vm, pool: HostPool, now: float, allow_spot_clearing: bool
     ) -> Tuple[int, bool]:
-        hid = self._pick(pool.direct_mask_into(vm.demand), vm, pool)
+        hid = self._pick(pool.direct_mask_into(vm.demand, vm.bid, vm.pool),
+                         vm, pool)
         if hid >= 0:
             return hid, False
         if allow_spot_clearing and not vm.is_spot:
             pool.refresh_reclaim(now)
-            hid = self._pick(pool.clearing_mask_into(vm.demand), vm, pool)
+            hid = self._pick(
+                pool.clearing_mask_into(vm.demand, vm.bid, vm.pool), vm, pool)
             if hid >= 0:
                 return hid, True
         return -1, False
@@ -90,7 +92,7 @@ class AllocationPolicy:
 
     def find_direct(self, vm: Vm, pool: HostPool) -> int:
         """Direct placement only (no spot clearing): chosen host or -1."""
-        mask = pool.direct_mask_into(vm.demand)
+        mask = pool.direct_mask_into(vm.demand, vm.bid, vm.pool)
         if not mask.any():
             return -1
         return self._pick_direct(mask, vm, pool)
@@ -106,7 +108,9 @@ class AllocationPolicy:
         the batched scorer).  The result is only valid until the pool mutates
         (committing one row invalidates the rest)."""
         demands = np.stack([vm.demand for vm in vms])
-        feas = pool.direct_mask_batch(demands)
+        bids = np.array([vm.bid for vm in vms])
+        pids = np.array([vm.pool for vm in vms], dtype=np.int64)
+        feas = pool.direct_mask_batch(demands, bids, pids)
         return self._pick_batch(feas, vms, pool)
 
     def find_first_direct(
@@ -122,9 +126,13 @@ class AllocationPolicy:
         so scoring work is one pass per placement instead of per queued VM."""
         nvm = len(vms)
         demands = np.empty((nvm, vms[0].demand.shape[0]))
+        bids = np.empty(nvm)
+        pids = np.empty(nvm, dtype=np.int64)
         for b, vm in enumerate(vms):
             demands[b] = vm.demand
-        feas = pool.direct_mask_batch(demands)
+            bids[b] = vm.bid
+            pids[b] = vm.pool
+        feas = pool.direct_mask_batch(demands, bids, pids)
         any_row = feas.any(axis=1)
         for b in np.flatnonzero(any_row):
             return int(b), self._pick_direct(feas[b], vms[b], pool)
@@ -255,17 +263,17 @@ class HlemVmp(AllocationPolicy):
 
     def find_host(self, vm, pool, now, allow_spot_clearing):
         if self.backend == "jax":
-            direct = pool.direct_mask_into(vm.demand)
+            direct = pool.direct_mask_into(vm.demand, vm.bid, vm.pool)
             if direct.any():
                 return self._pick_direct(direct, vm, pool), False
         else:
-            idx = pool.direct_idx_into(vm.demand)
+            idx = pool.direct_idx_into(vm.demand, vm.bid, vm.pool)
             if idx.size:
                 return self._pick_direct_idx(idx, vm, pool), False
         # spot-clearing list (Algorithm 1, lines 8-10) — on-demand only
         if allow_spot_clearing and not vm.is_spot:
             pool.refresh_reclaim(now)
-            clearing = pool.clearing_mask_into(vm.demand)
+            clearing = pool.clearing_mask_into(vm.demand, vm.bid, vm.pool)
             if clearing.any():
                 return self._pick_direct(clearing, vm, pool), True
         return -1, False
@@ -273,7 +281,8 @@ class HlemVmp(AllocationPolicy):
     def find_direct(self, vm, pool):
         if self.backend == "jax":
             return super().find_direct(vm, pool)
-        return self._pick_direct_idx(pool.direct_idx_into(vm.demand), vm, pool)
+        return self._pick_direct_idx(
+            pool.direct_idx_into(vm.demand, vm.bid, vm.pool), vm, pool)
 
     def _pick_batch(self, feas, vms, pool):
         B = feas.shape[0]

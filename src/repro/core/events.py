@@ -21,6 +21,7 @@ class EventKind(enum.Enum):
     WAIT_EXPIRE = "wait-expire"
     HIBERNATION_EXPIRE = "hibernation-expire"
     INTERRUPT_COMMIT = "interrupt-commit"   # end of the warning period
+    PRICE_TICK = "price-tick"               # market engine reprice + wave scan
     HOST_ADD = "host-add"
     HOST_REMOVE = "host-remove"
     HOST_UPDATE = "host-update"
@@ -36,6 +37,9 @@ PRIORITY = {
     EventKind.HOST_REMOVE: 3,
     EventKind.HIBERNATION_EXPIRE: 4,
     EventKind.WAIT_EXPIRE: 5,
+    # reprice after deallocations/expiries at t, before new submissions at t
+    # see the fresh price (ties with WAIT_EXPIRE break FIFO by seq)
+    EventKind.PRICE_TICK: 5,
     EventKind.VM_SUBMIT: 6,
     EventKind.END_OF_SIMULATION: 9,
 }

@@ -23,6 +23,22 @@ Incremental accounting (the trace-scale hot path):
   resubmission queue uses it to skip VMs whose placement can't possibly have
   become feasible since their last failed attempt.
 
+Market mode (price-driven engine; see ``repro.market.engine``):
+
+* Every host belongs to a *capacity pool* (``pool_of``; region / instance
+  class).  When a market engine is attached (:meth:`enable_market`), each
+  pool's clearing price is pushed down per tick via :meth:`set_pool_prices`
+  into a per-host price row, and all feasibility masks additionally require
+  ``host_price <= vm.bid`` (spot admission) and — when a VM is pool-pinned —
+  ``pool_of == vm.pool``.  A price *drop* is treated like a capacity gain:
+  the affected hosts are appended to the gain log so the resubmission memo
+  rechecks queued spot VMs whose bid now clears (price rises only shrink
+  masks, so memos stay valid without flooding).
+* Running spot VMs are mirrored in a dense *market registry* (bid / pool /
+  min-running-time-ready arrays with swap-remove).  Interruption-wave victim
+  selection is one masked comparison over these arrays
+  (:meth:`market_victims`) — no Python walk over residents.
+
 Contract: a spot VM's ``min_running_time`` must be set **before** it is
 placed; the reclaim index snapshots it at placement time.
 
@@ -88,6 +104,26 @@ class HostPool:
         self._scratch_row2 = np.zeros(n, dtype=bool)
         self._scratch_sum = np.zeros((n, N_DIMS), dtype=np.float64)
         self._scratch_dm = np.zeros(N_DIMS, dtype=np.float64)
+        # -- market state (inert until enable_market) ------------------------
+        #: capacity pool each host belongs to (region / instance class)
+        self.pool_of = np.zeros(n, dtype=np.int64)
+        self.n_pools = 1
+        self._market_on = False
+        #: current clearing price of each host's pool (0.0 = everything
+        #: admissible until the engine's first tick)
+        self._host_price = np.zeros(n, dtype=np.float64)
+        self._scratch_adm = np.zeros(n, dtype=bool)
+        # dense registry of RUNNING spot VMs for vectorized wave selection:
+        # (bid, pool, min-running-time expiry, vm id) with swap-remove
+        self._mk_cap = 0
+        self._mk_n = 0
+        self._mk_bid = np.zeros(0, dtype=np.float64)
+        self._mk_ready = np.zeros(0, dtype=np.float64)
+        self._mk_pool = np.zeros(0, dtype=np.int64)
+        self._mk_vid = np.zeros(0, dtype=np.int64)
+        self._mk_slot: Dict[int, int] = {}
+        #: last prices pushed by the engine (hosts added mid-run inherit them)
+        self._pool_prices = np.zeros(1, dtype=np.float64)
 
     # -- structural ---------------------------------------------------------
     def _grow(self, need: int) -> None:
@@ -117,6 +153,11 @@ class HostPool:
         self._scratch_row = np.zeros(new_cap, dtype=bool)
         self._scratch_row2 = np.zeros(new_cap, dtype=bool)
         self._scratch_sum = np.zeros((new_cap, N_DIMS), dtype=np.float64)
+        self.pool_of = np.concatenate(
+            [self.pool_of, np.zeros(pad, dtype=np.int64)])
+        self._host_price = np.concatenate(
+            [self._host_price, np.zeros(pad)])
+        self._scratch_adm = np.zeros(new_cap, dtype=bool)
 
     def _refresh_static_row(self, hid: int) -> None:
         """Recompute capacity-derived caches (host add / capacity update)."""
@@ -138,8 +179,9 @@ class HostPool:
         if self.active[hid]:
             self.gain_log.append(hid)
 
-    def add_host(self, capacity: np.ndarray) -> int:
-        """Register a new host; returns its id."""
+    def add_host(self, capacity: np.ndarray, pool: int = 0) -> int:
+        """Register a new host (optionally into capacity pool ``pool``);
+        returns its id."""
         hid = self.n_hosts
         self._grow(hid + 1)
         self.total[hid] = np.asarray(capacity, dtype=np.float64)
@@ -149,6 +191,17 @@ class HostPool:
         self.residents[hid] = dict()
         self.n_hosts += 1
         self._reclaim_ready[hid] = 0.0
+        assert pool >= 0, f"pool id must be >= 0, got {pool}"
+        if self._market_on:
+            # fail fast here instead of at an unrelated later tick: the
+            # engine's price vector is sized to its pool count
+            assert pool < self._pool_prices.size, (
+                f"host pool {pool} out of range for the attached market "
+                f"engine ({self._pool_prices.size} pools)")
+        self.pool_of[hid] = pool
+        self.n_pools = max(self.n_pools, pool + 1)
+        self._host_price[hid] = (self._pool_prices[pool]
+                                 if pool < self._pool_prices.size else 0.0)
         self._refresh_static_row(hid)
         self._refresh_row(hid)
         self._log_gain(hid)
@@ -220,9 +273,12 @@ class HostPool:
         return self._rs_tot_cpu[: self.n], self._rs_util_cpu[: self.n]
 
     # -- feasibility masks (scratch-backed, zero per-call allocation) --------
-    def direct_mask_into(self, demand: np.ndarray) -> np.ndarray:
-        """Hosts that fit ``demand`` right now.  Returns a view into a scratch
-        buffer — consume (or copy) before the next ``*_mask_into`` call."""
+    def direct_mask_into(self, demand: np.ndarray, bid: float = np.inf,
+                         pid: int = -1) -> np.ndarray:
+        """Hosts that fit ``demand`` right now (and, in market mode, whose
+        pool clears at <= ``bid`` / matches a ``pid`` pin).  Returns a view
+        into a scratch buffer — consume (or copy) before the next
+        ``*_mask_into`` call."""
         n = self.n
         np.subtract(demand, _EPS, out=self._scratch_dm)
         np.greater_equal(self._free[:n], self._scratch_dm,
@@ -231,9 +287,12 @@ class HostPool:
                               out=self._scratch_row[:n])
         np.logical_and(self._scratch_row[:n], self.active[:n],
                        out=self._scratch_row[:n])
+        if (self._market_on and bid != np.inf) or pid >= 0:
+            self.market_admit(self._scratch_row[:n], bid, pid)
         return self._scratch_row[:n]
 
-    def clearing_mask_into(self, demand: np.ndarray) -> np.ndarray:
+    def clearing_mask_into(self, demand: np.ndarray, bid: float = np.inf,
+                           pid: int = -1) -> np.ndarray:
         """Hosts that fit ``demand`` after deallocating interruptible spot VMs
         (§VI-A).  Uses the cached reclaimable sums; callers must
         :meth:`refresh_reclaim` first.  Scratch-backed like
@@ -248,20 +307,38 @@ class HostPool:
                               out=self._scratch_row2[:n])
         np.logical_and(self._scratch_row2[:n], self.active[:n],
                        out=self._scratch_row2[:n])
+        if (self._market_on and bid != np.inf) or pid >= 0:
+            self.market_admit(self._scratch_row2[:n], bid, pid)
         return self._scratch_row2[:n]
 
-    def direct_idx_into(self, demand: np.ndarray) -> np.ndarray:
+    def direct_idx_into(self, demand: np.ndarray, bid: float = np.inf,
+                        pid: int = -1) -> np.ndarray:
         """Candidate host ids fitting ``demand`` (fresh index array; one
         C-level nonzero pass over the scratch mask)."""
-        return self.direct_mask_into(demand).nonzero()[0]
+        return self.direct_mask_into(demand, bid, pid).nonzero()[0]
 
-    def direct_mask_batch(self, demands: np.ndarray) -> np.ndarray:
+    def direct_mask_batch(self, demands: np.ndarray,
+                          bids: Optional[np.ndarray] = None,
+                          pids: Optional[np.ndarray] = None) -> np.ndarray:
         """(B, n) feasibility matrix for a batch of demands — one vectorized
-        comparison for the whole resubmission queue."""
+        comparison for the whole resubmission queue.  ``bids`` / ``pids``
+        (per-row bid and pool pin) apply the market admission of
+        :meth:`market_admit` row-wise."""
         demands = np.asarray(demands, dtype=np.float64)
         n = self.n
         ok = np.all(self._free[None, :n] >= demands[:, None] - _EPS, axis=2)
-        return ok & self.active[:n][None]
+        ok &= self.active[:n][None]
+        if self._market_on and bids is not None:
+            finite = np.isfinite(bids)
+            if finite.any():
+                ok &= ((self._host_price[None, :n] <= bids[:, None] + _EPS)
+                       | ~finite[:, None])
+        if pids is not None:
+            pinned = pids >= 0
+            if pinned.any():
+                ok &= ((self.pool_of[None, :n] == pids[:, None])
+                       | ~pinned[:, None])
+        return ok
 
     # -- allocation ---------------------------------------------------------
     def fits(self, hid: int, demand: np.ndarray) -> bool:
@@ -290,6 +367,8 @@ class HostPool:
         if spot:
             self.spot_used[hid] += vm.demand
             self._register_reclaim(vm, hid, now)
+            if self._market_on:
+                self._mk_add(vm, hid, now)
         self.residents[hid][vm.id] = vm
         vm.host = hid
         self._refresh_row(hid, spot_changed=spot)
@@ -307,6 +386,8 @@ class HostPool:
         if spot:
             self.spot_used[hid] -= vm.demand
             self._drop_reclaim(vm, hid)
+            if self._market_on:
+                self._mk_drop(vm.id)
             np.maximum(self.spot_used[hid], 0.0, out=self.spot_used[hid])
         del self.residents[hid][vm.id]
         vm.host = -1
@@ -342,6 +423,8 @@ class HostPool:
         left RUNNING, e.g. received an interruption warning)."""
         if vm.host >= 0:
             self._drop_reclaim(vm, vm.host)
+            if self._market_on:
+                self._mk_drop(vm.id)
             self.epoch += 1
 
     def refresh_reclaim(self, now: float) -> None:
@@ -361,6 +444,130 @@ class HostPool:
             self._reclaim_ready[hid] += vm.demand
             self._reclaim_counted[vid] = hid
             self.epoch += 1
+
+    # -- market mode ---------------------------------------------------------
+    def enable_market(self, n_pools: int) -> None:
+        """Switch on price admission + the wave-selection registry.  Must be
+        called before any spot VM is placed (the registry mirrors placements
+        from this point on)."""
+        assert self._mk_n == 0 and not any(
+            v.is_spot for r in self.residents[: self.n] for v in r.values()
+        ), "enable_market must precede spot placements"
+        assert int(self.pool_of[: self.n].max(initial=-1)) < n_pools, (
+            "existing hosts reference pools beyond the engine's pool count")
+        self._market_on = True
+        self.n_pools = max(self.n_pools, n_pools)
+        if self._pool_prices.size < self.n_pools:
+            self._pool_prices = np.zeros(self.n_pools, dtype=np.float64)
+
+    @property
+    def market_on(self) -> bool:
+        return self._market_on
+
+    def set_pool_prices(self, prices: np.ndarray) -> None:
+        """Push per-pool clearing prices down to the per-host price row.
+
+        A price *drop* re-opens hosts to queued spot VMs whose bid now
+        clears; those hosts are appended to the gain log so the resubmission
+        memo rechecks exactly the VMs that might benefit (``fits_fast`` is
+        capacity-only, which is conservative but correct: the full mask still
+        applies price admission).  Price rises only shrink masks, so existing
+        memos stay valid.
+        """
+        prices = np.asarray(prices, dtype=np.float64)
+        n = self.n
+        self._pool_prices = prices.copy()
+        new = prices[self.pool_of[:n]]
+        np.less(new, self._host_price[:n] - 1e-15, out=self._scratch_adm[:n])
+        np.logical_and(self._scratch_adm[:n], self.active[:n],
+                       out=self._scratch_adm[:n])
+        if self._scratch_adm[:n].any():
+            self.gain_log.extend(np.flatnonzero(self._scratch_adm[:n]).tolist())
+        self._host_price[:n] = new
+        self.epoch += 1
+
+    def market_admit(self, row_mask: np.ndarray, bid: float,
+                     pid: int) -> np.ndarray:
+        """AND market admission into ``row_mask`` in place: hosts whose pool
+        clears at <= ``bid`` (skipped for infinite bids / market off) and —
+        when ``pid >= 0`` — hosts belonging to pool ``pid``."""
+        n = self.n
+        if self._market_on and bid != np.inf:
+            np.less_equal(self._host_price[:n], bid + _EPS,
+                          out=self._scratch_adm[:n])
+            np.logical_and(row_mask, self._scratch_adm[:n], out=row_mask)
+        if pid >= 0:
+            np.equal(self.pool_of[:n], pid, out=self._scratch_adm[:n])
+            np.logical_and(row_mask, self._scratch_adm[:n], out=row_mask)
+        return row_mask
+
+    def pool_cpu_utilization(self) -> np.ndarray:
+        """(n_pools,) CPU utilization per capacity pool over active hosts —
+        the demand signal driving each pool's price process."""
+        n = self.n
+        act = self.active[:n]
+        pools = self.pool_of[:n][act]
+        used = np.bincount(pools, weights=self.used[:n, 0][act],
+                           minlength=self.n_pools)
+        tot = np.bincount(pools, weights=self.total[:n, 0][act],
+                          minlength=self.n_pools)
+        return np.divide(used, tot, out=np.zeros(self.n_pools),
+                         where=tot > 0)
+
+    # -- market registry (vectorized wave selection) -------------------------
+    def _mk_grow(self, need: int) -> None:
+        if need <= self._mk_cap:
+            return
+        cap = max(need, max(self._mk_cap * 2, 64))
+
+        def pad(a, dtype):
+            out = np.zeros(cap, dtype=dtype)
+            out[: a.size] = a
+            return out
+
+        self._mk_bid = pad(self._mk_bid, np.float64)
+        self._mk_ready = pad(self._mk_ready, np.float64)
+        self._mk_pool = pad(self._mk_pool, np.int64)
+        self._mk_vid = pad(self._mk_vid, np.int64)
+        self._mk_cap = cap
+
+    def _mk_add(self, vm: Vm, hid: int, now: float) -> None:
+        i = self._mk_n
+        self._mk_grow(i + 1)
+        self._mk_bid[i] = vm.bid
+        self._mk_ready[i] = now + vm.min_running_time
+        self._mk_pool[i] = self.pool_of[hid]
+        self._mk_vid[i] = vm.id
+        self._mk_slot[vm.id] = i
+        self._mk_n = i + 1
+
+    def _mk_drop(self, vid: int) -> None:
+        i = self._mk_slot.pop(vid, None)
+        if i is None:
+            return
+        last = self._mk_n - 1
+        if i != last:  # swap-remove keeps the arrays dense
+            self._mk_bid[i] = self._mk_bid[last]
+            self._mk_ready[i] = self._mk_ready[last]
+            self._mk_pool[i] = self._mk_pool[last]
+            moved = int(self._mk_vid[last])
+            self._mk_vid[i] = moved
+            self._mk_slot[moved] = i
+        self._mk_n = last
+
+    def market_victims(self, prices: np.ndarray,
+                       now: float) -> Tuple[np.ndarray, np.ndarray]:
+        """(victim vm ids, their pools): running spot VMs past their minimum
+        running time whose bid is strictly below their pool's clearing price.
+        One masked comparison over the dense registry — no per-VM walk."""
+        m = self._mk_n
+        if m == 0:
+            empty = np.zeros(0, dtype=np.int64)
+            return empty, empty
+        pools = self._mk_pool[:m]
+        mask = self._mk_bid[:m] < np.asarray(prices, float)[pools] - _EPS
+        mask &= self._mk_ready[:m] <= now + _EPS
+        return self._mk_vid[:m][mask].copy(), pools[mask].copy()
 
     # -- gain log ------------------------------------------------------------
     def gain_pos(self) -> int:
@@ -440,3 +647,20 @@ class HostPool:
                                    atol=1e-6), (
                     f"host {hid}: reclaimable {self._reclaim_ready[hid]} != "
                     f"interruptible sum {expect} at t={now}")
+        if self._market_on:
+            # market registry mirrors RUNNING resident spot VMs exactly
+            assert len(self._mk_slot) == self._mk_n
+            for vid, i in self._mk_slot.items():
+                assert int(self._mk_vid[i]) == vid
+            running = {v.id for hid in range(n)
+                       for v in self.residents[hid].values()
+                       if v.is_spot and v.state is VmState.RUNNING}
+            assert set(self._mk_slot) == running, (
+                f"market registry {set(self._mk_slot)} != running spot "
+                f"{running}")
+            for hid in range(n):
+                for v in self.residents[hid].values():
+                    if v.id in self._mk_slot:
+                        i = self._mk_slot[v.id]
+                        assert self._mk_bid[i] == v.bid
+                        assert int(self._mk_pool[i]) == int(self.pool_of[hid])

@@ -20,6 +20,17 @@ class InterruptionEvent:
     time: float
     host: int
     kind: str  # "terminate" | "hibernate" | "host-removed"
+    cause: str = "capacity"  # | "price-wave" (market engine bid crossing)
+
+
+@dataclass
+class WaveEvent:
+    """One price-driven interruption wave in one capacity pool: at ``time``
+    the pool's clearing price crossed ``size`` resident spot bids."""
+    time: float
+    pool: int
+    price: float
+    size: int
 
 
 def _timeline_bucket(state: VmState, vm_type: VmType) -> int:
@@ -58,6 +69,10 @@ class Metrics:
     preemption_scans: int = 0
     # incremental state counters, indexed by _timeline_bucket (slot 0 unused)
     state_counts: List[int] = field(default_factory=lambda: [0, 0, 0, 0, 0])
+    # -- market engine series (empty when no engine is attached) -------------
+    # (t, pool, clearing price) per pool per PRICE_TICK
+    price_series: List[tuple] = field(default_factory=list)
+    wave_events: List[WaveEvent] = field(default_factory=list)
 
     def on_transition(self, vm: Vm, old: VmState, new: VmState) -> None:
         """Update the incremental counters for one VM state change."""
@@ -126,6 +141,32 @@ class Metrics:
             "spot_finished_after_interruption": finished_after_interruption,
             "spot_finished_uninterrupted": uninterrupted_finished,
             "spot_terminated": terminated,
+        }
+
+    def market_stats(self) -> dict:
+        """Price/wave aggregates of a market-engine run (paper-style market
+        risk summary).  All-zero when no engine was attached."""
+        waves = self.wave_events
+        sizes = [w.size for w in waves]
+        price_interruptions = sum(
+            1 for e in self.interruption_events if e.cause == "price-wave")
+        by_pool: Dict[int, List[float]] = {}
+        for (_, pid, price) in self.price_series:
+            by_pool.setdefault(pid, []).append(price)
+        pool_rows = {
+            pid: {
+                "mean_price": float(np.mean(ps)),
+                "max_price": float(np.max(ps)),
+                "price_cv": float(np.std(ps) / max(np.mean(ps), 1e-12)),
+            }
+            for pid, ps in sorted(by_pool.items())
+        }
+        return {
+            "waves": len(waves),
+            "wave_victims": int(sum(sizes)),
+            "max_wave_size": int(max(sizes, default=0)),
+            "price_interruptions": price_interruptions,
+            "pools": pool_rows,
         }
 
 

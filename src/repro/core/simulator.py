@@ -34,7 +34,7 @@ import numpy as np
 from .allocation import AllocationPolicy, FirstFit
 from .events import Event, EventKind, EventQueue
 from .hosts import HostPool
-from .metrics import InterruptionEvent, Metrics
+from .metrics import InterruptionEvent, Metrics, WaveEvent
 from .types import (
     ExecutionInterval,
     InterruptionBehavior,
@@ -61,11 +61,22 @@ class MarketSimulator:
     """Discrete-event spot-market simulator."""
 
     def __init__(self, policy: Optional[AllocationPolicy] = None,
-                 config: Optional[SimConfig] = None):
+                 config: Optional[SimConfig] = None,
+                 engine=None):
+        """``engine`` — optional :class:`repro.market.engine.MarketEngine`.
+        When attached, the simulator runs periodic PRICE_TICK events: each
+        tick re-clears every capacity pool's price from live utilization,
+        interrupts resident spot VMs whose bid the price crossed (a
+        vectorized *interruption wave*), and re-flushes the queue so victims
+        can reallocate into cheaper pools.  Engines are stateful (price
+        processes, cost integrals): use a fresh engine per run.  With
+        ``engine=None`` every code path is bit-identical to the engine-less
+        simulator."""
         self.policy = policy or FirstFit()
         self.config = config or SimConfig()
         assert self.config.flush_mode in ("batched", "per_vm")
         self.pool = HostPool()
+        self.engine = engine
         self.queue = EventQueue()
         self.vms: Dict[int, Vm] = {}
         self.metrics = Metrics()
@@ -80,10 +91,25 @@ class MarketSimulator:
         self._retry_pos: Dict[int, int] = {}
         self.listeners: Dict[str, List[Callable]] = {}
         self._next_vm_id = 0
+        self._run_limit = self.config.max_time
+        self._tick_armed = False
+        if engine is not None:
+            self.pool.enable_market(engine.n_pools)
+            self._arm_tick(0.0)
+
+    def _arm_tick(self, t: float) -> None:
+        """(Re)start the PRICE_TICK chain.  The chain stops itself when the
+        simulator goes fully idle, so every entry point that can introduce
+        new activity (submit, scheduled host events) must re-arm it —
+        otherwise later-submitted VMs would be admitted against frozen
+        prices."""
+        if self.engine is not None and not self._tick_armed:
+            self._tick_armed = True
+            self.queue.push(max(t, self.now), EventKind.PRICE_TICK)
 
     # ------------------------------------------------------------------ setup
-    def add_host(self, capacity: np.ndarray) -> int:
-        return self.pool.add_host(capacity)
+    def add_host(self, capacity: np.ndarray, pool: int = 0) -> int:
+        return self.pool.add_host(capacity, pool)
 
     def on(self, event_name: str, fn: Callable) -> None:
         """Register an event listener (CloudSim Plus EventListener analogue).
@@ -103,6 +129,7 @@ class MarketSimulator:
         assert vm.id not in self.vms, f"duplicate vm id {vm.id}"
         self.vms[vm.id] = vm
         self.queue.push(vm.submit_time, EventKind.VM_SUBMIT, vm.id)
+        self._arm_tick(vm.submit_time)
 
     def new_vm_id(self) -> int:
         while self._next_vm_id in self.vms:
@@ -111,15 +138,20 @@ class MarketSimulator:
         self._next_vm_id += 1
         return vid
 
-    def schedule_host_add(self, time: float, capacity: np.ndarray) -> None:
-        self.queue.push(time, EventKind.HOST_ADD, np.asarray(capacity, float))
+    def schedule_host_add(self, time: float, capacity: np.ndarray,
+                          pool: int = 0) -> None:
+        self.queue.push(time, EventKind.HOST_ADD,
+                        (np.asarray(capacity, float), pool))
+        self._arm_tick(time)
 
     def schedule_host_remove(self, time: float, hid: int) -> None:
         self.queue.push(time, EventKind.HOST_REMOVE, hid)
+        self._arm_tick(time)
 
     def schedule_host_update(self, time: float, hid: int, capacity) -> None:
         self.queue.push(time, EventKind.HOST_UPDATE,
                         (hid, np.asarray(capacity, float)))
+        self._arm_tick(time)
 
     # ----------------------------------------------------------- transitions
     def _set_state(self, vm: Vm, new: VmState) -> None:
@@ -134,7 +166,13 @@ class MarketSimulator:
     # ------------------------------------------------------------------- run
     def run(self, until: Optional[float] = None) -> Metrics:
         limit = until if until is not None else self.config.max_time
+        self._run_limit = limit
         heap = self.queue._heap  # hot loop: skip peek/pop wrapper calls
+        if (self.engine is not None and not self._tick_armed
+                and (heap or sum(self.metrics.state_counts[1:]) > 0)):
+            # the chain stopped in a previous run (idle, or queued-only
+            # state under an unbounded horizon); resume it for this run
+            self._arm_tick(self.now)
         heappop = heapq.heappop
         strict = self.config.strict_invariants
         while heap and heap[0][0] <= limit:
@@ -164,8 +202,10 @@ class MarketSimulator:
                 self._on_hibernation_expire(vm)
         elif kind is EventKind.INTERRUPT_COMMIT:
             self._on_interrupt_commit(ev.payload)
+        elif kind is EventKind.PRICE_TICK:
+            self._on_price_tick()
         elif kind is EventKind.HOST_ADD:
-            self.pool.add_host(ev.payload)
+            self.pool.add_host(*ev.payload)
             self._flush_pending()
         elif kind is EventKind.HOST_REMOVE:
             self._on_host_remove(ev.payload)
@@ -282,6 +322,16 @@ class MarketSimulator:
         return True
 
     def _on_interrupt_commit(self, payload) -> None:
+        if payload[0] == "wave":
+            # end of a price-wave warning window: apply each victim's behavior
+            for vid in payload[1]:
+                v = self.vms[vid]
+                if v.state is not VmState.INTERRUPTING:
+                    continue  # finished during the warning
+                self._interrupt(v, kind=v.behavior.value, cause="price-wave")
+            self._flush_pending()
+            self._record()
+            return
         hid, od_id, victim_ids = payload
         od = self.vms[od_id]
         self._pending_victims.pop(hid, None)
@@ -298,13 +348,14 @@ class MarketSimulator:
         self._flush_pending()
         self._record()
 
-    def _interrupt(self, vm: Vm, kind: str) -> None:
+    def _interrupt(self, vm: Vm, kind: str, cause: str = "capacity") -> None:
         """Stop a running/interrupting spot VM and apply its behavior."""
         self._account_progress(vm)
         self.pool.release(vm)
         vm.interruptions += 1
         self.metrics.interruption_events.append(
-            InterruptionEvent(vm.id, self.now, vm.history[-1].host, kind))
+            InterruptionEvent(vm.id, self.now, vm.history[-1].host, kind,
+                              cause))
         self._emit("vm_interrupted", vm=vm, kind=kind)
         if vm.remaining <= _EPS:
             self._finish_now(vm)
@@ -323,6 +374,58 @@ class MarketSimulator:
             self._set_state(vm, VmState.TERMINATED)
             vm.generation += 1
             self._emit("vm_terminated", vm=vm)
+
+    # ------------------------------------------------------------ market tick
+    def _on_price_tick(self) -> None:
+        """Re-clear every pool's price from live utilization, then emit the
+        interruption wave: one masked comparison over the market registry
+        selects every resident spot VM whose bid the new price crossed."""
+        eng = self.engine
+        t = self.now
+        prices = eng.tick(self.pool, t)
+        self.pool.set_pool_prices(prices)
+        m = self.metrics
+        for pid in range(eng.n_pools):
+            m.price_series.append((t, pid, float(prices[pid])))
+        victims, vpools = self.pool.market_victims(prices, t)
+        if victims.size:
+            counts = np.bincount(vpools, minlength=eng.n_pools)
+            for pid in np.flatnonzero(counts):
+                m.wave_events.append(
+                    WaveEvent(t, int(pid), float(prices[pid]),
+                              int(counts[pid])))
+            w = self.config.warning_time
+            if w > 0:
+                vids = [int(v) for v in victims]
+                for vid in vids:
+                    v = self.vms[vid]
+                    self._set_state(v, VmState.INTERRUPTING)
+                    self.pool.mark_uninterruptible(v)
+                self.queue.push(t + w, EventKind.INTERRUPT_COMMIT,
+                                ("wave", vids))
+            else:
+                for vid in victims:
+                    v = self.vms[int(vid)]
+                    self._interrupt(v, kind=v.behavior.value,
+                                    cause="price-wave")
+        # capacity freed by the wave (and any price drops, via the gain log)
+        # feeds straight back into the queue — victims can land in a cheaper
+        # pool within the same tick
+        self._flush_pending()
+        self._record()
+        # keep ticking while any event or live VM remains (the chain is the
+        # only self-scheduling event kind, so it must not outlive the run).
+        # With an *unbounded* horizon, queued-only state (WAITING/HIBERNATED
+        # with infinite timeouts, gated purely on a price that may never
+        # clear) must not keep the chain alive — the pre-engine simulator
+        # terminated there, and run(until=inf) would otherwise never return.
+        c = m.state_counts
+        bounded = self._run_limit != float("inf")
+        if (self.queue._heap or c[1] + c[2] > 0
+                or (bounded and c[3] + c[4] > 0)):
+            self.queue.push(t + eng.tick_interval, EventKind.PRICE_TICK)
+        else:
+            self._tick_armed = False  # idle: submit()/schedule_* re-arm
 
     def _account_progress(self, vm: Vm) -> None:
         """Close the current execution interval and decrement remaining work."""
@@ -458,6 +561,10 @@ class MarketSimulator:
         Queued VMs never trigger new preemption cascades (see the per-VM
         loop's note), so only direct placements are considered."""
         if not (self._waiting_od or self._waiting_spot or self._hibernated):
+            # still bound the gain log: market price *drops* flood it every
+            # tick (hosts re-opened to queued bids), and with no queued VMs
+            # nobody would otherwise ever consume or compact those entries
+            self._maybe_compact_gains()
             return
         queues = self._queues()
         while True:

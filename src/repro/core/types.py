@@ -79,6 +79,15 @@ class Vm:
     # Persistent-request configuration (both types may be persistent, §V-D):
     persistent: bool = True
     waiting_timeout: float = float("inf")
+    # Market configuration (price-driven engine; ignored when no engine runs):
+    #   bid  — max clearing price this spot VM pays; the engine interrupts it
+    #          whenever its pool's price exceeds the bid, and admission masks
+    #          only open hosts whose pool currently clears at <= bid.  The
+    #          inf default means "pay whatever" (never price-interrupted).
+    #   pool — capacity-pool constraint: >= 0 pins the VM to that pool
+    #          (region-bound); -1 lets it run in any pool whose price clears.
+    bid: float = float("inf")
+    pool: int = -1
     # --- runtime state ---
     state: VmState = VmState.CREATED
     host: int = -1
@@ -139,12 +148,15 @@ def make_spot(
     persistent: bool = True,
     waiting_timeout: float = float("inf"),
     submit_time: float = 0.0,
+    bid: float = float("inf"),
+    pool: int = -1,
 ) -> Vm:
     return Vm(
         id=vm_id, demand=demand, vm_type=VmType.SPOT, duration=duration,
         behavior=behavior, min_running_time=min_running_time,
         hibernation_timeout=hibernation_timeout, persistent=persistent,
         waiting_timeout=waiting_timeout, submit_time=submit_time,
+        bid=bid, pool=pool,
     )
 
 
@@ -156,9 +168,10 @@ def make_on_demand(
     persistent: bool = True,
     waiting_timeout: float = float("inf"),
     submit_time: float = 0.0,
+    pool: int = -1,
 ) -> Vm:
     return Vm(
         id=vm_id, demand=demand, vm_type=VmType.ON_DEMAND, duration=duration,
         persistent=persistent, waiting_timeout=waiting_timeout,
-        submit_time=submit_time,
+        submit_time=submit_time, pool=pool,
     )

@@ -2,6 +2,13 @@
 
   python -m repro.launch.market_sim --scenario synthetic --policy all
   python -m repro.launch.market_sim --scenario trace --machines 200
+  python -m repro.launch.market_sim --market                 # price regimes
+  python -m repro.launch.market_sim --market --regimes volatile --pools 3
+
+``--market`` runs the dynamic market engine: multi-pool price clearing over
+the §VII-E synthetic fleet, HLEM vs First-Fit under calm / volatile /
+correlated-pool price regimes, reporting interruption counts, max
+interruption duration, and realized spot cost (billed at clearing price).
 """
 from __future__ import annotations
 
@@ -20,10 +27,21 @@ from ..core import (
     synthetic_scenario,
     to_csv,
 )
-from ..market import TraceConfig, generate_trace, simulate_trace
+from ..market import (
+    MarketEngine,
+    REGIMES,
+    TraceConfig,
+    assign_bids,
+    generate_trace,
+    make_bid_strategy,
+    make_market,
+    realized_cost_stats,
+    simulate_trace,
+)
 
 POLICY_SET = ["first-fit", "best-fit", "worst-fit", "hlem-vmp",
               "hlem-vmp-adjusted"]
+MARKET_POLICY_SET = ["first-fit", "hlem-vmp-adjusted"]
 
 
 def run_synthetic(policy_name: str, seed: int, until: float,
@@ -47,6 +65,52 @@ def run_synthetic(policy_name: str, seed: int, until: float,
     return stats
 
 
+def run_market(policy_name: str, regime: str, seed: int, until: float,
+               n_pools: int = 2, bid_strategy: str = "randomized",
+               tick_interval: float = 60.0, alpha: float = -0.5) -> dict:
+    """One engine-coupled run: §VII-E fleet split round-robin into
+    ``n_pools`` capacity pools, seeded bids on every spot VM, price-driven
+    interruption waves, realized-price cost accounting."""
+    hosts, vms = synthetic_scenario(ScenarioConfig(seed=seed))
+    mc = make_market(regime, n_pools=n_pools, seed=seed,
+                     tick_interval=tick_interval)
+    engine = MarketEngine(mc)
+    vms = [copy.deepcopy(v) for v in vms]
+    strat = make_bid_strategy(bid_strategy, pool_cfg=mc.pools[0], seed=seed)
+    assign_bids(vms, strat, seed=seed)
+    kwargs = {"alpha": alpha} if policy_name == "hlem-vmp-adjusted" else {}
+    sim = MarketSimulator(policy=make_policy(policy_name, **kwargs),
+                          config=SimConfig(record_timeline=False),
+                          engine=engine)
+    for i, cap in enumerate(hosts):
+        sim.add_host(cap, pool=i % n_pools)
+    for v in vms:
+        sim.submit(v)
+    t0 = time.time()
+    m = sim.run(until=until)
+    wall = time.time() - t0
+    s = m.spot_stats(sim.vms)
+    ms = m.market_stats()
+    cost = realized_cost_stats(sim.vms.values(), engine, sim.pool)
+    return {
+        "policy": policy_name,
+        "regime": regime,
+        "interruptions": s["interruptions"],
+        "price_interruptions": ms["price_interruptions"],
+        "waves": ms["waves"],
+        "max_wave_size": ms["max_wave_size"],
+        "avg_interruption_time": s["avg_interruption_time"],
+        "max_interruption_time": s["max_interruption_time"],
+        "spot_finished": s["spot_finished"],
+        "spot_terminated": s["spot_terminated"],
+        "realized_spot_cost": round(cost["spot_cost"], 4),
+        "savings_pct": round(cost["savings_pct"], 1),
+        "wasted_cost": round(cost["wasted_cost"], 4),
+        "allocations": m.allocations,
+        "wall_s": round(wall, 1),
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", choices=["synthetic", "trace"],
@@ -63,7 +127,41 @@ def main(argv=None) -> int:
     ap.add_argument("--spot", type=int, default=1000)
     ap.add_argument("--days", type=float, default=0.25)
     ap.add_argument("--json", action="store_true")
+    # market-engine mode
+    ap.add_argument("--market", action="store_true",
+                    help="run the dynamic market engine across price regimes")
+    ap.add_argument("--regimes", default="calm,volatile,correlated",
+                    help="comma-separated subset of " + ",".join(REGIMES))
+    ap.add_argument("--pools", type=int, default=2)
+    ap.add_argument("--bid-strategy", default="randomized",
+                    choices=["on-demand-cap", "percentile", "randomized"])
+    ap.add_argument("--tick", type=float, default=60.0,
+                    help="price tick interval (s)")
     args = ap.parse_args(argv)
+
+    if args.market:
+        policies = (MARKET_POLICY_SET if args.policy == "all"
+                    else [args.policy])
+        rows = []
+        for regime in args.regimes.split(","):
+            for p in policies:
+                rows.append(run_market(
+                    p, regime, args.seed, args.until, n_pools=args.pools,
+                    bid_strategy=args.bid_strategy,
+                    tick_interval=args.tick, alpha=args.alpha))
+        if args.json:
+            print(json.dumps(rows, indent=1))
+        else:
+            print(f"{'regime':11s} {'policy':18s} {'intr':>5s} {'waves':>5s} "
+                  f"{'max_intr_s':>10s} {'spot_cost':>9s} {'save%':>6s} "
+                  f"{'waste':>7s}")
+            for r in rows:
+                print(f"{r['regime']:11s} {r['policy']:18s} "
+                      f"{r['interruptions']:5d} {r['waves']:5d} "
+                      f"{r['max_interruption_time']:10.1f} "
+                      f"{r['realized_spot_cost']:9.3f} "
+                      f"{r['savings_pct']:6.1f} {r['wasted_cost']:7.3f}")
+        return 0
 
     if args.scenario == "synthetic":
         policies = POLICY_SET if args.policy == "all" else [args.policy]

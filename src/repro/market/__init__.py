@@ -1,5 +1,11 @@
 """repro.market — scenario layers above the core simulator.
 
+* ``engine``      — dynamic market engine: multi-pool price clearing +
+                    vectorized interruption waves (PRICE_TICK coupling).
+* ``pools``       — capacity-pool / regime configuration (calm, volatile,
+                    correlated multi-pool).
+* ``bids``        — spot bid strategies (on-demand cap, percentile of
+                    history, randomized per Bhuyan et al.).
 * ``trace``       — Google-Cluster-Trace-style machine/task event generation,
                     CSV reading, and trace-driven simulation (paper §VII-C/D).
 * ``advisor``     — synthetic AWS Spot-Instance-Advisor dataset (§VII-F).
@@ -7,7 +13,17 @@
                     measures for mixed categorical-numeric data (§VII-F).
 """
 from .advisor import generate_advisor_dataset
-from .pricing import PriceModel, cost_stats
+from .bids import (
+    OnDemandCapBid,
+    PercentileBid,
+    RandomizedBid,
+    assign_bids,
+    make_bid_strategy,
+    reference_history,
+)
+from .engine import MarketEngine
+from .pools import MarketConfig, PoolConfig, REGIMES, make_market
+from .pricing import PriceModel, cost_stats, realized_cost_stats
 from .price_process import (
     AuctionPrice,
     SmoothedPrice,

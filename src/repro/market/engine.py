@@ -1,0 +1,148 @@
+"""Dynamic market engine: price-clearing over multi-pool spot markets.
+
+This is the layer the paper's title promises — a *marketspace* where spot
+prices move with supply/demand and trigger interruption, hibernation, and
+reallocation — wired into :class:`repro.core.MarketSimulator` through
+periodic PRICE_TICK events:
+
+1. Each tick, every capacity pool's clearing price is drawn from its price
+   process (``AuctionPrice`` / ``SmoothedPrice``, §II-B) fed with the pool's
+   *live* CPU utilization (one ``bincount`` over the host arrays), optionally
+   mixed with a shared demand shock (correlated-pool regime).  Policy choices
+   feed back into prices: tighter packing → higher clearing prices.
+2. Prices are pushed into the host pool (``set_pool_prices``): feasibility
+   masks then require ``pool price <= vm.bid`` for spot admission, and price
+   *drops* re-open queued spot VMs via the gain-log memo.
+3. The simulator asks for the *interruption wave*: one masked comparison
+   over the pool's dense spot registry (``market_victims``) selects every
+   resident spot VM whose bid the new price crossed; victims route through
+   the ordinary TERMINATE/HIBERNATE/resubmit lifecycle, so a hibernated
+   victim can reallocate into a cheaper pool at a later flush.
+
+The engine also integrates each pool's piecewise-constant price over time so
+realized spot cost (billed at clearing price, not a flat discount) is exact:
+see :func:`repro.market.pricing.realized_cost_stats`.
+
+Engines are stateful (seeded price processes, cost integrals) — use a fresh
+engine per simulation run.
+"""
+from __future__ import annotations
+
+import bisect
+from typing import List, Tuple
+
+import numpy as np
+
+from .pools import MarketConfig, PoolConfig
+from .price_process import AuctionPrice, SmoothedPrice
+
+
+def _build_process(cfg: PoolConfig):
+    kw = dict(cfg.process_kwargs)
+    if cfg.process == "auction":
+        return AuctionPrice(on_demand_rate=cfg.on_demand_rate,
+                            seed=cfg.seed, **kw)
+    assert cfg.process == "smoothed", f"unknown process {cfg.process!r}"
+    return SmoothedPrice(on_demand_rate=cfg.on_demand_rate, seed=cfg.seed,
+                         **kw)
+
+
+class MarketEngine:
+    """Multi-pool price clearing + vectorized interruption waves."""
+
+    def __init__(self, config: MarketConfig):
+        self.config = config
+        self.n_pools = len(config.pools)
+        assert self.n_pools >= 1, "market needs at least one pool"
+        self.tick_interval = float(config.tick_interval)
+        self.processes = [_build_process(p) for p in config.pools]
+        self.od_rates = np.array([p.on_demand_rate for p in config.pools])
+        self._rng = np.random.default_rng(config.seed)
+        self.prices = np.zeros(self.n_pools)
+        # piecewise-constant price history: at tick k (time _ts[k]) pool i
+        # clears at _price_hist[i][k]; _cum[i][k] = ∫_0^{_ts[k]} price dt
+        self._ts: List[float] = []
+        self._price_hist: List[List[float]] = [[] for _ in range(self.n_pools)]
+        self._cum: List[List[float]] = [[] for _ in range(self.n_pools)]
+
+    # ------------------------------------------------------------------ tick
+    def tick(self, host_pool, now: float) -> np.ndarray:
+        """Advance every pool's price process one step against live pool
+        utilization; returns the new (n_pools,) clearing-price vector.  The
+        caller (simulator) pushes the prices into the host pool and collects
+        the wave."""
+        util = host_pool.pool_cpu_utilization()
+        if util.size < self.n_pools:
+            util = np.concatenate(
+                [util, np.zeros(self.n_pools - util.size)])
+        if self.config.correlation > 0.0:
+            shock = self.config.correlation * float(
+                self._rng.normal(0.0, self.config.shock_sigma))
+            util = np.clip(util + shock, 0.0, 1.0)
+        # close the previous price segment in the integrals
+        if self._ts:
+            dt = now - self._ts[-1]
+            for i in range(self.n_pools):
+                self._cum[i].append(self._cum[i][-1]
+                                    + self._price_hist[i][-1] * dt)
+        else:
+            for i in range(self.n_pools):
+                self._cum[i].append(0.0)
+        self._ts.append(now)
+        for i in range(self.n_pools):
+            p = float(self.processes[i].price(float(util[i])))
+            self.prices[i] = p
+            self._price_hist[i].append(p)
+        return self.prices
+
+    def price_of(self, pid: int) -> float:
+        return float(self.prices[pid])
+
+    # ------------------------------------------------------- realized pricing
+    def price_integral(self, pid: int, t0: float, t1: float,
+                       cap: float = float("inf")) -> float:
+        """∫_{t0}^{t1} min(price_pid(t), cap) dt over the piecewise-constant
+        clearing price (0 before the first tick; last price extends past the
+        final tick).
+
+        ``cap`` implements the bid contract — a spot VM never pays above its
+        bid even while it rides out a price spike (minimum running time, or
+        the interruption-warning window)."""
+        if t1 <= t0 or not self._ts:
+            return 0.0
+        if cap == float("inf"):
+            return self._integral_to(pid, t1) - self._integral_to(pid, t0)
+        ts, ph = self._ts, self._price_hist[pid]
+        i1 = bisect.bisect_right(ts, t1) - 1
+        if i1 < 0:
+            return 0.0
+        i0 = bisect.bisect_right(ts, t0) - 1
+        if i0 < 0:       # the span before the first tick prices at 0
+            t0, i0 = ts[0], 0
+            if t1 <= t0:
+                return 0.0
+        if i0 == i1:
+            return min(ph[i0], cap) * (t1 - t0)
+        total = min(ph[i0], cap) * (ts[i0 + 1] - t0)
+        for k in range(i0 + 1, i1):
+            total += min(ph[k], cap) * (ts[k + 1] - ts[k])
+        total += min(ph[i1], cap) * (t1 - ts[i1])
+        return total
+
+    def _integral_to(self, pid: int, t: float) -> float:
+        k = bisect.bisect_right(self._ts, t) - 1
+        if k < 0:
+            return 0.0
+        return self._cum[pid][k] + self._price_hist[pid][k] * (t - self._ts[k])
+
+    def discount_integral(self, pid: int, t0: float, t1: float,
+                          cap: float = float("inf")) -> float:
+        """∫ min(price, cap)/on_demand_rate dt — the time-integrated discount
+        factor a spot VM realized while running in pool ``pid``."""
+        return self.price_integral(pid, t0, t1, cap) / max(
+            float(self.od_rates[pid]), 1e-12)
+
+    # ------------------------------------------------------------- reporting
+    def price_series(self, pid: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(tick times, clearing prices) of one pool."""
+        return (np.asarray(self._ts), np.asarray(self._price_hist[pid]))

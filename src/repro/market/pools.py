@@ -1,0 +1,68 @@
+"""Capacity-pool and market-regime configuration for the dynamic market
+engine (paper §II-B spot marketspaces; Voorsluys et al. bid-price
+provisioning).
+
+A *capacity pool* models one (region, instance-class) spot market: it owns a
+price process (``AuctionPrice`` pre-2017 / ``SmoothedPrice`` post-2017) that
+clears against the pool's live utilization.  A :class:`MarketConfig` bundles
+the pools with the engine's tick interval and an optional cross-pool demand
+correlation (a shared utilization shock, so prices of correlated pools spike
+together — the "correlated multi-pool" regime of the market-risk analysis).
+
+:func:`make_market` builds the three standard regimes benchmarked in
+``launch/market_sim.py --market``:
+
+* ``calm``       — smoothed processes, no shocks: post-2017-style stability.
+* ``volatile``   — auction processes with heavy-tailed shocks per pool.
+* ``correlated`` — volatile pools driven by a shared demand shock on top of
+  their own: diversification across pools stops helping.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+REGIMES = ("calm", "volatile", "correlated")
+
+
+@dataclass
+class PoolConfig:
+    """One spot capacity pool (region / instance class)."""
+
+    name: str
+    process: str = "smoothed"            # "auction" | "smoothed"
+    on_demand_rate: float = 1.0          # price ceiling; prices are fractions
+    seed: int = 0
+    process_kwargs: Dict[str, float] = field(default_factory=dict)
+
+
+@dataclass
+class MarketConfig:
+    pools: List[PoolConfig]
+    tick_interval: float = 60.0
+    #: weight of the shared demand shock mixed into every pool's utilization
+    #: signal (0 = independent pools); drives the correlated regime
+    correlation: float = 0.0
+    #: std-dev of the shared shock (only used when correlation > 0)
+    shock_sigma: float = 0.15
+    seed: int = 0
+
+
+def make_market(regime: str, n_pools: int = 2, seed: int = 0,
+                tick_interval: float = 60.0,
+                on_demand_rate: float = 1.0) -> MarketConfig:
+    """Build a :class:`MarketConfig` for one of the standard regimes."""
+    assert regime in REGIMES, f"unknown regime {regime!r} (want {REGIMES})"
+    if regime == "calm":
+        pools = [PoolConfig(f"pool{i}", process="smoothed",
+                            on_demand_rate=on_demand_rate, seed=seed + i,
+                            process_kwargs={"alpha": 0.2, "max_step": 0.05})
+                 for i in range(n_pools)]
+        return MarketConfig(pools, tick_interval=tick_interval, seed=seed)
+    pools = [PoolConfig(f"pool{i}", process="auction",
+                        on_demand_rate=on_demand_rate, seed=seed + i,
+                        process_kwargs={"shock_sigma": 0.45})
+             for i in range(n_pools)]
+    corr = 0.8 if regime == "correlated" else 0.0
+    return MarketConfig(pools, tick_interval=tick_interval,
+                        correlation=corr, shock_sigma=0.2, seed=seed)

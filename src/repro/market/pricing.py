@@ -55,6 +55,51 @@ class PriceModel:
         return hours * self.rate(vm.demand)
 
 
+def realized_cost_stats(vms: Iterable[Vm], engine, host_pool,
+                        model: PriceModel | None = None) -> Dict[str, float]:
+    """Cost accounting against the market engine's *realized* price series:
+    spot VMs are billed each execution interval at their pool's clearing
+    price (piecewise-constant between PRICE_TICKs), not a flat discount.
+
+    ``engine`` is the :class:`repro.market.engine.MarketEngine` that ran the
+    simulation (it holds the per-pool price integrals); ``host_pool`` maps
+    each interval's host to its capacity pool.  The billed price is capped
+    at the VM's bid — a spot VM riding out a spike above its bid (minimum
+    running time, or an interruption-warning window) pays its bid, never
+    the clearing price, honoring the bid contract.  On-demand VMs bill at
+    the flat on-demand rate, exactly as in :func:`cost_stats`.
+    """
+    model = model or PriceModel()
+    total = od_equiv = wasted = spot_cost = 0.0
+    pool_of = host_pool.pool_of
+    for vm in vms:
+        rate = model.rate(vm.demand)
+        od_c = model.vm_od_equivalent(vm)
+        od_equiv += od_c
+        if vm.vm_type is not VmType.SPOT:
+            total += od_c
+            continue
+        c = 0.0
+        for itv in vm.history:
+            if itv.stop is None:
+                continue
+            pid = int(pool_of[itv.host])
+            c += rate / 3600.0 * engine.discount_integral(
+                pid, itv.start, itv.stop, cap=vm.bid)
+        total += c
+        spot_cost += c
+        if vm.state is VmState.TERMINATED:
+            wasted += c
+    return {
+        "cost": total,
+        "od_equivalent": od_equiv,
+        "savings": od_equiv - total,
+        "savings_pct": 100.0 * (od_equiv - total) / max(od_equiv, 1e-12),
+        "spot_cost": spot_cost,
+        "wasted_cost": wasted,
+    }
+
+
 def cost_stats(vms: Iterable[Vm],
                model: PriceModel | None = None) -> Dict[str, float]:
     model = model or PriceModel()

@@ -126,6 +126,54 @@ def test_batch_jax_matches_batch_np():
             assert np.argmax(got[i]) == np.argmax(want[i])
 
 
+@pytest.mark.parametrize("b", [1, 4, 9])
+def test_batch_np_large_n_crossover(b):
+    """Above BATCH_NP_N_CUTOVER the batched scorer routes rows through the
+    compressed per-row oracle; both paths must agree on finiteness, values
+    (to summation-order tolerance), and — for downstream allocation — the
+    per-row argmax decision."""
+    from repro.core.hlem import BATCH_NP_N_CUTOVER
+    n = BATCH_NP_N_CUTOVER + 64
+    rng = np.random.default_rng(b)
+    free = rng.uniform(0, 50, (n, 4))
+    free[:, 3] = 7.0  # degenerate column survives both paths
+    masks = rng.random((b, n)) < 0.6
+    masks[-1] = False  # fully-masked row
+    spot = rng.uniform(0, 1, (n, 4))
+    alphas = np.where(rng.random(b) < 0.5, -0.5, 0.0)
+    routed = hlem_scores_batch_np(free, masks, spot, alphas)
+    # routed rows are exactly the per-row oracle
+    for i in range(b):
+        want = hlem_scores_np(free, masks[i], spot, alphas[i])
+        np.testing.assert_array_equal(routed[i], want)
+    # and agree with the broadcast core across the crossover
+    forced = hlem_scores_batch_np(free, masks, spot, alphas,
+                                  n_cutover=10 ** 9)
+    finite = np.isfinite(forced)
+    assert np.array_equal(np.isfinite(routed), finite)
+    np.testing.assert_allclose(routed[finite], forced[finite],
+                               rtol=1e-9, atol=1e-12)
+    for i in range(b):
+        if masks[i].any():
+            assert np.argmax(routed[i]) == np.argmax(forced[i])
+
+
+def test_batch_np_just_below_cutover_uses_broadcast_core():
+    """At n <= cutover the broadcast core is untouched (bit-for-bit) — the
+    trace-scale flush depends on its exact numerics."""
+    from repro.core.hlem import BATCH_NP_N_CUTOVER
+    rng = np.random.default_rng(99)
+    n, b = 64, 5
+    assert n <= BATCH_NP_N_CUTOVER
+    free = rng.uniform(0, 50, (n, 4))
+    masks = rng.random((b, n)) < 0.6
+    spot = rng.uniform(0, 1, (n, 4))
+    auto = hlem_scores_batch_np(free, masks, spot, -0.5)
+    forced = hlem_scores_batch_np(free, masks, spot, -0.5,
+                                  n_cutover=10 ** 9)
+    np.testing.assert_array_equal(auto, forced)
+
+
 def test_fused_pick_matches_scores_argmax():
     rng = np.random.default_rng(23)
     for trial in range(50):

@@ -1,0 +1,442 @@
+"""Dynamic market engine: price-driven interruption waves, price-gated
+admission, multi-pool reallocation, realized-price cost accounting, and
+fixed-seed determinism (PR 2 tentpole)."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FirstFit,
+    HlemVmpAdjusted,
+    HostPool,
+    InterruptionBehavior,
+    MarketSimulator,
+    SimConfig,
+    VmState,
+    make_on_demand,
+    make_spot,
+    resources,
+)
+from repro.market import (
+    MarketConfig,
+    MarketEngine,
+    OnDemandCapBid,
+    PercentileBid,
+    PoolConfig,
+    RandomizedBid,
+    assign_bids,
+    make_bid_strategy,
+    make_market,
+    realized_cost_stats,
+)
+
+_EPS = 1e-9
+
+
+class ScriptedProcess:
+    """Price process stub: returns a scripted sequence, then holds the last
+    value (ignores the utilization signal)."""
+
+    def __init__(self, seq):
+        self.seq = list(seq)
+        self.last = self.seq[-1]
+
+    def price(self, utilization: float) -> float:
+        if self.seq:
+            self.last = self.seq.pop(0)
+        return self.last
+
+
+def scripted_engine(*pool_price_seqs, tick=10.0) -> MarketEngine:
+    pools = [PoolConfig(f"p{i}") for i in range(len(pool_price_seqs))]
+    eng = MarketEngine(MarketConfig(pools, tick_interval=tick))
+    eng.processes = [ScriptedProcess(s) for s in pool_price_seqs]
+    return eng
+
+
+def market_sim(engine, policy=None, **sim_kw):
+    return MarketSimulator(
+        policy=policy or FirstFit(),
+        config=SimConfig(strict_invariants=True, **sim_kw),
+        engine=engine)
+
+
+# ---------------------------------------------------------------------------
+# wave selection (vectorized registry)
+# ---------------------------------------------------------------------------
+def test_market_victims_matches_python_reference():
+    pool = HostPool()
+    pool.enable_market(3)
+    rng = np.random.default_rng(0)
+    for h in range(12):
+        pool.add_host(resources(64, 131_072, 40_000, 1_600_000), pool=h % 3)
+    vms = []
+    for i in range(200):
+        vm = make_spot(i, resources(1, 512, 10, 1000), 1e5,
+                       bid=float(rng.uniform(0.1, 1.2)),
+                       min_running_time=float(rng.choice([0.0, 40.0])))
+        pool.place(vm, int(rng.integers(12)), now=0.0)
+        vm.state = VmState.RUNNING
+        vm.run_start = 0.0
+        vms.append(vm)
+    prices = np.array([0.3, 0.8, 0.05])
+    for now in (0.0, 39.0, 41.0):
+        vids, vpools = pool.market_victims(prices, now)
+        want = sorted(
+            v.id for v in vms
+            if v.interruptible(now)
+            and v.bid < prices[pool.pool_of[v.host]] - _EPS)
+        assert sorted(vids.tolist()) == want
+        assert all(int(vpools[k]) == int(pool.pool_of[vms[i].host])
+                   for k, i in enumerate(vids.tolist()))
+
+
+def test_wave_interrupts_only_bid_crossed_vms():
+    # price path: cheap, spike to 0.6, cheap again
+    eng = scripted_engine([0.1, 0.6, 0.1, 0.1, 0.1, 0.1], tick=10.0)
+    sim = market_sim(eng)
+    sim.add_host(resources(8, 16_384, 10_000, 1_000_000))
+    bids = (0.2, 0.5, 0.9)
+    spots = [make_spot(i, resources(2, 2048, 1000, 10_000), 200.0,
+                       hibernation_timeout=1000.0, bid=b)
+             for i, b in enumerate(bids)]
+    for v in spots:
+        sim.submit(v)
+    m = sim.run(until=400.0)
+    # the t=10 spike crosses bids 0.2 and 0.5, spares 0.9
+    assert spots[0].interruptions == 1
+    assert spots[1].interruptions == 1
+    assert spots[2].interruptions == 0
+    assert [e.cause for e in m.interruption_events] == ["price-wave"] * 2
+    assert len(m.wave_events) == 1
+    w = m.wave_events[0]
+    assert (w.time, w.pool, w.size) == (10.0, 0, 2)
+    assert w.price == pytest.approx(0.6)
+    # price drops at t=20: victims resume and everyone finishes
+    assert all(v.state is VmState.FINISHED for v in spots)
+    for v in spots[:2]:
+        assert v.history[1].start == 20.0
+
+
+def test_min_running_time_blocks_wave_selection():
+    eng = scripted_engine([0.9] * 40, tick=10.0)
+    sim = market_sim(eng)
+    sim.add_host(resources(4, 8192, 10_000, 1_000_000))
+    vm = make_spot(0, resources(2, 2048, 1000, 10_000), 300.0,
+                   min_running_time=35.0, bid=0.5,
+                   hibernation_timeout=1e6)
+    sim.submit(vm)
+    # admission: price is already above the bid at t=0, so the VM waits...
+    m = sim.run(until=5.0)
+    assert vm.state is VmState.WAITING
+    # ...so give it a cheap window to start, then a permanent spike
+    eng2 = scripted_engine([0.1, 0.9, 0.9, 0.9, 0.9, 0.9, 0.9], tick=10.0)
+    sim2 = market_sim(eng2)
+    sim2.add_host(resources(4, 8192, 10_000, 1_000_000))
+    vm2 = make_spot(0, resources(2, 2048, 1000, 10_000), 300.0,
+                    min_running_time=35.0, bid=0.5,
+                    hibernation_timeout=1e6)
+    sim2.submit(vm2)
+    m2 = sim2.run(until=200.0)
+    # protected at the t=10/20/30 ticks, first interruptible tick is t=40
+    assert vm2.interruptions >= 1
+    assert m2.interruption_events[0].time == 40.0
+
+
+def test_warning_time_delays_wave_commit():
+    eng = scripted_engine([0.1, 0.8, 0.8, 0.8, 0.8, 0.8], tick=10.0)
+    sim = market_sim(eng, warning_time=3.0)
+    sim.add_host(resources(4, 8192, 10_000, 1_000_000))
+    vm = make_spot(0, resources(2, 2048, 1000, 10_000), 500.0, bid=0.4,
+                   hibernation_timeout=1e6)
+    sim.submit(vm)
+    sim.run(until=50.0)
+    assert vm.interruptions == 1
+    # warning at t=10, commit (stop) at t=13
+    assert vm.history[0] .stop == pytest.approx(13.0)
+    assert vm.state is VmState.HIBERNATED
+
+
+def test_price_gated_admission_waits_for_price_drop():
+    """A spot VM whose bid is under the clearing price must queue even with
+    free capacity, and the price *drop* must reopen it through the gain-log
+    memo (regression: price drops don't release capacity, so without the
+    flood the memo would skip the VM forever)."""
+    eng = scripted_engine([0.8, 0.8, 0.8, 0.2, 0.2, 0.2], tick=10.0)
+    sim = market_sim(eng)
+    sim.add_host(resources(8, 16_384, 10_000, 1_000_000))
+    vm = make_spot(0, resources(2, 2048, 1000, 10_000), 50.0, bid=0.4)
+    # a second waiting VM ensures the batched-flush memo path is exercised
+    vm2 = make_spot(1, resources(2, 2048, 1000, 10_000), 50.0, bid=0.3)
+    sim.submit(vm)
+    sim.submit(vm2)
+    sim.run(until=200.0)
+    assert vm.state is VmState.FINISHED
+    assert vm2.state is VmState.FINISHED
+    # placed exactly at the t=30 tick where the price fell to 0.2
+    assert vm.history[0].start == 30.0
+    assert vm2.history[0].start == 30.0
+
+
+def test_hibernate_expire_resubmit_reallocation_chain():
+    """Satellite: full hibernate → HIBERNATION_EXPIRE → resubmission →
+    reallocation chain under price waves, across pools.
+
+    Pool 0 spikes permanently at t=20; pool 1 stays cheap but is full until
+    t=100.  The pool-0 spot VM hibernates at the spike, cannot reallocate
+    while pool 1 is occupied, and reallocates into the *cheaper pool* the
+    moment capacity frees there.  A second, shorter-timeout VM exhausts its
+    hibernation window first and must TERMINATE via HIBERNATION_EXPIRE."""
+    eng = scripted_engine(
+        [0.1, 0.1] + [0.9] * 40,   # pool 0: cheap until the t=20 tick spikes
+        [0.1] * 42,                # pool 1: always cheap
+        tick=10.0)
+    sim = market_sim(eng)
+    h0 = sim.add_host(resources(4, 8192, 10_000, 1_000_000), pool=0)
+    h1 = sim.add_host(resources(4, 8192, 10_000, 1_000_000), pool=1)
+    # pool 1 fully occupied by an on-demand VM until t=100
+    blocker = make_on_demand(10, resources(4, 8192, 10_000, 1_000_000),
+                             100.0, pool=1)
+    survivor = make_spot(0, resources(2, 2048, 1000, 10_000), 60.0,
+                         bid=0.5, hibernation_timeout=500.0, pool=-1)
+    expirer = make_spot(1, resources(2, 2048, 1000, 10_000), 60.0,
+                        bid=0.5, hibernation_timeout=30.0, pool=0)
+    for v in (blocker, survivor, expirer):
+        sim.submit(v)
+    m = sim.run(until=600.0)
+
+    # both spot VMs started on the pool-0 host and hibernated at the t=20 spike
+    for v in (survivor, expirer):
+        assert v.history[0].host == h0
+        assert v.history[0].stop == 20.0
+        assert v.interruptions == 1
+    assert m.wave_events and m.wave_events[0].time == 20.0
+    # the short-timeout VM expired while pool 1 was still blocked
+    assert expirer.state is VmState.TERMINATED
+    assert expirer.hibernated_at == 20.0
+    # the survivor resubmitted into the cheaper pool when the blocker finished
+    assert survivor.state is VmState.FINISHED
+    assert survivor.history[1].host == h1
+    assert survivor.history[1].start == 100.0
+    assert survivor.interruption_gaps() == [80.0]  # hibernated 20 → 100
+
+
+# ---------------------------------------------------------------------------
+# realized-price cost accounting
+# ---------------------------------------------------------------------------
+def test_realized_cost_integrates_clearing_price():
+    eng = scripted_engine([0.5, 0.5, 0.5, 0.5, 0.5, 0.25, 0.25, 0.25,
+                           0.25, 0.25, 0.25], tick=10.0)
+    sim = market_sim(eng)
+    sim.add_host(resources(4, 8192, 10_000, 1_000_000))
+    vm = make_spot(0, resources(2, 2048, 1000, 10_000), 100.0, bid=1.0)
+    od = make_on_demand(1, resources(2, 2048, 1000, 10_000), 100.0)
+    sim.submit(vm)
+    sim.submit(od)
+    sim.run(until=300.0)
+    assert vm.state is VmState.FINISHED and od.state is VmState.FINISHED
+    # price is 0.5 on [0, 50), 0.25 afterwards; the VM ran [0, 100)
+    want_integral = 50 * 0.5 + 50 * 0.25
+    assert eng.price_integral(0, 0.0, 100.0) == pytest.approx(want_integral)
+    from repro.market.pricing import PriceModel
+    model = PriceModel()
+    stats = realized_cost_stats(sim.vms.values(), eng, sim.pool, model)
+    rate = model.rate(vm.demand)
+    assert stats["spot_cost"] == pytest.approx(
+        rate / 3600.0 * want_integral)
+    # on-demand VM bills flat
+    assert stats["cost"] == pytest.approx(
+        stats["spot_cost"] + rate * 100.0 / 3600.0)
+    assert stats["wasted_cost"] == 0.0
+
+
+def test_realized_cost_caps_billing_at_the_bid():
+    """A VM riding out a spike above its bid (protected by minimum running
+    time) pays its bid for that stretch, never the clearing price."""
+    # placed at 0.2, spikes to 0.9 at t=10 while min_running_time=35 protects
+    # the VM; it is interrupted at the first eligible tick (t=40)
+    eng = scripted_engine([0.2] + [0.9] * 30, tick=10.0)
+    sim = market_sim(eng)
+    sim.add_host(resources(4, 8192, 10_000, 1_000_000))
+    vm = make_spot(0, resources(2, 2048, 1000, 10_000), 500.0, bid=0.5,
+                   min_running_time=35.0,
+                   behavior=InterruptionBehavior.TERMINATE)
+    sim.submit(vm)
+    sim.run(until=100.0)
+    assert vm.state is VmState.TERMINATED
+    assert vm.history[0].stop == 40.0
+    # billed: 10s at 0.2, then 30s at min(0.9, bid=0.5)
+    want = 10 * 0.2 + 30 * 0.5
+    assert eng.price_integral(0, 0.0, 40.0, cap=0.5) == pytest.approx(want)
+    from repro.market.pricing import PriceModel
+    model = PriceModel()
+    stats = realized_cost_stats(sim.vms.values(), eng, sim.pool, model)
+    assert stats["spot_cost"] == pytest.approx(
+        model.rate(vm.demand) / 3600.0 * want)
+    # the lost partial work is wasted spend (TERMINATE behavior)
+    assert stats["wasted_cost"] == stats["spot_cost"]
+
+
+# ---------------------------------------------------------------------------
+# bid strategies
+# ---------------------------------------------------------------------------
+def test_bid_strategies_seeded_and_bounded():
+    vms = [make_spot(i, resources(1, 1024, 10, 1000), 10.0)
+           for i in range(50)]
+    vms.append(make_on_demand(99, resources(1, 1024, 10, 1000), 10.0))
+    assign_bids(vms, OnDemandCapBid(fraction=0.8), seed=0)
+    assert all(v.bid == pytest.approx(0.8) for v in vms if v.is_spot)
+    assert vms[-1].bid == float("inf")  # on-demand untouched
+
+    assign_bids(vms, RandomizedBid(lo=0.3, hi=0.9), seed=1)
+    bids1 = [v.bid for v in vms if v.is_spot]
+    assert all(0.3 <= b <= 0.9 for b in bids1)
+    assert len(set(bids1)) > 1
+    assign_bids(vms, RandomizedBid(lo=0.3, hi=0.9), seed=1)
+    assert [v.bid for v in vms if v.is_spot] == bids1  # seeded replay
+
+    strat = make_bid_strategy("percentile",
+                              pool_cfg=PoolConfig("p", process="auction"),
+                              seed=3, pct=80.0)
+    assign_bids(vms, strat, seed=0)
+    b = next(v.bid for v in vms if v.is_spot)
+    hist = strat.history
+    assert b == pytest.approx(float(np.percentile(hist, 80.0)))
+
+
+# ---------------------------------------------------------------------------
+# determinism: two identical runs are bit-identical
+# ---------------------------------------------------------------------------
+def _small_market_run(policy, seed=7):
+    rng = np.random.default_rng(seed)
+    mc = make_market("volatile", n_pools=2, seed=seed, tick_interval=20.0)
+    eng = MarketEngine(mc)
+    sim = MarketSimulator(policy=policy,
+                          config=SimConfig(record_timeline=True),
+                          engine=eng)
+    for h in range(10):
+        sim.add_host(resources(16, 32_768, 10_000, 400_000), pool=h % 2)
+    vms = []
+    for i in range(120):
+        demand = resources(float(rng.choice([1, 2, 4])), 2048, 100, 10_000)
+        t0 = float(rng.uniform(0.0, 300.0))
+        if rng.random() < 0.6:
+            vms.append(make_spot(i, demand, float(rng.uniform(50, 400)),
+                                 hibernation_timeout=400.0,
+                                 min_running_time=5.0, submit_time=t0))
+        else:
+            vms.append(make_on_demand(i, demand,
+                                      float(rng.uniform(50, 400)),
+                                      submit_time=t0))
+    assign_bids(vms, RandomizedBid(lo=0.3, hi=1.0), seed=seed)
+    for v in vms:
+        sim.submit(v)
+    m = sim.run(until=2000.0)
+    cost = realized_cost_stats(sim.vms.values(), eng, sim.pool)
+    return sim, m, cost
+
+
+@pytest.mark.parametrize("policy_factory",
+                         [FirstFit, lambda: HlemVmpAdjusted(alpha=-0.5)])
+def test_market_run_bit_identical_across_runs(policy_factory):
+    sim1, m1, c1 = _small_market_run(policy_factory())
+    sim2, m2, c2 = _small_market_run(policy_factory())
+    assert m1.interruption_events == m2.interruption_events
+    assert m1.wave_events == m2.wave_events
+    assert m1.price_series == m2.price_series
+    assert m1.timeline == m2.timeline
+    assert m1.allocations == m2.allocations
+    assert m1.resubmissions == m2.resubmissions
+    assert m1.spot_stats(sim1.vms) == m2.spot_stats(sim2.vms)
+    assert m1.market_stats() == m2.market_stats()
+    assert c1 == c2  # realized cost, exact float equality
+    for v1, v2 in zip(sim1.all_vms(), sim2.all_vms()):
+        assert v1.state is v2.state
+        assert [(h.host, h.start, h.stop) for h in v1.history] == \
+               [(h.host, h.start, h.stop) for h in v2.history]
+
+
+def test_unbounded_run_terminates_with_price_gated_queue():
+    """run() without a horizon must return even when the only remaining
+    state is a spot VM whose bid never clears (the tick chain must not
+    keep itself alive forever on queued-only state)."""
+    eng = scripted_engine([0.9], tick=10.0)   # holds 0.9 forever
+    sim = market_sim(eng)
+    sim.add_host(resources(4, 8192, 10_000, 1_000_000))
+    vm = make_spot(0, resources(2, 2048, 1000, 10_000), 50.0, bid=0.3)
+    sim.submit(vm)
+    sim.run()  # until=inf
+    assert vm.state is VmState.WAITING
+
+
+def test_out_of_range_pool_fails_fast_at_add_host():
+    eng = scripted_engine([0.5], tick=10.0)   # 1 pool
+    sim = market_sim(eng)
+    with pytest.raises(AssertionError, match="out of range"):
+        sim.add_host(resources(4, 8192, 10_000, 1_000_000), pool=2)
+
+
+def test_cap_and_randomized_strategies_inherit_pool_od_rate():
+    cfg = PoolConfig("p", on_demand_rate=2.0)
+    cap = make_bid_strategy("on-demand-cap", pool_cfg=cfg, fraction=1.0)
+    assert cap.bids(1, np.random.default_rng(0))[0] == pytest.approx(2.0)
+    rnd = make_bid_strategy("randomized", pool_cfg=cfg, lo=0.5, hi=1.0)
+    bids = rnd.bids(100, np.random.default_rng(0))
+    assert bids.min() >= 1.0 and bids.max() <= 2.0
+
+
+def test_tick_chain_rearms_after_idle_for_late_submissions():
+    """Once all work finishes the tick chain stops; a VM submitted *after*
+    that must not be admitted against frozen prices — submit() re-arms the
+    chain, the price re-clears, and the VM places at the fresh price."""
+    # price 0.9 through the first phase (ticks at t=0..50, after which the
+    # chain goes idle), 0.1 once ticking resumes
+    eng = scripted_engine([0.9] * 6 + [0.1], tick=10.0)
+    sim = market_sim(eng)
+    sim.add_host(resources(4, 8192, 10_000, 1_000_000))
+    first = make_spot(0, resources(2, 2048, 1000, 10_000), 50.0, bid=1.0)
+    sim.submit(first)
+    sim.run(until=150.0)
+    assert first.state is VmState.FINISHED
+    ticks_phase1 = len(sim.metrics.price_series)
+    # chain is now idle-dead; a low-bid VM arrives later
+    late = make_spot(1, resources(2, 2048, 1000, 10_000), 40.0, bid=0.3,
+                     submit_time=200.0)
+    sim.submit(late)
+    sim.run(until=400.0)
+    # ticking resumed at t=200, re-cleared to 0.1 < bid, VM ran to completion
+    assert len(sim.metrics.price_series) > ticks_phase1
+    assert late.state is VmState.FINISHED
+    assert late.history[0].start == 200.0
+
+
+def test_gain_log_stays_bounded_under_price_oscillation():
+    """Price drops flood the gain log every tick; with empty resubmission
+    queues the flush must still compact it, or a long volatile run leaks
+    O(ticks x hosts) entries."""
+    eng = scripted_engine([0.9, 0.1] * 600, tick=10.0)  # drop every other tick
+    sim = market_sim(eng)
+    n_hosts = 40
+    for _ in range(n_hosts):
+        sim.add_host(resources(8, 16_384, 10_000, 1_000_000))
+    # one infinite-bid spot VM keeps the tick chain alive, queues stay empty
+    vm = make_spot(0, resources(1, 1024, 100, 1000), 11_000.0)
+    sim.submit(vm)
+    sim.run(until=10_000.0)
+    assert len(sim.metrics.price_series) == 1001  # chain ran the whole time
+    assert len(sim.pool.gain_log) <= max(1024, 4 * n_hosts)
+
+
+def test_engine_off_leaves_market_machinery_inert():
+    sim = MarketSimulator(policy=FirstFit(),
+                          config=SimConfig(strict_invariants=True))
+    sim.add_host(resources(4, 8192, 10_000, 1_000_000))
+    vm = make_spot(0, resources(2, 2048, 1000, 10_000), 20.0, bid=0.01)
+    sim.submit(vm)
+    m = sim.run(until=100.0)
+    # bid is ignored entirely without an engine: no gating, no waves
+    assert vm.state is VmState.FINISHED
+    assert vm.interruptions == 0
+    assert not sim.pool.market_on
+    assert m.price_series == [] and m.wave_events == []
