@@ -1,19 +1,25 @@
 """CI perf gate: fail if a benchmark row regressed vs a committed baseline.
 
   python -m benchmarks.check_regression results/bench/BENCH_ci.json \\
-      --baseline results/bench/BENCH_pr1.json \\
+      --baseline results/bench/BENCH_pr3.json \\
       --metric trace/hlem-vmp-adjusted --max-ratio 2.0
 
-Compares ``us_per_call`` of ``--metric`` between the two ``BENCH_*.json``
-artifacts and exits 1 when ``current > max_ratio * baseline``.  The 2x
-default absorbs shared-runner noise (the repo's benchmarks are best-of-N,
-but CI hosts still swing); genuine hot-path regressions are well past it.
+Compares ``us_per_call`` of each ``--metric`` between the two
+``BENCH_*.json`` artifacts and exits 1 when ``current > max_ratio *
+baseline`` for any of them.  The 2x default absorbs shared-runner noise
+(the repo's benchmarks are best-of-N, but CI hosts still swing); genuine
+hot-path regressions are well past it.
 
 ``--reference-metric`` makes the gate machine-independent: both sides are
-divided by a same-artifact reference row first (CI uses
-``trace/per_vm_reference`` — the legacy flush path measured in the same
-run), so a CI runner that is uniformly slower than the machine that produced
-the committed baseline does not trip the gate.
+divided by a same-artifact reference row first, so a CI runner that is
+uniformly slower than the machine that produced the committed baseline does
+not trip the gate.
+
+``--metric`` / ``--reference-metric`` accept comma-separated lists and are
+paired positionally (CI gates ``trace/hlem-vmp-adjusted`` against the
+same-run legacy flush and ``market/wave_select_m20000`` against the
+same-run per-VM Python walk in one invocation).  A reference entry of ``-``
+means "no normalization for this metric".
 """
 from __future__ import annotations
 
@@ -31,29 +37,47 @@ def _row(path: str, name: str) -> float:
     raise SystemExit(f"error: no row named {name!r} in {path}")
 
 
+def _check(current: str, baseline: str, metric: str, reference: str | None,
+           max_ratio: float) -> bool:
+    cur = _row(current, metric)
+    base = _row(baseline, metric)
+    unit = "us"
+    if reference:
+        cur /= max(_row(current, reference), 1e-9)
+        base /= max(_row(baseline, reference), 1e-9)
+        unit = f"x {reference}"
+    ratio = cur / max(base, 1e-9)
+    ok = ratio <= max_ratio
+    print(f"{metric}: current={cur:.3f}{unit} baseline={base:.3f}{unit} "
+          f"ratio={ratio:.2f}x (max {max_ratio:.1f}x) -> "
+          f"{'OK' if ok else 'REGRESSION'}")
+    return ok
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current", help="freshly produced BENCH_<label>.json")
-    ap.add_argument("--baseline", default="results/bench/BENCH_pr1.json")
-    ap.add_argument("--metric", default="trace/hlem-vmp-adjusted")
+    ap.add_argument("--baseline", default="results/bench/BENCH_pr3.json")
+    ap.add_argument("--metric", default="trace/hlem-vmp-adjusted",
+                    help="comma-separated benchmark row names")
     ap.add_argument("--max-ratio", type=float, default=2.0)
     ap.add_argument("--reference-metric", default=None,
-                    help="normalize both sides by this same-artifact row "
-                         "(machine-independent comparison)")
+                    help="comma-separated same-artifact rows to normalize "
+                         "by, paired with --metric ('-' = no normalization)")
     args = ap.parse_args(argv)
 
-    cur = _row(args.current, args.metric)
-    base = _row(args.baseline, args.metric)
-    unit = "us"
-    if args.reference_metric:
-        cur /= max(_row(args.current, args.reference_metric), 1e-9)
-        base /= max(_row(args.baseline, args.reference_metric), 1e-9)
-        unit = f"x {args.reference_metric}"
-    ratio = cur / max(base, 1e-9)
-    status = "OK" if ratio <= args.max_ratio else "REGRESSION"
-    print(f"{args.metric}: current={cur:.3f}{unit} baseline={base:.3f}{unit} "
-          f"ratio={ratio:.2f}x (max {args.max_ratio:.1f}x) -> {status}")
-    return 0 if ratio <= args.max_ratio else 1
+    metrics = [m for m in args.metric.split(",") if m]
+    refs = (args.reference_metric.split(",")
+            if args.reference_metric else [None] * len(metrics))
+    if len(refs) != len(metrics):
+        raise SystemExit("error: --reference-metric count must match "
+                         "--metric count")
+    ok = True
+    for metric, ref in zip(metrics, refs):
+        ref = None if ref in (None, "", "-") else ref
+        ok &= _check(args.current, args.baseline, metric, ref,
+                     args.max_ratio)
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

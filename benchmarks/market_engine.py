@@ -4,11 +4,15 @@ Two rows per registry size:
 
 * ``market/wave_select_m<N>`` — interruption-wave victim selection over a
   dense registry of N running spot VMs: one masked comparison
-  (:meth:`HostPool.market_victims`) vs the equivalent per-VM Python walk,
-  cross-checked for identical victim sets.
-* ``market/engine_e2e_volatile`` — end-to-end §VII-E run with the engine
-  under the volatile regime (price ticks + waves + price-gated admission),
-  us per allocation.
+  (:meth:`HostPool.market_victims`) vs the equivalent per-VM Python walk
+  (``market/wave_select_pyloop_m<N>``, the row the CI gate normalizes
+  against), cross-checked for identical victim sets.
+* ``market/engine_e2e_volatile`` — end-to-end market-scenario run with the
+  engine under the volatile regime (price ticks + waves + price-gated
+  admission), us per allocation.
+* ``market/engine_e2e_migration`` — the same run with the gradient-aware
+  migration planner attached (PR 3): planner overhead rides on the same
+  metric.
 """
 from __future__ import annotations
 
@@ -69,11 +73,13 @@ def run(quick: bool = True):
         rows.append(emit(
             f"market/wave_select_m{m}", t_vec,
             f"victims={vec.size};speedup_vs_pyloop={t_ref / t_vec:.1f}x"))
+        rows.append(emit(f"market/wave_select_pyloop_m{m}", t_ref,
+                         f"victims={len(ref)}"))
 
     from repro.launch.market_sim import run_market
+    until = 3600.0 if quick else 14400.0
     t0 = time.time()
-    r = run_market("hlem-vmp-adjusted", "volatile", seed=0,
-                   until=1200.0 if quick else 2200.0)
+    r = run_market("hlem-vmp-adjusted", "volatile", seed=0, until=until)
     wall = time.time() - t0
     rows.append(emit(
         "market/engine_e2e_volatile",
@@ -81,4 +87,14 @@ def run(quick: bool = True):
         f"allocations={r['allocations']};waves={r['waves']};"
         f"price_interruptions={r['price_interruptions']};"
         f"spot_cost={r['realized_spot_cost']}"))
+    t0 = time.time()
+    r = run_market("hlem-vmp-adjusted", "volatile", seed=0, until=until,
+                   migration="gradient-aware")
+    wall = time.time() - t0
+    rows.append(emit(
+        "market/engine_e2e_migration",
+        wall * 1e6 / max(r["allocations"], 1),
+        f"allocations={r['allocations']};migrations={r['migrations']};"
+        f"price_interruptions={r['price_interruptions']};"
+        f"downtime_s={r['migration_downtime_s']}"))
     return rows

@@ -1,0 +1,84 @@
+"""Migration-planner throughput (PR 3 tentpole).
+
+Rows per registry size:
+
+* ``migration/plan_m<N>``       — one full planning pass (dense masked
+  screen over a registry of N running spot VMs + impact-aware commit loop)
+  via :meth:`MigrationPlanner.plan`.
+* ``migration/plan_pyref_m<N>`` — the decision-identical per-VM Python
+  oracle (:func:`plan_reference`), cross-checked for identical plans.  This
+  is the row the CI gate normalizes against: the planner must stay a dense
+  vectorized computation, not a Python walk over the registry.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import HostPool, VmState, make_spot, resources
+from repro.market import (
+    MarketEngine,
+    MigrationConfig,
+    MigrationPlanner,
+    make_market,
+    plan_reference,
+)
+
+from .common import emit, timeit
+
+N_POOLS = 4
+
+
+def _build(m: int, seed: int = 0):
+    """Registry of ``m`` RUNNING spot VMs over an N-pool fleet with live
+    utilization, plus an engine with a few ticks of price history (the
+    gradient window's input)."""
+    pool = HostPool()
+    pool.enable_market(N_POOLS)
+    rng = np.random.default_rng(seed)
+    n_hosts = max(m // 50, N_POOLS)
+    vms_per_host = m / n_hosts
+    for h in range(n_hosts):
+        # pool utilizations spread ~0.55..0.85 so clearing prices differ and
+        # a realistic slice of the registry is at risk / has a refuge
+        util_target = 0.55 + 0.10 * (h % N_POOLS)
+        cap = resources(vms_per_host / util_target, 1e12, 1e9, 1e12)
+        pool.add_host(cap, pool=h % N_POOLS)
+    for i in range(m):
+        vm = make_spot(i, resources(1, 1024, 10, 1000), 1e6,
+                       bid=float(rng.uniform(0.15, 1.0)),
+                       min_running_time=float(rng.choice([0.0, 50.0])))
+        pool.place(vm, i % n_hosts, now=0.0)  # even spread; hosts never overfill
+        vm.state = VmState.RUNNING
+        vm.run_start = 0.0
+    eng = MarketEngine(make_market("volatile", n_pools=N_POOLS, seed=seed,
+                                   tick_interval=60.0))
+    for k in range(6):
+        prices = eng.tick(pool, 60.0 * k)
+        pool.set_pool_prices(prices)
+    return pool, eng
+
+
+def run(quick: bool = True):
+    rows = []
+    sizes = [2_000, 20_000] if quick else [2_000, 20_000, 200_000]
+    inflight = np.zeros(N_POOLS, dtype=np.int64)
+    now = 360.0
+    for m in sizes:
+        pool, eng = _build(m)
+        planner = MigrationPlanner(MigrationConfig(
+            policy="risk-budgeted", min_remaining=10.0, cooldown=0.0))
+        vec = planner.plan(pool, eng, now, inflight)
+        ref = plan_reference(planner, pool, eng, now, inflight)
+        assert [(p.vm_id, p.dst_pool) for p in vec] == \
+               [(p.vm_id, p.dst_pool) for p in ref], "plans diverge"
+        assert all(abs(a.predicted_saving - b.predicted_saving) < 1e-9
+                   for a, b in zip(vec, ref))
+        t_vec = timeit(lambda: planner.plan(pool, eng, now, inflight), n=9)
+        t_ref = timeit(
+            lambda: plan_reference(planner, pool, eng, now, inflight), n=3)
+        rows.append(emit(
+            f"migration/plan_m{m}", t_vec,
+            f"plans={len(vec)};speedup_vs_pyref={t_ref / t_vec:.1f}x"))
+        rows.append(emit(f"migration/plan_pyref_m{m}", t_ref,
+                         f"plans={len(ref)}"))
+    return rows

@@ -34,6 +34,7 @@ from .hosts import HostPool
 from .metrics import (
     InterruptionEvent,
     Metrics,
+    MigrationEvent,
     WaveEvent,
     dynamic_vm_table,
     execution_table,
@@ -57,8 +58,10 @@ from .workload import (
     HOST_COUNTS,
     HOST_TYPES,
     VM_PROFILES,
+    MarketScenarioConfig,
     ScenarioConfig,
     build_hosts,
+    market_scenario,
     random_fleet,
     random_vms,
     synthetic_scenario,

@@ -22,6 +22,8 @@ class EventKind(enum.Enum):
     HIBERNATION_EXPIRE = "hibernation-expire"
     INTERRUPT_COMMIT = "interrupt-commit"   # end of the warning period
     PRICE_TICK = "price-tick"               # market engine reprice + wave scan
+    MIGRATE_START = "migrate-start"         # planner-chosen VM leaves its host
+    MIGRATE_COMPLETE = "migrate-complete"   # end of the stop-and-copy window
     HOST_ADD = "host-add"
     HOST_REMOVE = "host-remove"
     HOST_UPDATE = "host-update"
@@ -34,6 +36,9 @@ PRIORITY = {
     EventKind.HOST_UPDATE: 0,
     EventKind.VM_FINISH: 1,
     EventKind.INTERRUPT_COMMIT: 2,
+    # a migration arrival is an allocation: process after same-time finishes
+    # and wave commits so it sees settled capacity
+    EventKind.MIGRATE_COMPLETE: 2,
     EventKind.HOST_REMOVE: 3,
     EventKind.HIBERNATION_EXPIRE: 4,
     EventKind.WAIT_EXPIRE: 5,
@@ -41,6 +46,9 @@ PRIORITY = {
     # see the fresh price (ties with WAIT_EXPIRE break FIFO by seq)
     EventKind.PRICE_TICK: 5,
     EventKind.VM_SUBMIT: 6,
+    # migrations are opportunistic: same-time fresh submissions claim
+    # capacity first, the start handler re-validates its reservation target
+    EventKind.MIGRATE_START: 7,
     EventKind.END_OF_SIMULATION: 9,
 }
 

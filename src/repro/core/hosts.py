@@ -113,17 +113,31 @@ class HostPool:
         #: admissible until the engine's first tick)
         self._host_price = np.zeros(n, dtype=np.float64)
         self._scratch_adm = np.zeros(n, dtype=bool)
-        # dense registry of RUNNING spot VMs for vectorized wave selection:
-        # (bid, pool, min-running-time expiry, vm id) with swap-remove
+        # dense registry of RUNNING spot VMs for vectorized wave selection and
+        # migration-planner scoring: (bid, pool, min-running-time expiry,
+        # vm id, host, cpu demand, remaining work at placement, placement
+        # time, pool pin, migration-cooldown expiry) with swap-remove
         self._mk_cap = 0
         self._mk_n = 0
         self._mk_bid = np.zeros(0, dtype=np.float64)
         self._mk_ready = np.zeros(0, dtype=np.float64)
         self._mk_pool = np.zeros(0, dtype=np.int64)
         self._mk_vid = np.zeros(0, dtype=np.int64)
+        self._mk_hid = np.zeros(0, dtype=np.int64)
+        self._mk_cpu = np.zeros(0, dtype=np.float64)
+        self._mk_rem0 = np.zeros(0, dtype=np.float64)
+        self._mk_t0 = np.zeros(0, dtype=np.float64)
+        self._mk_pin = np.zeros(0, dtype=np.int64)
+        self._mk_cd = np.zeros(0, dtype=np.float64)
         self._mk_slot: Dict[int, int] = {}
         #: last prices pushed by the engine (hosts added mid-run inherit them)
         self._pool_prices = np.zeros(1, dtype=np.float64)
+        #: migration reservations: vm_id -> (dest host, demand) held in
+        #: ``used`` (capacity blocked) but NOT in residents/spot_used/the
+        #: registry — a reserved slot is neither wave-interruptible nor
+        #: reclaimable, and the in-flight VM is resident nowhere (no
+        #: double-counting across source and destination)
+        self._reserved: Dict[int, Tuple[int, np.ndarray]] = {}
 
     # -- structural ---------------------------------------------------------
     def _grow(self, need: int) -> None:
@@ -529,6 +543,12 @@ class HostPool:
         self._mk_ready = pad(self._mk_ready, np.float64)
         self._mk_pool = pad(self._mk_pool, np.int64)
         self._mk_vid = pad(self._mk_vid, np.int64)
+        self._mk_hid = pad(self._mk_hid, np.int64)
+        self._mk_cpu = pad(self._mk_cpu, np.float64)
+        self._mk_rem0 = pad(self._mk_rem0, np.float64)
+        self._mk_t0 = pad(self._mk_t0, np.float64)
+        self._mk_pin = pad(self._mk_pin, np.int64)
+        self._mk_cd = pad(self._mk_cd, np.float64)
         self._mk_cap = cap
 
     def _mk_add(self, vm: Vm, hid: int, now: float) -> None:
@@ -538,6 +558,12 @@ class HostPool:
         self._mk_ready[i] = now + vm.min_running_time
         self._mk_pool[i] = self.pool_of[hid]
         self._mk_vid[i] = vm.id
+        self._mk_hid[i] = hid
+        self._mk_cpu[i] = vm.demand[0]
+        self._mk_rem0[i] = vm.remaining
+        self._mk_t0[i] = now
+        self._mk_pin[i] = vm.pool
+        self._mk_cd[i] = vm.migrate_cooldown_until
         self._mk_slot[vm.id] = i
         self._mk_n = i + 1
 
@@ -550,10 +576,29 @@ class HostPool:
             self._mk_bid[i] = self._mk_bid[last]
             self._mk_ready[i] = self._mk_ready[last]
             self._mk_pool[i] = self._mk_pool[last]
+            self._mk_hid[i] = self._mk_hid[last]
+            self._mk_cpu[i] = self._mk_cpu[last]
+            self._mk_rem0[i] = self._mk_rem0[last]
+            self._mk_t0[i] = self._mk_t0[last]
+            self._mk_pin[i] = self._mk_pin[last]
+            self._mk_cd[i] = self._mk_cd[last]
             moved = int(self._mk_vid[last])
             self._mk_vid[i] = moved
             self._mk_slot[moved] = i
         self._mk_n = last
+
+    def market_registry(self) -> Dict[str, np.ndarray]:
+        """Read-only views of the dense RUNNING-spot registry, length
+        ``_mk_n`` — the migration planner's scoring input.  Valid until the
+        next pool mutation; do not hold across events."""
+        m = self._mk_n
+        return {
+            "vid": self._mk_vid[:m], "bid": self._mk_bid[:m],
+            "pool": self._mk_pool[:m], "hid": self._mk_hid[:m],
+            "cpu": self._mk_cpu[:m], "rem0": self._mk_rem0[:m],
+            "t0": self._mk_t0[:m], "ready": self._mk_ready[:m],
+            "pin": self._mk_pin[:m], "cooldown": self._mk_cd[:m],
+        }
 
     def market_victims(self, prices: np.ndarray,
                        now: float) -> Tuple[np.ndarray, np.ndarray]:
@@ -568,6 +613,69 @@ class HostPool:
         mask = self._mk_bid[:m] < np.asarray(prices, float)[pools] - _EPS
         mask &= self._mk_ready[:m] <= now + _EPS
         return self._mk_vid[:m][mask].copy(), pools[mask].copy()
+
+    # -- migration reservations ----------------------------------------------
+    def reserve(self, vm: Vm, hid: int) -> None:
+        """Hold ``vm.demand`` on ``hid`` for an in-flight migration.  The
+        capacity is blocked in ``used`` (feasibility masks and the pool
+        utilization signal see it) but the VM is resident nowhere: not in
+        ``residents``/``spot_used``, not reclaimable, not wave-interruptible.
+        """
+        assert vm.id not in self._reserved, f"vm {vm.id} already reserved"
+        assert self.fits_fast(hid, vm.demand), (
+            f"host {hid} cannot hold reservation for vm {vm.id}")
+        self.used[hid] += vm.demand
+        self._reserved[vm.id] = (hid, vm.demand.copy())
+        self._refresh_row(hid, spot_changed=False)
+        self.epoch += 1
+
+    def release_reservation(self, vm_id: int) -> int:
+        """Drop a migration reservation (arrival commit or failed flight);
+        returns the host it was held on."""
+        hid, demand = self._reserved.pop(vm_id)
+        self.used[hid] -= demand
+        np.maximum(self.used[hid], 0.0, out=self.used[hid])
+        self._refresh_row(hid, spot_changed=False)
+        self._log_gain(hid)
+        self.epoch += 1
+        return hid
+
+    def stamp_migration_cooldown(self, vm: Vm, until: float) -> None:
+        """Black the VM out of migration planning until ``until``, updating
+        the live registry row in place (the column is otherwise only read
+        from the VM at placement time).  Used when a planned move finds no
+        destination host — without the stamp, a pool-level-feasible but
+        host-level-infeasible VM would re-top the plan ranking every tick."""
+        vm.migrate_cooldown_until = until
+        i = self._mk_slot.get(vm.id)
+        if i is not None:
+            self._mk_cd[i] = until
+
+    def price_clears(self, hid: int, bid: float) -> bool:
+        """Does ``hid``'s pool currently clear at <= ``bid``?  (Always true
+        with the market off or an infinite bid.)"""
+        if not self._market_on or bid == np.inf:
+            return True
+        return bool(self._host_price[hid] <= bid + _EPS)
+
+    def pool_free_cpu(self) -> np.ndarray:
+        """(n_pools,) free CPU per capacity pool over active hosts — the
+        migration planner's destination-headroom signal (reservations are
+        already inside ``used``, hence excluded from ``free``)."""
+        n = self.n
+        act = self.active[:n]
+        return np.bincount(self.pool_of[:n][act],
+                           weights=self._free[:n, 0][act],
+                           minlength=self.n_pools)
+
+    def pool_total_cpu(self) -> np.ndarray:
+        """(n_pools,) total CPU per capacity pool over active hosts — the
+        denominator of the planner's price-impact estimate."""
+        n = self.n
+        act = self.active[:n]
+        return np.bincount(self.pool_of[:n][act],
+                           weights=self.total[:n, 0][act],
+                           minlength=self.n_pools)
 
     # -- gain log ------------------------------------------------------------
     def gain_pos(self) -> int:
@@ -594,13 +702,17 @@ class HostPool:
     # -- invariant checks (used by property tests) ---------------------------
     def check_invariants(self, now: Optional[float] = None) -> None:
         n = self.n
+        reserved_sum = np.zeros((n, N_DIMS))
+        for _vid, (rhid, dem) in self._reserved.items():
+            reserved_sum[rhid] += dem
         for hid in range(n):
             res = sum(
                 (v.demand for v in self.residents[hid].values()),
                 np.zeros(N_DIMS),
-            )
+            ) + reserved_sum[hid]
             assert np.allclose(res, self.used[hid], atol=1e-6), (
-                f"host {hid}: used {self.used[hid]} != resident sum {res}"
+                f"host {hid}: used {self.used[hid]} != resident+reserved sum "
+                f"{res}"
             )
             spot = sum(
                 (v.demand for v in self.residents[hid].values() if v.is_spot),
@@ -664,3 +776,7 @@ class HostPool:
                         i = self._mk_slot[v.id]
                         assert self._mk_bid[i] == v.bid
                         assert int(self._mk_pool[i]) == int(self.pool_of[hid])
+                        assert int(self._mk_hid[i]) == hid
+                        assert self._mk_cpu[i] == v.demand[0]
+                        assert int(self._mk_pin[i]) == v.pool
+                        assert self._mk_cd[i] == v.migrate_cooldown_until

@@ -33,6 +33,29 @@ class WaveEvent:
     size: int
 
 
+@dataclass
+class MigrationEvent:
+    """One proactive cross-pool migration (MIGRATE_START → MIGRATE_COMPLETE).
+
+    ``predicted_saving`` is the planner's net score at plan time in
+    price·seconds (expected price-gap over the remaining work minus the
+    downtime penalty).  ``t_complete`` stays -1 while in flight; ``failed``
+    marks a flight whose destination stopped clearing (price spike above the
+    bid, host removal) — the VM then takes its interruption behavior."""
+    vm_id: int
+    t_start: float
+    src_host: int
+    dst_host: int
+    src_pool: int
+    dst_pool: int
+    predicted_saving: float
+    t_complete: float = -1.0
+    failed: bool = False
+    #: the VM's bid when the flight left (realized-saving integrals cap at
+    #: this, not the final bid — adaptive re-bidding may change it later)
+    bid: float = float("inf")
+
+
 def _timeline_bucket(state: VmState, vm_type: VmType) -> int:
     """Timeline column (1-4) a (state, type) pair contributes to, or 0."""
     if state in (VmState.RUNNING, VmState.INTERRUPTING):
@@ -73,6 +96,15 @@ class Metrics:
     # (t, pool, clearing price) per pool per PRICE_TICK
     price_series: List[tuple] = field(default_factory=list)
     wave_events: List[WaveEvent] = field(default_factory=list)
+    # -- proactive migration subsystem (empty when no planner is attached) ---
+    migration_events: List[MigrationEvent] = field(default_factory=list)
+    migrations_planned: int = 0     # plans emitted by the planner
+    migrations_started: int = 0     # flights that left their source host
+    migrations_completed: int = 0   # arrivals placed on the destination
+    migrations_failed: int = 0      # flights whose destination stopped clearing
+    #: stop-and-copy seconds of *completed* migrations; a failed flight's
+    #: downtime lands in the VM's interruption gap instead (one home each)
+    migration_downtime: float = 0.0
 
     def on_transition(self, vm: Vm, old: VmState, new: VmState) -> None:
         """Update the incremental counters for one VM state change."""
@@ -168,6 +200,48 @@ class Metrics:
             "price_interruptions": price_interruptions,
             "pools": pool_rows,
         }
+
+    def migration_stats(self, vms: Optional[Dict[int, Vm]] = None,
+                        engine=None) -> dict:
+        """Aggregates of the proactive migration subsystem.  With ``vms`` and
+        the run's :class:`repro.market.engine.MarketEngine`, also reports the
+        *realized* saving of each completed migration — the price-gap
+        integral ∫ (price_src − price_dst) dt (both capped at the VM's bid,
+        matching billing) over the interval the VM actually ran on its
+        destination — next to the planner's prediction."""
+        out = {
+            "planned": self.migrations_planned,
+            "started": self.migrations_started,
+            "completed": self.migrations_completed,
+            "failed": self.migrations_failed,
+            "downtime_s": round(self.migration_downtime, 3),
+            "predicted_saving": float(sum(
+                e.predicted_saving for e in self.migration_events
+                if e.t_complete >= 0 and not e.failed)),
+        }
+        if vms is None or engine is None:
+            return out
+        realized = 0.0
+        # an interval still open at end-of-run realizes savings up to the
+        # engine's last reprice (otherwise in-flight migrations would count
+        # their prediction but contribute zero realization)
+        end = engine._ts[-1] if engine._ts else 0.0
+        for e in self.migration_events:
+            if e.t_complete < 0 or e.failed:
+                continue
+            vm = vms[e.vm_id]
+            for itv in vm.history:
+                if itv.start == e.t_complete and itv.host == e.dst_host:
+                    stop = (itv.stop if itv.stop is not None
+                            else max(end, e.t_complete))
+                    realized += (
+                        engine.price_integral(e.src_pool, itv.start, stop,
+                                              cap=e.bid)
+                        - engine.price_integral(e.dst_pool, itv.start, stop,
+                                                cap=e.bid))
+                    break
+        out["realized_saving"] = realized
+        return out
 
 
 # ---------------------------------------------------------------------------

@@ -34,10 +34,9 @@ import numpy as np
 from .allocation import AllocationPolicy, FirstFit
 from .events import Event, EventKind, EventQueue
 from .hosts import HostPool
-from .metrics import InterruptionEvent, Metrics, WaveEvent
+from .metrics import InterruptionEvent, Metrics, MigrationEvent, WaveEvent
 from .types import (
     ExecutionInterval,
-    InterruptionBehavior,
     Vm,
     VmState,
     VmType,
@@ -62,7 +61,7 @@ class MarketSimulator:
 
     def __init__(self, policy: Optional[AllocationPolicy] = None,
                  config: Optional[SimConfig] = None,
-                 engine=None):
+                 engine=None, migration=None, rebid=None):
         """``engine`` — optional :class:`repro.market.engine.MarketEngine`.
         When attached, the simulator runs periodic PRICE_TICK events: each
         tick re-clears every capacity pool's price from live utilization,
@@ -71,12 +70,34 @@ class MarketSimulator:
         can reallocate into cheaper pools.  Engines are stateful (price
         processes, cost integrals): use a fresh engine per run.  With
         ``engine=None`` every code path is bit-identical to the engine-less
-        simulator."""
+        simulator.
+
+        ``migration`` — optional
+        :class:`repro.market.migration.MigrationPlanner`.  Runs after each
+        tick's wave + flush and emits batched MIGRATE_START →
+        MIGRATE_COMPLETE moves toward cheaper pools.  A planner with policy
+        ``"none"`` (or ``migration=None``) leaves every run bit-identical to
+        a planner-less simulator.
+
+        ``rebid`` — optional :class:`repro.market.bids.RebidOnResume`:
+        adaptive re-bidding applied when a spot VM enters hibernation, so it
+        resubmits with a (seeded, randomized) higher bid.  Off by default."""
         self.policy = policy or FirstFit()
         self.config = config or SimConfig()
         assert self.config.flush_mode in ("batched", "per_vm")
         self.pool = HostPool()
         self.engine = engine
+        self.migration = migration
+        if migration is not None and migration.config.policy != "none":
+            assert engine is not None, (
+                "a migration planner (policy != 'none') requires a market "
+                "engine — prices drive the scoring")
+        self._rebid = rebid
+        # in-flight migrations: vm_id -> its MigrationEvent, plus a per-pool
+        # arrival counter feeding the risk-budgeted planner
+        self._migrating: Dict[int, MigrationEvent] = {}
+        self._mig_inflight = np.zeros(
+            engine.n_pools if engine is not None else 1, dtype=np.int64)
         self.queue = EventQueue()
         self.vms: Dict[int, Vm] = {}
         self.metrics = Metrics()
@@ -204,6 +225,10 @@ class MarketSimulator:
             self._on_interrupt_commit(ev.payload)
         elif kind is EventKind.PRICE_TICK:
             self._on_price_tick()
+        elif kind is EventKind.MIGRATE_START:
+            self._on_migrate_start(ev.payload, ev.generation)
+        elif kind is EventKind.MIGRATE_COMPLETE:
+            self._on_migrate_complete(ev.payload, ev.generation)
         elif kind is EventKind.HOST_ADD:
             self.pool.add_host(*ev.payload)
             self._flush_pending()
@@ -357,23 +382,37 @@ class MarketSimulator:
             InterruptionEvent(vm.id, self.now, vm.history[-1].host, kind,
                               cause))
         self._emit("vm_interrupted", vm=vm, kind=kind)
+        self._apply_interruption_behavior(vm, kind)
+
+    def _apply_interruption_behavior(self, vm: Vm, kind: str) -> None:
+        """Shared post-interruption triage (capacity/wave interruption, host
+        removal, failed migration): a VM whose work is done finishes;
+        otherwise it hibernates or terminates per ``kind``."""
         if vm.remaining <= _EPS:
             self._finish_now(vm)
-            return
-        if kind == "hibernate":
-            self._set_state(vm, VmState.HIBERNATED)
-            vm.hibernated_at = self.now
-            vm.generation += 1
-            self._hibernated[vm.id] = vm
-            self._retry_pos.pop(vm.id, None)  # untested in hibernated form
-            if np.isfinite(vm.hibernation_timeout):
-                self.queue.push(self.now + vm.hibernation_timeout,
-                                EventKind.HIBERNATION_EXPIRE, vm.id,
-                                vm.generation)
+        elif kind == "hibernate":
+            self._enter_hibernation(vm)
         else:
             self._set_state(vm, VmState.TERMINATED)
             vm.generation += 1
             self._emit("vm_terminated", vm=vm)
+
+    def _enter_hibernation(self, vm: Vm) -> None:
+        """Shared hibernation entry (wave/capacity interruption, host
+        removal, failed migration).  The VM is already released from its
+        host.  The optional re-bid hook fires here: the VM resubmits with
+        its adapted bid governing readmission."""
+        if self._rebid is not None:
+            vm.bid = self._rebid.rebid(vm)
+        self._set_state(vm, VmState.HIBERNATED)
+        vm.hibernated_at = self.now
+        vm.generation += 1
+        self._hibernated[vm.id] = vm
+        self._retry_pos.pop(vm.id, None)  # untested in hibernated form
+        if np.isfinite(vm.hibernation_timeout):
+            self.queue.push(self.now + vm.hibernation_timeout,
+                            EventKind.HIBERNATION_EXPIRE, vm.id,
+                            vm.generation)
 
     # ------------------------------------------------------------ market tick
     def _on_price_tick(self) -> None:
@@ -412,6 +451,11 @@ class MarketSimulator:
         # feeds straight back into the queue — victims can land in a cheaper
         # pool within the same tick
         self._flush_pending()
+        # proactive migration: the planner scores the settled post-wave,
+        # post-flush state and emits MIGRATE_START events at this timestamp
+        # (processed after same-time submissions; each start re-validates)
+        if self.migration is not None:
+            self._plan_migrations()
         self._record()
         # keep ticking while any event or live VM remains (the chain is the
         # only self-scheduling event kind, so it must not outlive the run).
@@ -426,6 +470,108 @@ class MarketSimulator:
             self.queue.push(t + eng.tick_interval, EventKind.PRICE_TICK)
         else:
             self._tick_armed = False  # idle: submit()/schedule_* re-arm
+
+    # ---------------------------------------------------- proactive migration
+    def _plan_migrations(self) -> None:
+        plans = self.migration.plan(self.pool, self.engine, self.now,
+                                    self._mig_inflight)
+        if not plans:
+            return
+        self.metrics.migrations_planned += len(plans)
+        for p in plans:
+            vm = self.vms[p.vm_id]
+            self.queue.push(self.now, EventKind.MIGRATE_START,
+                            (p.vm_id, p.dst_pool, p.predicted_saving),
+                            vm.generation)
+
+    def _on_migrate_start(self, payload, gen: int) -> None:
+        """Leave the source host and reserve the destination: the VM makes no
+        progress (and pays nothing) until MIGRATE_COMPLETE."""
+        vid, dst_pool, predicted = payload
+        vm = self.vms[vid]
+        if gen != vm.generation or vm.state is not VmState.RUNNING:
+            return  # finished / interrupted / preempt-warned since planning
+        mask = self.pool.direct_mask_into(vm.demand, vm.bid, dst_pool)
+        hid = self.policy._pick_direct(mask, vm, self.pool) if mask.any() else -1
+        if hid < 0:
+            # no single host fits (pool-aggregate headroom was fragmented,
+            # or same-time submissions took it): stay put, and black the VM
+            # out of planning for one cooldown so it cannot re-top the
+            # ranking and monopolize the per-tick plan budget every tick
+            self.pool.stamp_migration_cooldown(
+                vm, self.now + self.migration.config.cooldown)
+            return
+        src = vm.host
+        self._account_progress(vm)
+        self.pool.release(vm)
+        self._set_state(vm, VmState.MIGRATING)
+        vm.generation += 1
+        vm.run_start = -1.0
+        self.pool.reserve(vm, hid)
+        self._mig_inflight[dst_pool] += 1
+        mev = MigrationEvent(vid, self.now, src, hid,
+                             int(self.pool.pool_of[src]), int(dst_pool),
+                             predicted, bid=vm.bid)
+        self._migrating[vid] = mev
+        self.metrics.migration_events.append(mev)
+        self.metrics.migrations_started += 1
+        self.queue.push(self.now + self.migration.config.downtime,
+                        EventKind.MIGRATE_COMPLETE, (vid, hid),
+                        vm.generation)
+        self._emit("vm_migration_start", vm=vm, src=src, dst=hid)
+        # the vacated source capacity is a gain: queued VMs may take it now
+        self._flush_pending()
+        self._record()
+
+    def _on_migrate_complete(self, payload, gen: int) -> None:
+        """End of the stop-and-copy window: commit the reservation into a
+        placement — or, if the destination stopped clearing during the
+        flight (price spiked above the bid / host removed), fail the
+        migration and apply the VM's interruption behavior."""
+        vid, hid = payload
+        vm = self.vms[vid]
+        if gen != vm.generation or vm.state is not VmState.MIGRATING:
+            return
+        mev = self._migrating.pop(vid)
+        self.pool.release_reservation(vid)
+        self._mig_inflight[mev.dst_pool] -= 1
+        mev.t_complete = self.now
+        pool = self.pool
+        if (pool.active[hid] and pool.price_clears(hid, vm.bid)
+                and pool.fits_fast(hid, vm.demand)):
+            # arrival: like _start_vm, but the interval is via="migrate" and
+            # the cooldown stamp lands in the registry before place()
+            vm.migrate_cooldown_until = self.now + self.migration.config.cooldown
+            pool.place(vm, hid, now=self.now)
+            self._set_state(vm, VmState.RUNNING)
+            vm.run_start = self.now
+            vm.generation += 1
+            vm.migrations += 1
+            vm.history.append(
+                ExecutionInterval(host=hid, start=self.now, via="migrate"))
+            self.queue.push(self.now + vm.remaining, EventKind.VM_FINISH,
+                            vm.id, vm.generation)
+            self.metrics.migrations_completed += 1
+            self.metrics.migration_downtime += self.now - mev.t_start
+            self._emit("vm_migrated", vm=vm, host=hid)
+        else:
+            mev.failed = True
+            self.metrics.migrations_failed += 1
+            vm.interruptions += 1
+            kind = vm.behavior.value
+            # the flight's downtime becomes part of the interruption gap
+            # (the interval closed at MIGRATE_START), so it is NOT also
+            # added to migration_downtime — each second has one home.
+            # Attribute the event to the host the VM last ran on (like
+            # every other interruption path); the destination it never
+            # reached is in the MigrationEvent.
+            self.metrics.interruption_events.append(
+                InterruptionEvent(vid, self.now, vm.history[-1].host, kind,
+                                  cause="migration-failed"))
+            self._emit("vm_interrupted", vm=vm, kind=kind)
+            self._apply_interruption_behavior(vm, kind)
+        self._flush_pending()
+        self._record()
 
     def _account_progress(self, vm: Vm) -> None:
         """Close the current execution interval and decrement remaining work."""
@@ -478,21 +624,7 @@ class MarketSimulator:
                 v.interruptions += 1
                 self.metrics.interruption_events.append(
                     InterruptionEvent(v.id, self.now, hid, "host-removed"))
-                if v.behavior is InterruptionBehavior.HIBERNATE and v.remaining > _EPS:
-                    self._set_state(v, VmState.HIBERNATED)
-                    v.hibernated_at = self.now
-                    v.generation += 1
-                    self._hibernated[v.id] = v
-                    self._retry_pos.pop(v.id, None)
-                    if np.isfinite(v.hibernation_timeout):
-                        self.queue.push(self.now + v.hibernation_timeout,
-                                        EventKind.HIBERNATION_EXPIRE, v.id,
-                                        v.generation)
-                elif v.remaining <= _EPS:
-                    self._finish_now(v)
-                else:
-                    self._set_state(v, VmState.TERMINATED)
-                    v.generation += 1
+                self._apply_interruption_behavior(v, v.behavior.value)
             else:
                 # on-demand VMs are resubmitted as persistent requests
                 self._account_progress(v)

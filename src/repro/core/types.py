@@ -37,13 +37,15 @@ class InterruptionBehavior(enum.Enum):
 
 
 class VmState(enum.Enum):
-    """Extended VM lifecycle states (paper Fig. 4)."""
+    """Extended VM lifecycle states (paper Fig. 4; MIGRATING is the
+    beyond-paper proactive cross-pool migration extension)."""
 
     CREATED = "created"          # defined, not yet submitted
     WAITING = "waiting"          # persistent request, waiting for capacity
     RUNNING = "running"          # allocated to a host, executing
     INTERRUPTING = "interrupting"  # received interruption warning, still running
     HIBERNATED = "hibernated"    # interrupted w/ HIBERNATE, awaiting resubmission
+    MIGRATING = "migrating"      # in flight between hosts (stop-and-copy window)
     FINISHED = "finished"        # workload completed
     TERMINATED = "terminated"    # interrupted w/ TERMINATE or hibernation expired
     FAILED = "failed"            # request never fulfilled (waiting timed out)
@@ -51,11 +53,17 @@ class VmState(enum.Enum):
 
 @dataclass
 class ExecutionInterval:
-    """One contiguous period of execution on a host (§V-E ExecutionHistory)."""
+    """One contiguous period of execution on a host (§V-E ExecutionHistory).
+
+    ``via`` records what started the interval: ``"start"`` (fresh allocation
+    or resubmission after an interruption) or ``"migrate"`` (arrival of a
+    proactive migration) — interruption-gap statistics must not count the
+    voluntary migration downtime as interruption time."""
 
     host: int
     start: float
     stop: Optional[float] = None
+    via: str = "start"
 
 
 @dataclass
@@ -96,6 +104,10 @@ class Vm:
     waiting_since: float = -1.0
     hibernated_at: float = -1.0
     interruptions: int = 0
+    migrations: int = 0                     # completed proactive migrations
+    #: migration hysteresis: the planner may not select this VM again before
+    #: this simulation time (stamped on arrival of a completed migration)
+    migrate_cooldown_until: float = 0.0
     history: List[ExecutionInterval] = field(default_factory=list)
     generation: int = 0                     # invalidates stale scheduled events
     finish_time: float = -1.0
@@ -125,10 +137,14 @@ class Vm:
         )
 
     def interruption_gaps(self) -> List[float]:
-        """Durations between consecutive execution intervals (resumed gaps)."""
+        """Durations between consecutive execution intervals (resumed gaps).
+
+        Gaps closed by a proactive migration arrival (``via == "migrate"``)
+        are voluntary downtime, accounted separately in the migration metrics
+        — they are not interruption time."""
         gaps = []
         for prev, nxt in zip(self.history, self.history[1:]):
-            if prev.stop is not None:
+            if prev.stop is not None and nxt.via != "migrate":
                 gaps.append(nxt.start - prev.stop)
         return gaps
 

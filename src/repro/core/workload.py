@@ -111,6 +111,78 @@ def synthetic_scenario(cfg: ScenarioConfig | None = None):
     return hosts, vms
 
 
+@dataclass
+class MarketScenarioConfig:
+    """Workload for the dynamic-market / migration experiments (beyond-paper).
+
+    The §VII-E scenario's 50–200 s VMs are too short-lived relative to a
+    60 s price tick for market dynamics to matter.  This scenario keeps the
+    Table III profile mix but models a *regional spot market day*: long-
+    running spot VMs (pool-flexible, submitted up front) ride out staggered
+    regional on-demand demand humps (pool-pinned, diurnal-style arrival
+    waves per §VII trace Fig. 9) that push each capacity pool's utilization
+    — and hence its clearing price — up and back down in sequence.  Rolling,
+    *predictable* per-pool price ramps are exactly the regime where
+    proactive cross-pool migration is supposed to earn its keep."""
+
+    seed: int = 0
+    n_pools: int = 4
+    #: host fleet = Table II fleet tiled and cut to 100 × fleet_scale hosts
+    fleet_scale: float = 1.7
+    spot_duration_range: Tuple[float, float] = (7_200.0, 10_800.0)
+    spot_submit_window: float = 600.0
+    min_running_time: float = 300.0
+    hibernation_timeout: float = 3_600.0
+    od_duration_range: Tuple[float, float] = (1_200.0, 4_800.0)
+    #: pool p's on-demand wave arrives in
+    #: [hump_start + p·hump_spacing, … + hump_width]
+    od_hump_start: float = 600.0
+    od_hump_spacing: float = 2_400.0
+    od_hump_width: float = 2_400.0
+    spot_behavior: InterruptionBehavior = InterruptionBehavior.HIBERNATE
+
+
+def market_scenario(cfg: MarketScenarioConfig | None = None):
+    """Returns (host_capacities, host_pool_ids, vms) for the market-regime
+    comparison (``market_sim --market``).  All draws are seeded: every
+    (allocation policy × migration policy) combination sees the identical
+    workload."""
+    cfg = cfg or MarketScenarioConfig()
+    rng = np.random.default_rng(cfg.seed)
+    base = build_hosts()
+    n_hosts = int(round(len(base) * cfg.fleet_scale))
+    tiles = -(-n_hosts // len(base))  # ceil
+    hosts = (base * tiles)[:n_hosts]
+    pool_ids = [i % cfg.n_pools for i in range(n_hosts)]
+
+    vms: List[Vm] = []
+    vid = 0
+    for cpu, ram, bw, st, n_spot, n_od in VM_PROFILES:
+        demand = resources(cpu, ram, bw, st)
+        for _ in range(n_spot):
+            vms.append(make_spot(
+                vid, demand.copy(),
+                float(rng.uniform(*cfg.spot_duration_range)),
+                behavior=cfg.spot_behavior,
+                min_running_time=cfg.min_running_time,
+                hibernation_timeout=cfg.hibernation_timeout,
+                submit_time=float(rng.uniform(0.0, cfg.spot_submit_window)),
+            ))
+            vid += 1
+        for _ in range(n_od):
+            p = vid % cfg.n_pools
+            t0 = (cfg.od_hump_start + p * cfg.od_hump_spacing
+                  + float(rng.uniform(0.0, cfg.od_hump_width)))
+            vms.append(make_on_demand(
+                vid, demand.copy(),
+                float(rng.uniform(*cfg.od_duration_range)),
+                submit_time=t0, pool=p,
+            ))
+            vid += 1
+    vms.sort(key=lambda v: (v.submit_time, v.id))
+    return hosts, pool_ids, vms
+
+
 def random_fleet(n_hosts: int, seed: int = 0) -> List[np.ndarray]:
     """Uniform random fleet drawn from the Table II types (for property tests
     and throughput benchmarks)."""

@@ -9,6 +9,14 @@
 the §VII-E synthetic fleet, HLEM vs First-Fit under calm / volatile /
 correlated-pool price regimes, reporting interruption counts, max
 interruption duration, and realized spot cost (billed at clearing price).
+
+``--migration=POLICY`` (or ``all``) attaches the proactive cross-pool
+migration planner and reports migrations / downtime / savings next to the
+interruption metrics:
+
+  python -m repro.launch.market_sim --market --migration all
+  python -m repro.launch.market_sim --market --migration gradient-aware \\
+      --regimes volatile,correlated --rebid
 """
 from __future__ import annotations
 
@@ -18,23 +26,28 @@ import json
 import time
 
 from ..core import (
+    MarketScenarioConfig,
     MarketSimulator,
     ScenarioConfig,
     SimConfig,
     dynamic_vm_table,
     make_policy,
+    market_scenario,
     spot_vm_table,
     synthetic_scenario,
     to_csv,
 )
 from ..market import (
+    MIGRATION_POLICIES,
     MarketEngine,
     REGIMES,
+    RebidOnResume,
     TraceConfig,
     assign_bids,
     generate_trace,
     make_bid_strategy,
     make_market,
+    make_migration_planner,
     realized_cost_stats,
     simulate_trace,
 )
@@ -65,25 +78,40 @@ def run_synthetic(policy_name: str, seed: int, until: float,
     return stats
 
 
-def run_market(policy_name: str, regime: str, seed: int, until: float,
-               n_pools: int = 2, bid_strategy: str = "randomized",
-               tick_interval: float = 60.0, alpha: float = -0.5) -> dict:
-    """One engine-coupled run: §VII-E fleet split round-robin into
-    ``n_pools`` capacity pools, seeded bids on every spot VM, price-driven
-    interruption waves, realized-price cost accounting."""
-    hosts, vms = synthetic_scenario(ScenarioConfig(seed=seed))
+def run_market(policy_name: str, regime: str, seed: int, until: float = 14400.0,
+               n_pools: int = 4, bid_strategy: str = "randomized",
+               tick_interval: float = 60.0, alpha: float = -0.5,
+               migration: str = "none", rebid: bool = False,
+               from_advisor: bool = True) -> dict:
+    """One engine-coupled run over the *market scenario* (regional demand
+    humps, long-lived pool-flexible spot VMs — see
+    :class:`repro.core.MarketScenarioConfig`): per-pool volatility from the
+    synthetic Spot-Advisor dataset (``from_advisor``, on by default), seeded
+    bids on every spot VM, price-driven interruption waves, realized-price
+    cost accounting.  ``migration`` attaches a proactive cross-pool
+    migration planner (``"none"`` is bit-identical to no planner);
+    ``rebid`` switches on adaptive re-bidding on hibernation."""
+    hosts, pool_ids, vms = market_scenario(
+        MarketScenarioConfig(seed=seed, n_pools=n_pools))
     mc = make_market(regime, n_pools=n_pools, seed=seed,
-                     tick_interval=tick_interval)
+                     tick_interval=tick_interval, from_advisor=from_advisor)
     engine = MarketEngine(mc)
-    vms = [copy.deepcopy(v) for v in vms]
-    strat = make_bid_strategy(bid_strategy, pool_cfg=mc.pools[0], seed=seed)
+    # randomized bids floored above the busy-fleet clearing base, so draws
+    # span the at-risk band instead of the permanently-below-base region
+    strat_kw = {"lo": 0.45} if bid_strategy == "randomized" else {}
+    strat = make_bid_strategy(bid_strategy, pool_cfg=mc.pools[0], seed=seed,
+                              **strat_kw)
     assign_bids(vms, strat, seed=seed)
     kwargs = {"alpha": alpha} if policy_name == "hlem-vmp-adjusted" else {}
+    planner = make_migration_planner(migration)
+    rebid_hook = (RebidOnResume(on_demand_rate=mc.pools[0].on_demand_rate,
+                                seed=seed) if rebid else None)
     sim = MarketSimulator(policy=make_policy(policy_name, **kwargs),
                           config=SimConfig(record_timeline=False),
-                          engine=engine)
-    for i, cap in enumerate(hosts):
-        sim.add_host(cap, pool=i % n_pools)
+                          engine=engine, migration=planner,
+                          rebid=rebid_hook)
+    for cap, pid in zip(hosts, pool_ids):
+        sim.add_host(cap, pool=pid)
     for v in vms:
         sim.submit(v)
     t0 = time.time()
@@ -91,10 +119,12 @@ def run_market(policy_name: str, regime: str, seed: int, until: float,
     wall = time.time() - t0
     s = m.spot_stats(sim.vms)
     ms = m.market_stats()
+    migs = m.migration_stats(sim.vms, engine)
     cost = realized_cost_stats(sim.vms.values(), engine, sim.pool)
     return {
         "policy": policy_name,
         "regime": regime,
+        "migration": migration,
         "interruptions": s["interruptions"],
         "price_interruptions": ms["price_interruptions"],
         "waves": ms["waves"],
@@ -103,6 +133,11 @@ def run_market(policy_name: str, regime: str, seed: int, until: float,
         "max_interruption_time": s["max_interruption_time"],
         "spot_finished": s["spot_finished"],
         "spot_terminated": s["spot_terminated"],
+        "migrations": migs["completed"],
+        "migrations_failed": migs["failed"],
+        "migration_downtime_s": migs["downtime_s"],
+        "predicted_saving": round(migs["predicted_saving"], 2),
+        "realized_saving": round(migs["realized_saving"], 2),
         "realized_spot_cost": round(cost["spot_cost"], 4),
         "savings_pct": round(cost["savings_pct"], 1),
         "wasted_cost": round(cost["wasted_cost"], 4),
@@ -118,7 +153,9 @@ def main(argv=None) -> int:
     ap.add_argument("--policy", default="all",
                     help="policy name or 'all'")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--until", type=float, default=3000.0)
+    ap.add_argument("--until", type=float, default=None,
+                    help="horizon (s); default 3000, or 14400 in "
+                         "--market mode (the four demand humps + drain)")
     ap.add_argument("--selector", default="list_order",
                     choices=["list_order", "best_fit_remaining",
                              "max_progress"])
@@ -132,40 +169,65 @@ def main(argv=None) -> int:
                     help="run the dynamic market engine across price regimes")
     ap.add_argument("--regimes", default="calm,volatile,correlated",
                     help="comma-separated subset of " + ",".join(REGIMES))
-    ap.add_argument("--pools", type=int, default=2)
+    ap.add_argument("--pools", type=int, default=4)
     ap.add_argument("--bid-strategy", default="randomized",
                     choices=["on-demand-cap", "percentile", "randomized"])
     ap.add_argument("--tick", type=float, default=60.0,
                     help="price tick interval (s)")
+    ap.add_argument("--migration", default="none",
+                    help="proactive migration policy, one of "
+                         + ",".join(MIGRATION_POLICIES) + ", or 'all' to "
+                         "compare every policy per regime")
+    ap.add_argument("--rebid", action="store_true",
+                    help="adaptive re-bidding on hibernation (Bhuyan-style)")
+    ap.add_argument("--flat-volatility", action="store_true",
+                    help="use the regime's hand-set volatility constant for "
+                         "every pool instead of deriving per-pool sigmas "
+                         "from the synthetic Spot-Advisor dataset")
     args = ap.parse_args(argv)
 
     if args.market:
-        policies = (MARKET_POLICY_SET if args.policy == "all"
-                    else [args.policy])
+        # the migration comparison varies the migration policy against the
+        # paper's allocator; the allocator comparison (PR 2) spans both
+        policies = ((MARKET_POLICY_SET if args.migration == "none"
+                     else ["hlem-vmp-adjusted"])
+                    if args.policy == "all" else [args.policy])
+        migrations = (list(MIGRATION_POLICIES) if args.migration == "all"
+                      else [args.migration])
+        until = args.until if args.until is not None else 14400.0
         rows = []
         for regime in args.regimes.split(","):
             for p in policies:
-                rows.append(run_market(
-                    p, regime, args.seed, args.until, n_pools=args.pools,
-                    bid_strategy=args.bid_strategy,
-                    tick_interval=args.tick, alpha=args.alpha))
+                for mig in migrations:
+                    rows.append(run_market(
+                        p, regime, args.seed, until,
+                        n_pools=args.pools,
+                        bid_strategy=args.bid_strategy,
+                        tick_interval=args.tick, alpha=args.alpha,
+                        migration=mig, rebid=args.rebid,
+                        from_advisor=not args.flat_volatility))
         if args.json:
             print(json.dumps(rows, indent=1))
         else:
-            print(f"{'regime':11s} {'policy':18s} {'intr':>5s} {'waves':>5s} "
-                  f"{'max_intr_s':>10s} {'spot_cost':>9s} {'save%':>6s} "
-                  f"{'waste':>7s}")
+            print(f"{'regime':11s} {'policy':18s} {'migration':15s} "
+                  f"{'intr':>5s} {'waves':>5s} {'max_intr_s':>10s} "
+                  f"{'migr':>5s} {'down_s':>7s} {'spot_cost':>9s} "
+                  f"{'save%':>6s} {'waste':>7s}")
             for r in rows:
                 print(f"{r['regime']:11s} {r['policy']:18s} "
+                      f"{r['migration']:15s} "
                       f"{r['interruptions']:5d} {r['waves']:5d} "
                       f"{r['max_interruption_time']:10.1f} "
+                      f"{r['migrations']:5d} "
+                      f"{r['migration_downtime_s']:7.1f} "
                       f"{r['realized_spot_cost']:9.3f} "
                       f"{r['savings_pct']:6.1f} {r['wasted_cost']:7.3f}")
         return 0
 
     if args.scenario == "synthetic":
         policies = POLICY_SET if args.policy == "all" else [args.policy]
-        rows = [run_synthetic(p, args.seed, args.until, args.selector,
+        until = args.until if args.until is not None else 3000.0
+        rows = [run_synthetic(p, args.seed, until, args.selector,
                               args.alpha) for p in policies]
         if args.json:
             print(json.dumps(rows, indent=1))

@@ -5,7 +5,12 @@
 * ``pools``       — capacity-pool / regime configuration (calm, volatile,
                     correlated multi-pool).
 * ``bids``        — spot bid strategies (on-demand cap, percentile of
-                    history, randomized per Bhuyan et al.).
+                    history, randomized per Bhuyan et al.) + adaptive
+                    re-bidding on hibernation (``RebidOnResume``).
+* ``migration``   — proactive cross-pool migration planner (PRICE_TICK
+                    scoring, MIGRATE_START/COMPLETE execution).
+* ``risk``        — pool price gradients/volatility + advisor-band-derived
+                    pool volatility.
 * ``trace``       — Google-Cluster-Trace-style machine/task event generation,
                     CSV reading, and trace-driven simulation (paper §VII-C/D).
 * ``advisor``     — synthetic AWS Spot-Instance-Advisor dataset (§VII-F).
@@ -17,12 +22,28 @@ from .bids import (
     OnDemandCapBid,
     PercentileBid,
     RandomizedBid,
+    RebidOnResume,
     assign_bids,
     make_bid_strategy,
     reference_history,
 )
 from .engine import MarketEngine
+from .migration import (
+    MIGRATION_POLICIES,
+    MigrationConfig,
+    MigrationPlan,
+    MigrationPlanner,
+    make_migration_planner,
+    plan_reference,
+)
 from .pools import MarketConfig, PoolConfig, REGIMES, make_market
+from .risk import (
+    advisor_pool_volatility,
+    bid_crossing_risk,
+    price_gradients,
+    price_volatility,
+    projected_prices,
+)
 from .pricing import PriceModel, cost_stats, realized_cost_stats
 from .price_process import (
     AuctionPrice,

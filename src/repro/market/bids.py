@@ -19,6 +19,13 @@ aware randomized strategies of Bhuyan et al.:
 All draws are seeded; :func:`assign_bids` stamps ``vm.bid`` in place for the
 spot VMs of a workload so identical workloads get identical bids across
 policies (the paper's §VII-E2 same-randomized-values methodology).
+
+:class:`RebidOnResume` is the *adaptive* follow-up (Bhuyan et al., optimal
+randomized restart strategies): when a spot VM is interrupted into
+hibernation, its bid is bumped by a seeded randomized factor (capped at the
+on-demand rate) before resubmission — survival improves after each
+interruption instead of replaying the same losing bid.  Off by default; wire
+it via ``MarketSimulator(rebid=...)``.
 """
 from __future__ import annotations
 
@@ -67,6 +74,27 @@ class RandomizedBid:
 
     def bids(self, n: int, rng: np.random.Generator) -> np.ndarray:
         return rng.uniform(self.lo, self.hi, n) * self.on_demand_rate
+
+
+@dataclass
+class RebidOnResume:
+    """Seeded randomized bid bump on hibernation (the resubmit path).
+
+    The draw is keyed on ``(seed, vm id, interruption count)`` — independent
+    of event interleaving, so two identical runs re-bid identically and a
+    VM's k-th interruption always draws the same factor.  The new bid is
+    ``min(bid × U[bump_lo, bump_hi], on_demand_rate)``: monotone
+    non-decreasing, hard-capped at the market ceiling."""
+
+    bump_lo: float = 1.05
+    bump_hi: float = 1.30
+    on_demand_rate: float = 1.0
+    seed: int = 0
+
+    def rebid(self, vm: Vm) -> float:
+        rng = np.random.default_rng([self.seed, vm.id, vm.interruptions])
+        bump = float(rng.uniform(self.bump_lo, self.bump_hi))
+        return float(min(vm.bid * bump, self.on_demand_rate))
 
 
 def reference_history(pool_cfg: PoolConfig, n: int = 720,

@@ -58,6 +58,10 @@ class MarketEngine:
         self.processes = [_build_process(p) for p in config.pools]
         self.od_rates = np.array([p.on_demand_rate for p in config.pools])
         self._rng = np.random.default_rng(config.seed)
+        #: AR(1) state of the shared demand shock (correlated regime):
+        #: market-wide squeezes build and decay over several ticks instead
+        #: of redrawing independently each tick
+        self._shared_shock = 0.0
         self.prices = np.zeros(self.n_pools)
         # piecewise-constant price history: at tick k (time _ts[k]) pool i
         # clears at _price_hist[i][k]; _cum[i][k] = ∫_0^{_ts[k]} price dt
@@ -76,9 +80,12 @@ class MarketEngine:
             util = np.concatenate(
                 [util, np.zeros(self.n_pools - util.size)])
         if self.config.correlation > 0.0:
-            shock = self.config.correlation * float(
-                self._rng.normal(0.0, self.config.shock_sigma))
-            util = np.clip(util + shock, 0.0, 1.0)
+            rho = self.config.shock_rho
+            innov = float(self._rng.normal(
+                0.0, self.config.shock_sigma * np.sqrt(1.0 - rho ** 2)))
+            self._shared_shock = rho * self._shared_shock + innov
+            util = np.clip(
+                util + self.config.correlation * self._shared_shock, 0.0, 1.0)
         # close the previous price segment in the integrals
         if self._ts:
             dt = now - self._ts[-1]

@@ -31,20 +31,44 @@ def _supply_curve(utilization: float, on_demand_rate: float) -> float:
     return on_demand_rate * (0.1 + 0.9 * u ** 3)
 
 
+def supply_curve_slope(utilization, on_demand_rate):
+    """d(price)/d(utilization) of :func:`_supply_curve` — the migration
+    planner's price-impact model reads the same curve the market clears on
+    (vectorized: accepts arrays)."""
+    u = np.clip(utilization, 0.0, 1.0)
+    return on_demand_rate * 2.7 * u ** 2
+
+
 @dataclass
 class AuctionPrice:
-    """Pre-2017 auction regime: volatile, shock-driven."""
+    """Pre-2017 auction regime: volatile, shock-driven.
+
+    ``shock_rho`` adds AR(1) persistence to the log-shock (stationary
+    variance held at ``shock_sigma``²): real pre-2017 price excursions
+    lasted hours, not one sample — persistence is what makes them *waves* a
+    gradient-aware policy can see coming.  ``shock_rho=0`` (default)
+    reproduces the original i.i.d. lognormal shocks bit-exactly."""
     on_demand_rate: float = 1.0
     shock_sigma: float = 0.35
+    shock_rho: float = 0.0
     seed: int = 0
     _rng: np.random.Generator = field(init=False, repr=False)
+    _log_shock: float = field(init=False, repr=False, default=0.0)
 
     def __post_init__(self):
+        assert 0.0 <= self.shock_rho < 1.0
         self._rng = np.random.default_rng(self.seed)
 
     def price(self, utilization: float) -> float:
         base = _supply_curve(utilization, self.on_demand_rate)
-        shock = float(self._rng.lognormal(0.0, self.shock_sigma))
+        if self.shock_rho == 0.0:
+            shock = float(self._rng.lognormal(0.0, self.shock_sigma))
+        else:
+            innov_sigma = self.shock_sigma * float(
+                np.sqrt(1.0 - self.shock_rho ** 2))
+            self._log_shock = (self.shock_rho * self._log_shock
+                               + float(self._rng.normal(0.0, innov_sigma)))
+            shock = float(np.exp(self._log_shock))
         return float(min(base * shock, self.on_demand_rate))
 
 

@@ -160,12 +160,18 @@ def simulate_trace(
     cfg: TraceConfig | None = None,
     sim_config: Optional[SimConfig] = None,
     until: Optional[float] = None,
+    engine=None,
+    migration=None,
+    rebid=None,
 ):
-    """Run the market simulator on a trace. Returns (simulator, metrics)."""
+    """Run the market simulator on a trace. Returns (simulator, metrics).
+    ``engine`` / ``migration`` / ``rebid`` pass through to
+    :class:`MarketSimulator` (all default off — the paper's §VII-D setup)."""
     cfg = cfg or TraceConfig()
     sim = MarketSimulator(
         policy=policy or FirstFit(),
         config=sim_config or SimConfig(record_timeline=False),
+        engine=engine, migration=migration, rebid=rebid,
     )
     # machine id -> host id mapping (machines can be re-added)
     m2h: Dict[int, int] = {}
