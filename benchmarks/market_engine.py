@@ -76,10 +76,18 @@ def run(quick: bool = True):
         rows.append(emit(f"market/wave_select_pyloop_m{m}", t_ref,
                          f"victims={len(ref)}"))
 
-    from repro.launch.market_sim import run_market
+    # end-to-end rows go through the declarative scenario API: one RunSpec
+    # per row, fresh engine/planner materialized by api.run_one
+    from repro.api import (
+        BidSpec, MigrationSpec, PolicySpec, RunSpec, ScenarioSpec, run_one,
+    )
     until = 3600.0 if quick else 14400.0
+    scenario = ScenarioSpec(workload="market", regime="volatile",
+                            bid=BidSpec("randomized", {"lo": 0.45}))
+    policy = PolicySpec("hlem-vmp-adjusted", {"alpha": -0.5})
     t0 = time.time()
-    r = run_market("hlem-vmp-adjusted", "volatile", seed=0, until=until)
+    r = run_one(RunSpec(scenario=scenario, policy=policy), seed=0,
+                until=until)
     wall = time.time() - t0
     rows.append(emit(
         "market/engine_e2e_volatile",
@@ -88,8 +96,9 @@ def run(quick: bool = True):
         f"price_interruptions={r['price_interruptions']};"
         f"spot_cost={r['realized_spot_cost']}"))
     t0 = time.time()
-    r = run_market("hlem-vmp-adjusted", "volatile", seed=0, until=until,
-                   migration="gradient-aware")
+    r = run_one(RunSpec(scenario=scenario, policy=policy,
+                        migration=MigrationSpec("gradient-aware")),
+                seed=0, until=until)
     wall = time.time() - t0
     rows.append(emit(
         "market/engine_e2e_migration",

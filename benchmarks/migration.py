@@ -14,14 +14,9 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.api import ScenarioSpec, build_engine
 from repro.core import HostPool, VmState, make_spot, resources
-from repro.market import (
-    MarketEngine,
-    MigrationConfig,
-    MigrationPlanner,
-    make_market,
-    plan_reference,
-)
+from repro.market import MigrationConfig, MigrationPlanner, plan_reference
 
 from .common import emit, timeit
 
@@ -50,8 +45,11 @@ def _build(m: int, seed: int = 0):
         pool.place(vm, i % n_hosts, now=0.0)  # even spread; hosts never overfill
         vm.state = VmState.RUNNING
         vm.run_start = 0.0
-    eng = MarketEngine(make_market("volatile", n_pools=N_POOLS, seed=seed,
-                                   tick_interval=60.0))
+    # engine materialized from a scenario spec (flat per-pool volatility —
+    # the registry-shaped world the planner benchmarks against)
+    eng = build_engine(ScenarioSpec(workload="market", regime="volatile",
+                                    n_pools=N_POOLS, tick_interval=60.0,
+                                    from_advisor=False), seed)
     for k in range(6):
         prices = eng.tick(pool, 60.0 * k)
         pool.set_pool_prices(prices)

@@ -12,27 +12,25 @@ discount (``PriceModel.spot_discount``); with ``--market`` the dynamic
 market engine runs underneath and spot bills at each pool's *realized
 clearing price* instead.
 
+The whole comparison is one :class:`~repro.api.ScenarioSpec` + a policy
+loop: ``api.build`` materializes fresh engines/simulators per policy, so no
+state can leak between rows (the paper's same-randomized-values
+methodology for free).
+
 Run:  PYTHONPATH=src python examples/market_comparison.py [--quick] [--market]
 """
 import argparse
-import copy
 import time
 
-from repro.core import (
-    MarketSimulator,
-    ScenarioConfig,
-    SimConfig,
-    make_policy,
-    synthetic_scenario,
+from repro.api import (
+    BidSpec,
+    PolicySpec,
+    RunSpec,
+    ScenarioSpec,
+    build,
 )
-from repro.market import (
-    MarketEngine,
-    RandomizedBid,
-    assign_bids,
-    cost_stats,
-    make_market,
-    realized_cost_stats,
-)
+from repro.core import ScenarioConfig, synthetic_scenario
+from repro.market import cost_stats, realized_cost_stats
 
 POLICIES = ["first-fit", "best-fit", "worst-fit", "hlem-vmp",
             "hlem-vmp-adjusted"]
@@ -54,33 +52,30 @@ def main() -> None:
 
     policies = (["first-fit", "hlem-vmp", "hlem-vmp-adjusted"]
                 if args.quick else POLICIES)
+    scenario = ScenarioSpec(
+        workload="synthetic",
+        regime=args.regime if args.market else None,
+        n_pools=2, from_advisor=False,
+        bid=(BidSpec("randomized", {"lo": 0.35, "hi": 1.0})
+             if args.market else None))
+
     hosts, vms = synthetic_scenario(ScenarioConfig(seed=args.seed))
-    if args.market:
-        assign_bids(vms, RandomizedBid(lo=0.35, hi=1.0), seed=args.seed)
+    n_spot = sum(1 for v in vms if v.is_spot)
     print(f"fleet: {len(hosts)} hosts | workload: {len(vms)} VMs "
-          f"({sum(1 for v in vms if v.is_spot)} spot)"
+          f"({n_spot} spot)"
           + (f" | market engine: {args.regime}" if args.market else ""))
     print(f"{'policy':20s} {'interrupts':>10s} {'avg_s':>8s} {'max_s':>8s} "
           f"{'finished':>9s} {'cost$':>8s} {'save%':>6s} {'waste$':>7s} "
           f"{'wall_s':>7s}")
     for name in policies:
         kwargs = {"alpha": args.alpha} if name == "hlem-vmp-adjusted" else {}
-        engine = None
-        if args.market:
-            engine = MarketEngine(make_market(args.regime, n_pools=2,
-                                              seed=args.seed))
-        sim = MarketSimulator(policy=make_policy(name, **kwargs),
-                              config=SimConfig(record_timeline=False),
-                              engine=engine)
-        for i, cap in enumerate(hosts):
-            sim.add_host(cap, pool=(i % 2 if args.market else 0))
-        for v in vms:
-            sim.submit(copy.deepcopy(v))
+        sim = build(RunSpec(scenario=scenario,
+                            policy=PolicySpec(name, kwargs)), args.seed)
         t0 = time.time()
         metrics = sim.run(until=2200.0)
         s = metrics.spot_stats(sim.vms)
         if args.market:
-            c = realized_cost_stats(sim.vms.values(), engine, sim.pool)
+            c = realized_cost_stats(sim.vms.values(), sim.engine, sim.pool)
         else:
             c = cost_stats(sim.vms.values())
         print(f"{name:20s} {s['interruptions']:10d} "

@@ -1,0 +1,470 @@
+"""The declarative spec tree — one serializable description of "a run".
+
+Frozen dataclasses describing everything a simulation run needs, validated
+at *construction* (unknown names, bad pool counts, migration-without-engine
+all fail before any event loop starts), with lossless ``to_dict`` /
+``from_dict`` / JSON round-trips so scenarios are shareable files and
+CI-gateable artifacts:
+
+* :class:`BidSpec`        — bid strategy name + params (``BID_REGISTRY``).
+* :class:`PolicySpec`     — allocation policy name + params
+  (``POLICY_REGISTRY``).
+* :class:`MigrationSpec`  — migration policy name + params
+  (``MIGRATION_REGISTRY``).
+* :class:`RebidSpec`      — adaptive re-bid bump range (RebidOnResume).
+* :class:`ScenarioSpec`   — workload + market regime + pools + tick +
+  horizon (``WORKLOAD_REGISTRY``; ``regime=None`` = no market engine).
+* :class:`RunSpec`        — scenario × policy × migration × rebid: the unit
+  :func:`repro.api.build` materializes.
+* :class:`ExperimentSpec` — scenario + policy/migration/regime grid + seed
+  list: the unit :func:`repro.api.sweep.run_experiment` fans out.
+
+Specs carry *names and parameters*, never live objects — stateful
+components (engines, planners, policies) are materialized fresh per run by
+the builder, so two runs can never accidentally share state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+from ..core.allocation import POLICY_REGISTRY
+from ..core.simulator import SimConfig
+from ..market.bids import BID_REGISTRY
+from ..market.migration import (
+    MIGRATION_POLICIES,
+    MIGRATION_REGISTRY,
+    MigrationConfig,
+)
+from ..market.pools import REGIMES
+from .workloads import WORKLOAD_REGISTRY
+
+
+def _spec_error(msg: str) -> ValueError:
+    return ValueError(f"invalid spec: {msg}")
+
+
+def _check_param_keys(params: Mapping[str, Any], allowed, what: str) -> None:
+    unknown = sorted(set(params) - set(allowed))
+    if unknown:
+        raise _spec_error(
+            f"unknown {what} parameter(s) {unknown} "
+            f"(known: {', '.join(sorted(allowed))})")
+
+
+def _factory_param_names(factory) -> Optional[Tuple[str, ...]]:
+    """Keyword-parameter names a factory accepts, or None when it takes
+    ``**kwargs`` (then key validation is deferred to build time)."""
+    try:
+        sig = inspect.signature(factory)
+    except (TypeError, ValueError):  # builtins / C callables
+        return None
+    names = []
+    for p in sig.parameters.values():
+        if p.kind is inspect.Parameter.VAR_KEYWORD:
+            return None
+        if p.name != "self" and p.kind in (
+                inspect.Parameter.POSITIONAL_OR_KEYWORD,
+                inspect.Parameter.KEYWORD_ONLY):
+            names.append(p.name)
+    return tuple(names)
+
+
+def _set(obj, name: str, value) -> None:
+    object.__setattr__(obj, name, value)  # frozen-dataclass field fixup
+
+
+class _SpecBase:
+    """Shared JSON plumbing for every spec dataclass."""
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str):
+        return cls.from_dict(json.loads(text))
+
+    def replace(self, **changes):
+        """``dataclasses.replace`` shorthand (re-runs validation)."""
+        return dataclasses.replace(self, **changes)
+
+
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class BidSpec(_SpecBase):
+    """Bid strategy for the workload's spot VMs (engine runs only)."""
+
+    strategy: str = "randomized"
+    params: Mapping[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        factory = BID_REGISTRY.get(self.strategy)  # raises on unknown name
+        _set(self, "params", dict(self.params))
+        allowed = _factory_param_names(factory)
+        if allowed is not None:
+            # pool_cfg-derived defaults the builder may inject are implicit
+            _check_param_keys(self.params, set(allowed),
+                              f"bid strategy {self.strategy!r}")
+
+    def to_dict(self) -> dict:
+        return {"strategy": self.strategy, "params": dict(self.params)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "BidSpec":
+        return cls(strategy=d.get("strategy", "randomized"),
+                   params=d.get("params", {}))
+
+
+@dataclass(frozen=True)
+class PolicySpec(_SpecBase):
+    """Allocation policy by registry name."""
+
+    name: str
+    params: Mapping[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        factory = POLICY_REGISTRY.get(self.name)
+        _set(self, "params", dict(self.params))
+        allowed = _factory_param_names(factory)
+        if allowed is not None:
+            _check_param_keys(self.params, set(allowed),
+                              f"allocation policy {self.name!r}")
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "params": dict(self.params)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "PolicySpec":
+        return cls(name=d["name"], params=d.get("params", {}))
+
+
+@dataclass(frozen=True)
+class MigrationSpec(_SpecBase):
+    """Proactive migration policy by registry name (``"none"`` = off)."""
+
+    policy: str = "none"
+    params: Mapping[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        MIGRATION_REGISTRY.get(self.policy)
+        _set(self, "params", dict(self.params))
+        if self.policy in MIGRATION_POLICIES:
+            allowed = {f.name for f in dataclasses.fields(MigrationConfig)
+                       } - {"policy"}
+            _check_param_keys(self.params, allowed,
+                              f"migration policy {self.policy!r}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.policy != "none"
+
+    def to_dict(self) -> dict:
+        return {"policy": self.policy, "params": dict(self.params)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "MigrationSpec":
+        return cls(policy=d.get("policy", "none"), params=d.get("params", {}))
+
+
+@dataclass(frozen=True)
+class RebidSpec(_SpecBase):
+    """Adaptive re-bidding on hibernation (RebidOnResume); the builder
+    supplies the on-demand cap and seed."""
+
+    bump_lo: float = 1.05
+    bump_hi: float = 1.30
+
+    def __post_init__(self):
+        if not (0.0 < self.bump_lo <= self.bump_hi):
+            raise _spec_error(
+                f"rebid bump range needs 0 < bump_lo <= bump_hi "
+                f"(got [{self.bump_lo}, {self.bump_hi}])")
+
+    def to_dict(self) -> dict:
+        return {"bump_lo": self.bump_lo, "bump_hi": self.bump_hi}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "RebidSpec":
+        return cls(bump_lo=d.get("bump_lo", 1.05),
+                   bump_hi=d.get("bump_hi", 1.30))
+
+
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ScenarioSpec(_SpecBase):
+    """Workload + market regime + pools + tick + horizon — everything about
+    the *world* a policy runs in (nothing about which policy runs)."""
+
+    workload: str = "market"
+    workload_params: Mapping[str, Any] = field(default_factory=dict)
+    #: price regime (``repro.market.pools.REGIMES``); None = no market engine
+    regime: Optional[str] = None
+    n_pools: int = 4
+    tick_interval: float = 60.0
+    #: derive per-pool volatility from the synthetic Spot-Advisor dataset
+    from_advisor: bool = True
+    #: bid strategy for spot VMs (engine runs only)
+    bid: Optional[BidSpec] = None
+    #: extra :class:`~repro.core.simulator.SimConfig` fields
+    #: (e.g. ``interruption_selector``)
+    sim_params: Mapping[str, Any] = field(default_factory=dict)
+    #: simulated horizon (s); None = the workload's default
+    horizon: Optional[float] = None
+
+    def __post_init__(self):
+        entry = WORKLOAD_REGISTRY.get(self.workload)  # raises on unknown
+        _set(self, "workload_params", dict(self.workload_params))
+        _set(self, "sim_params", dict(self.sim_params))
+        if isinstance(self.bid, Mapping):
+            _set(self, "bid", BidSpec.from_dict(self.bid))
+        if self.regime is not None and self.regime not in REGIMES:
+            raise _spec_error(
+                f"unknown regime {self.regime!r} (known: {', '.join(REGIMES)};"
+                f" None disables the market engine)")
+        if not (isinstance(self.n_pools, int) and self.n_pools >= 1):
+            raise _spec_error(f"n_pools must be an int >= 1 "
+                              f"(got {self.n_pools!r})")
+        if not self.tick_interval > 0:
+            raise _spec_error(f"tick_interval must be > 0 "
+                              f"(got {self.tick_interval!r})")
+        if self.horizon is not None and not self.horizon > 0:
+            raise _spec_error(f"horizon must be > 0 or None "
+                              f"(got {self.horizon!r})")
+        reserved = set(getattr(entry, "reserved_params", ()) or ())
+        overlap = sorted(reserved & set(self.workload_params))
+        if overlap:
+            raise _spec_error(
+                f"workload_params {overlap} are supplied by the builder "
+                f"(per-run seed / scenario fields) — remove them")
+        cfg_cls = getattr(entry, "config_cls", None)
+        if cfg_cls is not None and dataclasses.is_dataclass(cfg_cls):
+            allowed = {f.name for f in dataclasses.fields(cfg_cls)} - reserved
+            _check_param_keys(self.workload_params, allowed,
+                              f"workload {self.workload!r}")
+        _check_param_keys(
+            self.sim_params,
+            {f.name for f in dataclasses.fields(SimConfig)}
+            - {"record_timeline"},
+            "sim")
+        if getattr(entry, "requires_market", False) and self.regime is None:
+            raise _spec_error(
+                f"workload {self.workload!r} requires a market regime "
+                f"(set regime to one of {', '.join(REGIMES)})")
+        if self.bid is not None:
+            if self.regime is None:
+                raise _spec_error(
+                    "a bid strategy needs a market engine — set regime, or "
+                    "drop the bid spec")
+            if not getattr(entry, "supports_bids", True):
+                raise _spec_error(
+                    f"workload {self.workload!r} does not support bid "
+                    f"assignment (VMs carry their own bids)")
+
+    @property
+    def has_market(self) -> bool:
+        return self.regime is not None
+
+    def to_dict(self) -> dict:
+        return {
+            "workload": self.workload,
+            "workload_params": dict(self.workload_params),
+            "regime": self.regime,
+            "n_pools": self.n_pools,
+            "tick_interval": self.tick_interval,
+            "from_advisor": self.from_advisor,
+            "bid": self.bid.to_dict() if self.bid is not None else None,
+            "sim_params": dict(self.sim_params),
+            "horizon": self.horizon,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ScenarioSpec":
+        bid = d.get("bid")
+        return cls(
+            workload=d.get("workload", "market"),
+            workload_params=d.get("workload_params", {}),
+            regime=d.get("regime"),
+            n_pools=d.get("n_pools", 4),
+            tick_interval=d.get("tick_interval", 60.0),
+            from_advisor=d.get("from_advisor", True),
+            bid=BidSpec.from_dict(bid) if bid is not None else None,
+            sim_params=d.get("sim_params", {}),
+            horizon=d.get("horizon"),
+        )
+
+
+@dataclass(frozen=True)
+class RunSpec(_SpecBase):
+    """One concrete run: scenario × allocation policy × migration × rebid.
+    :func:`repro.api.build` materializes it into a fresh simulator."""
+
+    scenario: ScenarioSpec
+    policy: PolicySpec
+    migration: MigrationSpec = field(default_factory=MigrationSpec)
+    rebid: Optional[RebidSpec] = None
+
+    def __post_init__(self):
+        for name, typ in (("scenario", ScenarioSpec), ("policy", PolicySpec),
+                          ("migration", MigrationSpec)):
+            val = getattr(self, name)
+            if isinstance(val, Mapping):
+                _set(self, name, typ.from_dict(val))
+            elif not isinstance(getattr(self, name), typ):
+                raise _spec_error(f"{name} must be a {typ.__name__}")
+        if isinstance(self.rebid, Mapping):
+            _set(self, "rebid", RebidSpec.from_dict(self.rebid))
+        if self.rebid is not None and not isinstance(self.rebid, RebidSpec):
+            raise _spec_error("rebid must be a RebidSpec or None")
+        if self.migration.enabled and not self.scenario.has_market:
+            raise _spec_error(
+                f"migration policy {self.migration.policy!r} requires a "
+                f"market engine (prices drive the scoring) — set "
+                f"scenario.regime, or use migration 'none'")
+        if self.rebid is not None and not self.scenario.has_market:
+            raise _spec_error(
+                "adaptive re-bidding requires a market engine — set "
+                "scenario.regime, or drop the rebid spec")
+
+    def to_dict(self) -> dict:
+        return {
+            "scenario": self.scenario.to_dict(),
+            "policy": self.policy.to_dict(),
+            "migration": self.migration.to_dict(),
+            "rebid": self.rebid.to_dict() if self.rebid is not None else None,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "RunSpec":
+        rebid = d.get("rebid")
+        return cls(
+            scenario=ScenarioSpec.from_dict(d["scenario"]),
+            policy=PolicySpec.from_dict(d["policy"]),
+            migration=MigrationSpec.from_dict(d.get("migration", {})),
+            rebid=RebidSpec.from_dict(rebid) if rebid is not None else None,
+        )
+
+
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ExperimentSpec(_SpecBase):
+    """A scenario × (regime × policy × migration) grid swept over seeds —
+    the sweep runner's input, and the one file that describes a whole
+    comparison experiment."""
+
+    scenario: ScenarioSpec
+    policies: Tuple[PolicySpec, ...]
+    seeds: Tuple[int, ...]
+    migrations: Tuple[MigrationSpec, ...] = (MigrationSpec(),)
+    #: fan the scenario over these regimes (None = use ``scenario.regime``)
+    regimes: Optional[Tuple[str, ...]] = None
+    rebid: Optional[RebidSpec] = None
+    name: str = "experiment"
+
+    def __post_init__(self):
+        _set(self, "policies", tuple(
+            PolicySpec.from_dict(p) if isinstance(p, Mapping) else p
+            for p in self.policies))
+        _set(self, "migrations", tuple(
+            MigrationSpec.from_dict(m) if isinstance(m, Mapping) else m
+            for m in self.migrations))
+        _set(self, "seeds", tuple(self.seeds))
+        if isinstance(self.scenario, Mapping):
+            _set(self, "scenario", ScenarioSpec.from_dict(self.scenario))
+        if isinstance(self.rebid, Mapping):
+            _set(self, "rebid", RebidSpec.from_dict(self.rebid))
+        if not isinstance(self.scenario, ScenarioSpec):
+            raise _spec_error("scenario must be a ScenarioSpec")
+        if not all(isinstance(p, PolicySpec) for p in self.policies):
+            raise _spec_error("policies must all be PolicySpec")
+        if not all(isinstance(m, MigrationSpec) for m in self.migrations):
+            raise _spec_error("migrations must all be MigrationSpec")
+        if self.rebid is not None and not isinstance(self.rebid, RebidSpec):
+            raise _spec_error("rebid must be a RebidSpec or None")
+        if self.regimes is not None:
+            _set(self, "regimes", tuple(self.regimes))
+        if not self.policies:
+            raise _spec_error("an experiment needs at least one policy")
+        if not self.migrations:
+            raise _spec_error("migrations cannot be empty — use the default "
+                              "(MigrationSpec('none'),)")
+        if not self.seeds:
+            raise _spec_error("an experiment needs at least one seed")
+        if len(set(self.seeds)) != len(self.seeds):
+            raise _spec_error(f"duplicate seeds: {list(self.seeds)}")
+        if not all(isinstance(s, int) for s in self.seeds):
+            raise _spec_error(f"seeds must be ints (got {list(self.seeds)})")
+        if self.regimes is not None:
+            if not self.regimes:
+                raise _spec_error("regimes cannot be empty — use None to "
+                                  "inherit scenario.regime")
+            for r in self.regimes:
+                if r is not None and r not in REGIMES:
+                    raise _spec_error(f"unknown regime {r!r} in regimes "
+                                      f"(known: {', '.join(REGIMES)})")
+        # every grid cell is validated eagerly: a bad combination (e.g.
+        # migration over a regime-less scenario) fails at construction,
+        # not in a worker process mid-sweep
+        self.cells()
+
+    # -- grid ---------------------------------------------------------------
+    def cells(self) -> Tuple[RunSpec, ...]:
+        """The (regime × policy × migration) grid as RunSpecs, in report
+        order."""
+        regimes = (self.regimes if self.regimes is not None
+                   else (self.scenario.regime,))
+        out = []
+        for regime in regimes:
+            scenario = (self.scenario if regime == self.scenario.regime
+                        else self.scenario.replace(regime=regime))
+            for policy in self.policies:
+                for migration in self.migrations:
+                    out.append(RunSpec(scenario=scenario, policy=policy,
+                                       migration=migration,
+                                       rebid=self.rebid))
+        return tuple(out)
+
+    def runs(self):
+        """Yields ``(cell_index, run_spec, seed)`` for the full grid × seed
+        fan-out."""
+        for i, cell in enumerate(self.cells()):
+            for seed in self.seeds:
+                yield i, cell, seed
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "scenario": self.scenario.to_dict(),
+            "policies": [p.to_dict() for p in self.policies],
+            "migrations": [m.to_dict() for m in self.migrations],
+            "regimes": list(self.regimes) if self.regimes is not None
+            else None,
+            "seeds": list(self.seeds),
+            "rebid": self.rebid.to_dict() if self.rebid is not None else None,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ExperimentSpec":
+        rebid = d.get("rebid")
+        regimes = d.get("regimes")
+        return cls(
+            name=d.get("name", "experiment"),
+            scenario=ScenarioSpec.from_dict(d["scenario"]),
+            policies=tuple(PolicySpec.from_dict(p) for p in d["policies"]),
+            migrations=tuple(MigrationSpec.from_dict(m)
+                             for m in d.get("migrations", [{}])),
+            regimes=tuple(regimes) if regimes is not None else None,
+            seeds=tuple(int(s) for s in d["seeds"]),
+            rebid=RebidSpec.from_dict(rebid) if rebid is not None else None,
+        )
+
+    @classmethod
+    def load(cls, path: str) -> "ExperimentSpec":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json(indent=1) + "\n")

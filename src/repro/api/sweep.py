@@ -1,0 +1,179 @@
+"""Seed-swept experiment runner: ExperimentSpec → aggregate report.
+
+Fans an :class:`~repro.api.specs.ExperimentSpec` out over its
+(regime × policy × migration) grid × seeds with multiprocessing, then
+aggregates every numeric metric per grid cell into mean ± 95% CI
+(Student-t half-width over the seed sample).  The report is a single JSON
+document and is *deterministic*: rows carry no wall-clock fields, jobs are
+dispatched and re-assembled in grid order, and aggregate floats are rounded
+— two runs of the same spec produce byte-identical reports, so the report
+itself is a CI-gateable artifact.
+
+This is the ROADMAP's "seed-swept evaluation harness": tail statistics like
+max interruption duration are noisy at a single seed; comparative claims
+(HLEM-VMP vs First-Fit, gradient-aware migration vs none) become
+mean ± CI over >= 20 seeds per cell, from one spec file:
+
+    exp = ExperimentSpec.load("examples/specs/migration_sweep.json")
+    report = run_experiment(exp)
+    write_report(report, "results/migration_sweep.json")
+"""
+from __future__ import annotations
+
+import json
+import math
+import multiprocessing
+import os
+from typing import Dict, List, Optional
+
+from .build import resolve_horizon, run_one
+from .specs import ExperimentSpec, RunSpec
+
+#: two-sided 95% Student-t critical values by degrees of freedom (n - 1);
+#: beyond the table the normal limit 1.96 is used
+_T95 = {1: 12.706, 2: 4.303, 3: 3.182, 4: 2.776, 5: 2.571, 6: 2.447,
+        7: 2.365, 8: 2.306, 9: 2.262, 10: 2.228, 11: 2.201, 12: 2.179,
+        13: 2.160, 14: 2.145, 15: 2.131, 16: 2.120, 17: 2.110, 18: 2.101,
+        19: 2.093, 20: 2.086, 21: 2.080, 22: 2.074, 23: 2.069, 24: 2.064,
+        25: 2.060, 26: 2.056, 27: 2.052, 28: 2.048, 29: 2.045, 30: 2.042}
+
+_ID_KEYS = ("policy", "regime", "migration", "seed")
+
+
+def t_crit95(df: int) -> float:
+    if df < 1:
+        return float("nan")
+    if df in _T95:
+        return _T95[df]
+    # beyond the table: closed-form approximation t ~ 1.96 + 2.4/df
+    # (within ~0.2% of the true quantile for df > 30, continuous at the
+    # table boundary, converging to the normal limit)
+    return 1.96 + 2.4 / df
+
+
+def mean_ci95(values: List[float]) -> Dict[str, float]:
+    """Mean and 95% CI half-width (t-distribution) of a seed sample."""
+    n = len(values)
+    mean = sum(values) / n
+    if n < 2:
+        return {"mean": round(mean, 6), "ci95": 0.0,
+                "min": round(min(values), 6), "max": round(max(values), 6),
+                "n": n}
+    var = sum((v - mean) ** 2 for v in values) / (n - 1)
+    half = t_crit95(n - 1) * math.sqrt(var / n)
+    return {"mean": round(mean, 6), "ci95": round(half, 6),
+            "min": round(min(values), 6), "max": round(max(values), 6),
+            "n": n}
+
+
+def aggregate_rows(rows: List[dict]) -> Dict[str, Dict[str, float]]:
+    """mean ± CI for every numeric metric shared by the cell's rows."""
+    out: Dict[str, Dict[str, float]] = {}
+    for key in rows[0]:
+        if key in _ID_KEYS:
+            continue
+        vals = [r[key] for r in rows]
+        if all(isinstance(v, (int, float)) and not isinstance(v, bool)
+               for v in vals):
+            out[key] = mean_ci95([float(v) for v in vals])
+    return out
+
+
+def _run_job(job) -> dict:
+    spec_dict, seed, until = job
+    return run_one(RunSpec.from_dict(spec_dict), seed, until=until)
+
+
+def run_experiment(exp: ExperimentSpec, processes: Optional[int] = None,
+                   until: Optional[float] = None,
+                   progress: bool = False) -> dict:
+    """Run the full grid × seed fan-out and aggregate per cell.
+
+    ``processes``: worker count for the multiprocessing pool; ``0`` or ``1``
+    runs serially in-process (reports are identical either way — rows are
+    re-assembled in grid order).  ``until`` overrides every run's horizon
+    (e.g. for smoke sweeps)."""
+    cells = exp.cells()
+    # flat job list in grid-major order (cell 0's seeds, cell 1's seeds, …)
+    jobs = [(cell.to_dict(), seed, until)
+            for cell in cells for seed in exp.seeds]
+    if processes is None:
+        processes = min(os.cpu_count() or 1, len(jobs))
+    if processes > 1 and len(jobs) > 1:
+        # prefer fork so registry entries added at runtime (e.g. a custom
+        # policy registered in the caller's __main__) survive into workers;
+        # under spawn, custom plugins must be registered at import time of
+        # an importable module
+        try:
+            ctx = multiprocessing.get_context("fork")
+        except ValueError:  # fork unavailable (e.g. Windows)
+            ctx = multiprocessing.get_context()
+        with ctx.Pool(processes) as pool:
+            rows = []
+            # imap preserves job order, so the report stays deterministic
+            for k, row in enumerate(pool.imap(_run_job, jobs, chunksize=1)):
+                rows.append(row)
+                if progress:
+                    print(f"# sweep {k + 1}/{len(jobs)}", flush=True)
+    else:
+        rows = []
+        for k, job in enumerate(jobs):
+            rows.append(_run_job(job))
+            if progress:
+                print(f"# sweep {k + 1}/{len(jobs)}", flush=True)
+
+    n_seeds = len(exp.seeds)
+    report_cells = []
+    for i, cell in enumerate(cells):
+        cell_rows = rows[i * n_seeds:(i + 1) * n_seeds]
+        report_cells.append({
+            "regime": cell.scenario.regime,
+            "policy": cell.policy.name,
+            "migration": cell.migration.policy,
+            "n_seeds": n_seeds,
+            "metrics": aggregate_rows(cell_rows),
+            "rows": cell_rows,
+        })
+    horizon = until if until is not None else resolve_horizon(exp.scenario)
+    return {
+        "name": exp.name,
+        "experiment": exp.to_dict(),
+        "horizon": horizon,
+        "n_runs": len(jobs),
+        "cells": report_cells,
+    }
+
+
+def write_report(report: dict, path: str) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def format_report(report: dict) -> str:
+    """Human-readable mean ± CI table (the sweep CLI's default output)."""
+    lines = [
+        f"sweep: {report['name']}  "
+        f"({report['n_runs']} runs, {report['cells'][0]['n_seeds']} seeds "
+        f"per cell, horizon={report['horizon']})",
+        f"{'regime':11s} {'policy':18s} {'migration':15s} "
+        f"{'interruptions':>20s} {'max_intr_s':>18s} {'migr':>12s} "
+        f"{'spot_cost':>17s}",
+    ]
+    for c in report["cells"]:
+        m = c["metrics"]
+
+        def pm(key: str, digits: int = 1) -> str:
+            if key not in m:
+                return "-"
+            return (f"{m[key]['mean']:.{digits}f}"
+                    f"±{m[key]['ci95']:.{digits}f}")
+
+        lines.append(
+            f"{str(c['regime']):11s} {c['policy']:18s} "
+            f"{c['migration']:15s} {pm('interruptions'):>20s} "
+            f"{pm('max_interruption_time'):>18s} {pm('migrations'):>12s} "
+            f"{pm('realized_spot_cost', 3):>17s}")
+    return "\n".join(lines)

@@ -1,0 +1,124 @@
+"""Workload generators as scenario-API plugins.
+
+Each entry in :data:`WORKLOAD_REGISTRY` is a :class:`WorkloadDef`: a
+``populate(sim, scenario, seed)`` function that fills an empty
+:class:`~repro.core.simulator.MarketSimulator` (hosts + submitted VMs +
+bid assignment), plus the metadata the spec layer validates against
+(``config_cls`` for ``workload_params`` key checking, bid/market support,
+the workload's default horizon).
+
+Built-ins:
+
+* ``synthetic`` — the paper's §VII-E comparison scenario
+  (:func:`repro.core.workload.synthetic_scenario`); hosts are striped over
+  the market's pools when an engine is attached.
+* ``market``    — the regional-demand-hump market scenario
+  (:func:`repro.core.workload.market_scenario`); requires a market regime.
+* ``trace``     — Google-Cluster-Trace-style machine/task events
+  (:func:`repro.market.trace.generate_trace` + ``wire_trace``).
+
+Custom workloads register a plain populate function:
+
+    @register_workload("my-workload")
+    def _populate(sim, scenario, seed):
+        sim.add_host(...); sim.submit(...)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from ..core.registry import Registry
+from ..core.workload import (
+    MarketScenarioConfig,
+    ScenarioConfig,
+    market_scenario,
+    synthetic_scenario,
+)
+from ..market.bids import assign_bids, make_bid_strategy
+from ..market.trace import TraceConfig, generate_trace, wire_trace
+
+WORKLOAD_REGISTRY = Registry("workload")
+
+
+@dataclass
+class WorkloadDef:
+    """One pluggable workload: the populate function plus spec-validation
+    metadata."""
+
+    populate: Callable  # (sim, scenario_spec, seed) -> None
+    #: config dataclass the workload's ``workload_params`` feed (None skips
+    #: the unknown-key check for custom workloads)
+    config_cls: Optional[type] = None
+    #: horizon used when the spec leaves ``horizon=None`` (None = run to
+    #: completion)
+    default_horizon: Optional[float] = None
+    #: whether ``ScenarioSpec.bid`` applies (trace VMs keep bid = inf)
+    supports_bids: bool = True
+    #: whether the workload only makes sense under a market regime
+    requires_market: bool = False
+    #: config keys the builder supplies itself — rejected in
+    #: ``workload_params`` at spec construction
+    reserved_params: tuple = ("seed",)
+
+    def __call__(self, sim, scenario, seed: int) -> None:
+        self.populate(sim, scenario, seed)
+
+
+def register_workload(name: str, config_cls: Optional[type] = None,
+                      default_horizon: Optional[float] = None,
+                      supports_bids: bool = True,
+                      requires_market: bool = False,
+                      reserved_params: tuple = ("seed",)) -> Callable:
+    """Decorator registering a populate function as a workload."""
+    def _wrap(fn: Callable) -> Callable:
+        WORKLOAD_REGISTRY.register(name, WorkloadDef(
+            populate=fn, config_cls=config_cls,
+            default_horizon=default_horizon, supports_bids=supports_bids,
+            requires_market=requires_market, reserved_params=reserved_params))
+        return fn
+    return _wrap
+
+
+def _assign_spec_bids(sim, scenario, vms, seed: int) -> None:
+    """Stamp bids per the scenario's BidSpec (engine runs only; identical
+    draws to the hand-wired ``assign_bids`` path)."""
+    if scenario.bid is None or sim.engine is None:
+        return
+    strat = make_bid_strategy(
+        scenario.bid.strategy, pool_cfg=sim.engine.config.pools[0],
+        seed=seed, **dict(scenario.bid.params))
+    assign_bids(vms, strat, seed=seed)
+
+
+@register_workload("synthetic", config_cls=ScenarioConfig,
+                   default_horizon=3000.0)
+def _populate_synthetic(sim, scenario, seed: int) -> None:
+    cfg = ScenarioConfig(seed=seed, **dict(scenario.workload_params))
+    hosts, vms = synthetic_scenario(cfg)
+    _assign_spec_bids(sim, scenario, vms, seed)
+    stripe = sim.engine is not None
+    for i, cap in enumerate(hosts):
+        sim.add_host(cap, pool=(i % scenario.n_pools) if stripe else 0)
+    for v in vms:
+        sim.submit(v)
+
+
+@register_workload("market", config_cls=MarketScenarioConfig,
+                   default_horizon=14400.0, requires_market=True,
+                   reserved_params=("seed", "n_pools"))
+def _populate_market(sim, scenario, seed: int) -> None:
+    cfg = MarketScenarioConfig(seed=seed, n_pools=scenario.n_pools,
+                               **dict(scenario.workload_params))
+    hosts, pool_ids, vms = market_scenario(cfg)
+    _assign_spec_bids(sim, scenario, vms, seed)
+    for cap, pid in zip(hosts, pool_ids):
+        sim.add_host(cap, pool=pid)
+    for v in vms:
+        sim.submit(v)
+
+
+@register_workload("trace", config_cls=TraceConfig, supports_bids=False)
+def _populate_trace(sim, scenario, seed: int) -> None:
+    cfg = TraceConfig(seed=seed, **dict(scenario.workload_params))
+    wire_trace(sim, generate_trace(cfg), cfg)

@@ -14,11 +14,14 @@ from .allocation import (
     HlemVmp,
     HlemVmpAdjusted,
     POLICIES,
+    POLICY_REGISTRY,
     WorstFit,
     clearing_mask,
     direct_mask,
     make_policy,
+    register_policy,
 )
+from .registry import Registry
 from .hlem import (
     hlem_scores_batch_jax,
     hlem_scores_batch_np,

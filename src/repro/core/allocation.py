@@ -35,9 +35,17 @@ from .hlem import (
     hlem_select_jax,
 )
 from .hosts import HostPool
+from .registry import Registry
 from .types import Vm
 
 _EPS = 1e-9
+
+#: string-keyed plugin registry for allocation policies — the scenario API's
+#: extension point.  Register custom policies with
+#: ``@register_policy("my-policy")``; ``make_policy`` and ``PolicySpec``
+#: resolve against it.
+POLICY_REGISTRY = Registry("allocation policy")
+register_policy = POLICY_REGISTRY.register
 
 
 def direct_mask(vm: Vm, pool: HostPool) -> np.ndarray:
@@ -145,6 +153,7 @@ class AllocationPolicy:
                          for b in range(feas.shape[0])], dtype=np.int64)
 
 
+@register_policy("first-fit")
 class FirstFit(AllocationPolicy):
     """CloudSim Plus baseline: first host (insertion order) that fits."""
 
@@ -159,6 +168,7 @@ class FirstFit(AllocationPolicy):
         return np.where(any_row, feas.argmax(axis=1), -1)
 
 
+@register_policy("best-fit")
 class BestFit(AllocationPolicy):
     """Host with the least free CPU that still fits (tightest packing)."""
 
@@ -176,6 +186,7 @@ class BestFit(AllocationPolicy):
         return np.where(any_row, free_cpu.argmin(axis=1), -1)
 
 
+@register_policy("worst-fit")
 class WorstFit(AllocationPolicy):
     """Host with the most free CPU (max headroom)."""
 
@@ -193,6 +204,7 @@ class WorstFit(AllocationPolicy):
         return np.where(any_row, free_cpu.argmax(axis=1), -1)
 
 
+@register_policy("hlem-vmp")
 class HlemVmp(AllocationPolicy):
     """HLEM-VMP (paper §VI-A/B).
 
@@ -305,6 +317,7 @@ class HlemVmp(AllocationPolicy):
         return out
 
 
+@register_policy("hlem-vmp-adjusted")
 class HlemVmpAdjusted(HlemVmp):
     """Adjusted HLEM-VMP (§VI-C): spot-load-aware score AHS = HS*(1+α·SL).
 
@@ -325,14 +338,10 @@ class HlemVmpAdjusted(HlemVmp):
         self.adjust_spot_only = adjust_spot_only
 
 
-POLICIES = {
-    "first-fit": FirstFit,
-    "best-fit": BestFit,
-    "worst-fit": WorstFit,
-    "hlem-vmp": HlemVmp,
-    "hlem-vmp-adjusted": HlemVmpAdjusted,
-}
+#: live name → class view of the registry (kept for backward compatibility;
+#: register new policies via ``register_policy``, not by mutating this)
+POLICIES = POLICY_REGISTRY.entries
 
 
 def make_policy(name: str, **kwargs) -> AllocationPolicy:
-    return POLICIES[name](**kwargs)
+    return POLICY_REGISTRY.build(name, **kwargs)

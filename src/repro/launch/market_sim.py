@@ -6,7 +6,7 @@
   python -m repro.launch.market_sim --market --regimes volatile --pools 3
 
 ``--market`` runs the dynamic market engine: multi-pool price clearing over
-the §VII-E synthetic fleet, HLEM vs First-Fit under calm / volatile /
+the market scenario, HLEM vs First-Fit under calm / volatile /
 correlated-pool price regimes, reporting interruption counts, max
 interruption duration, and realized spot cost (billed at clearing price).
 
@@ -17,64 +17,79 @@ interruption metrics:
   python -m repro.launch.market_sim --market --migration all
   python -m repro.launch.market_sim --market --migration gradient-aware \\
       --regimes volatile,correlated --rebid
+
+Every mode routes through the declarative scenario API
+(:mod:`repro.api`): the CLI flags assemble a spec tree, ``api.build``
+materializes fresh components per run.  Two spec-file modes make whole
+experiments shareable artifacts:
+
+  # seed sweep of the --market grid: mean ± 95% CI over N seeds per cell
+  python -m repro.launch.market_sim --market --migration all --sweep 20 \\
+      --report results/migration_sweep.json
+
+  # run an ExperimentSpec JSON file directly (see examples/specs/)
+  python -m repro.launch.market_sim --spec examples/specs/migration_sweep.json
 """
 from __future__ import annotations
 
 import argparse
-import copy
 import json
+import sys
 import time
 
-from ..core import (
-    MarketScenarioConfig,
-    MarketSimulator,
-    ScenarioConfig,
-    SimConfig,
-    dynamic_vm_table,
-    make_policy,
-    market_scenario,
-    spot_vm_table,
-    synthetic_scenario,
-    to_csv,
+from ..api import (
+    BidSpec,
+    ExperimentSpec,
+    MigrationSpec,
+    PolicySpec,
+    RebidSpec,
+    RunSpec,
+    ScenarioSpec,
+    format_report,
+    run_experiment,
+    run_one,
+    write_report,
 )
-from ..market import (
-    MIGRATION_POLICIES,
-    MarketEngine,
-    REGIMES,
-    RebidOnResume,
-    TraceConfig,
-    assign_bids,
-    generate_trace,
-    make_bid_strategy,
-    make_market,
-    make_migration_planner,
-    realized_cost_stats,
-    simulate_trace,
-)
+from ..market import MIGRATION_POLICIES, REGIMES
 
 POLICY_SET = ["first-fit", "best-fit", "worst-fit", "hlem-vmp",
               "hlem-vmp-adjusted"]
 MARKET_POLICY_SET = ["first-fit", "hlem-vmp-adjusted"]
 
 
+def _policy_spec(name: str, alpha: float = -0.5) -> PolicySpec:
+    params = {"alpha": alpha} if name == "hlem-vmp-adjusted" else {}
+    return PolicySpec(name, params)
+
+
+def _market_scenario_spec(regime: str, n_pools: int = 4,
+                          bid_strategy: str = "randomized",
+                          tick_interval: float = 60.0,
+                          from_advisor: bool = True,
+                          horizon: float | None = None) -> ScenarioSpec:
+    """The ``--market`` scenario as a spec: regional demand humps over
+    long-lived pool-flexible spot VMs, per-pool advisor volatility, seeded
+    bids.  Randomized bids are floored above the busy-fleet clearing base,
+    so draws span the at-risk band instead of the permanently-below-base
+    region."""
+    bid_params = {"lo": 0.45} if bid_strategy == "randomized" else {}
+    return ScenarioSpec(
+        workload="market", regime=regime, n_pools=n_pools,
+        tick_interval=tick_interval, from_advisor=from_advisor,
+        bid=BidSpec(bid_strategy, bid_params), horizon=horizon)
+
+
 def run_synthetic(policy_name: str, seed: int, until: float,
                   selector: str = "list_order", alpha: float = -0.5) -> dict:
-    hosts, vms = synthetic_scenario(ScenarioConfig(seed=seed))
-    kwargs = {}
-    if policy_name == "hlem-vmp-adjusted":
-        kwargs["alpha"] = alpha
-    policy = make_policy(policy_name, **kwargs)
-    sim = MarketSimulator(policy=policy, config=SimConfig(
-        record_timeline=False, interruption_selector=selector))
-    for cap in hosts:
-        sim.add_host(cap)
-    for v in vms:
-        sim.submit(copy.deepcopy(v))
+    """One §VII-E synthetic run through the scenario API."""
+    spec = RunSpec(
+        scenario=ScenarioSpec(
+            workload="synthetic",
+            sim_params={"interruption_selector": selector}),
+        policy=_policy_spec(policy_name, alpha))
     t0 = time.time()
-    m = sim.run(until=until)
-    stats = m.spot_stats(sim.vms)
-    stats.update(policy=policy_name, wall_s=round(time.time() - t0, 1),
-                 allocations=m.allocations, resubmissions=m.resubmissions)
+    stats = run_one(spec, seed, until=until)
+    stats["wall_s"] = round(time.time() - t0, 1)
     return stats
 
 
@@ -83,67 +98,50 @@ def run_market(policy_name: str, regime: str, seed: int, until: float = 14400.0,
                tick_interval: float = 60.0, alpha: float = -0.5,
                migration: str = "none", rebid: bool = False,
                from_advisor: bool = True) -> dict:
-    """One engine-coupled run over the *market scenario* (regional demand
-    humps, long-lived pool-flexible spot VMs — see
-    :class:`repro.core.MarketScenarioConfig`): per-pool volatility from the
-    synthetic Spot-Advisor dataset (``from_advisor``, on by default), seeded
-    bids on every spot VM, price-driven interruption waves, realized-price
-    cost accounting.  ``migration`` attaches a proactive cross-pool
-    migration planner (``"none"`` is bit-identical to no planner);
-    ``rebid`` switches on adaptive re-bidding on hibernation."""
-    hosts, pool_ids, vms = market_scenario(
-        MarketScenarioConfig(seed=seed, n_pools=n_pools))
-    mc = make_market(regime, n_pools=n_pools, seed=seed,
-                     tick_interval=tick_interval, from_advisor=from_advisor)
-    engine = MarketEngine(mc)
-    # randomized bids floored above the busy-fleet clearing base, so draws
-    # span the at-risk band instead of the permanently-below-base region
-    strat_kw = {"lo": 0.45} if bid_strategy == "randomized" else {}
-    strat = make_bid_strategy(bid_strategy, pool_cfg=mc.pools[0], seed=seed,
-                              **strat_kw)
-    assign_bids(vms, strat, seed=seed)
-    kwargs = {"alpha": alpha} if policy_name == "hlem-vmp-adjusted" else {}
-    planner = make_migration_planner(migration)
-    rebid_hook = (RebidOnResume(on_demand_rate=mc.pools[0].on_demand_rate,
-                                seed=seed) if rebid else None)
-    sim = MarketSimulator(policy=make_policy(policy_name, **kwargs),
-                          config=SimConfig(record_timeline=False),
-                          engine=engine, migration=planner,
-                          rebid=rebid_hook)
-    for cap, pid in zip(hosts, pool_ids):
-        sim.add_host(cap, pool=pid)
-    for v in vms:
-        sim.submit(v)
+    """One engine-coupled run over the market scenario through the scenario
+    API (fresh engine/planner per call; ``migration="none"`` is
+    bit-identical to no planner; ``rebid`` switches on adaptive re-bidding
+    on hibernation)."""
+    spec = RunSpec(
+        scenario=_market_scenario_spec(regime, n_pools, bid_strategy,
+                                       tick_interval, from_advisor),
+        policy=_policy_spec(policy_name, alpha),
+        migration=MigrationSpec(migration),
+        rebid=RebidSpec() if rebid else None)
     t0 = time.time()
-    m = sim.run(until=until)
-    wall = time.time() - t0
-    s = m.spot_stats(sim.vms)
-    ms = m.market_stats()
-    migs = m.migration_stats(sim.vms, engine)
-    cost = realized_cost_stats(sim.vms.values(), engine, sim.pool)
-    return {
-        "policy": policy_name,
-        "regime": regime,
-        "migration": migration,
-        "interruptions": s["interruptions"],
-        "price_interruptions": ms["price_interruptions"],
-        "waves": ms["waves"],
-        "max_wave_size": ms["max_wave_size"],
-        "avg_interruption_time": s["avg_interruption_time"],
-        "max_interruption_time": s["max_interruption_time"],
-        "spot_finished": s["spot_finished"],
-        "spot_terminated": s["spot_terminated"],
-        "migrations": migs["completed"],
-        "migrations_failed": migs["failed"],
-        "migration_downtime_s": migs["downtime_s"],
-        "predicted_saving": round(migs["predicted_saving"], 2),
-        "realized_saving": round(migs["realized_saving"], 2),
-        "realized_spot_cost": round(cost["spot_cost"], 4),
-        "savings_pct": round(cost["savings_pct"], 1),
-        "wasted_cost": round(cost["wasted_cost"], 4),
-        "allocations": m.allocations,
-        "wall_s": round(wall, 1),
-    }
+    row = run_one(spec, seed, until=until)
+    row["wall_s"] = round(time.time() - t0, 1)
+    return row
+
+
+def _print_market_rows(rows) -> None:
+    print(f"{'regime':11s} {'policy':18s} {'migration':15s} "
+          f"{'intr':>5s} {'waves':>5s} {'max_intr_s':>10s} "
+          f"{'migr':>5s} {'down_s':>7s} {'spot_cost':>9s} "
+          f"{'save%':>6s} {'waste':>7s}")
+    for r in rows:
+        print(f"{r['regime']:11s} {r['policy']:18s} "
+              f"{r['migration']:15s} "
+              f"{r['interruptions']:5d} {r['waves']:5d} "
+              f"{r['max_interruption_time']:10.1f} "
+              f"{r['migrations']:5d} "
+              f"{r['migration_downtime_s']:7.1f} "
+              f"{r['realized_spot_cost']:9.3f} "
+              f"{r['savings_pct']:6.1f} {r['wasted_cost']:7.3f}")
+
+
+def _sweep_and_report(exp: ExperimentSpec, args) -> int:
+    report = run_experiment(exp, processes=args.workers,
+                            progress=not args.json)
+    if args.report:
+        path = write_report(report, args.report)
+        # stderr keeps --json stdout a pure JSON document
+        print(f"# wrote {path}", file=sys.stderr)
+    if args.json:
+        print(json.dumps(report, indent=1, sort_keys=True))
+    else:
+        print(format_report(report))
+    return 0
 
 
 def main(argv=None) -> int:
@@ -175,16 +173,38 @@ def main(argv=None) -> int:
     ap.add_argument("--tick", type=float, default=60.0,
                     help="price tick interval (s)")
     ap.add_argument("--migration", default="none",
-                    help="proactive migration policy, one of "
-                         + ",".join(MIGRATION_POLICIES) + ", or 'all' to "
-                         "compare every policy per regime")
+                    help="proactive migration policy: a comma-separated "
+                         "subset of " + ",".join(MIGRATION_POLICIES)
+                         + ", or 'all' to compare every policy per regime")
     ap.add_argument("--rebid", action="store_true",
                     help="adaptive re-bidding on hibernation (Bhuyan-style)")
     ap.add_argument("--flat-volatility", action="store_true",
                     help="use the regime's hand-set volatility constant for "
                          "every pool instead of deriving per-pool sigmas "
                          "from the synthetic Spot-Advisor dataset")
+    # declarative / sweep modes
+    ap.add_argument("--sweep", type=int, default=0, metavar="N",
+                    help="seed-swept evaluation: run the --market grid over "
+                         "N seeds (seed..seed+N-1) and report mean ± 95%% CI "
+                         "per regime × policy × migration cell")
+    ap.add_argument("--spec", default="",
+                    help="run an ExperimentSpec JSON file (overrides every "
+                         "scenario flag; see examples/specs/)")
+    ap.add_argument("--report", default="",
+                    help="write the sweep's aggregate report JSON here")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="sweep worker processes (default: cpu count; "
+                         "0 = serial)")
     args = ap.parse_args(argv)
+
+    if args.sweep and not (args.market or args.spec):
+        ap.error("--sweep requires --market (or use --spec FILE)")
+    if args.report and not (args.sweep or args.spec):
+        ap.error("--report only applies to sweep modes "
+                 "(--sweep N or --spec FILE)")
+
+    if args.spec:
+        return _sweep_and_report(ExperimentSpec.load(args.spec), args)
 
     if args.market:
         # the migration comparison varies the migration policy against the
@@ -193,10 +213,26 @@ def main(argv=None) -> int:
                      else ["hlem-vmp-adjusted"])
                     if args.policy == "all" else [args.policy])
         migrations = (list(MIGRATION_POLICIES) if args.migration == "all"
-                      else [args.migration])
+                      else args.migration.split(","))
         until = args.until if args.until is not None else 14400.0
+        regimes = args.regimes.split(",")
+
+        if args.sweep:
+            exp = ExperimentSpec(
+                name=f"market_sweep_{args.sweep}x",
+                scenario=_market_scenario_spec(
+                    regimes[0], args.pools, args.bid_strategy, args.tick,
+                    not args.flat_volatility, horizon=until),
+                policies=tuple(_policy_spec(p, args.alpha)
+                               for p in policies),
+                migrations=tuple(MigrationSpec(m) for m in migrations),
+                regimes=tuple(regimes),
+                seeds=tuple(range(args.seed, args.seed + args.sweep)),
+                rebid=RebidSpec() if args.rebid else None)
+            return _sweep_and_report(exp, args)
+
         rows = []
-        for regime in args.regimes.split(","):
+        for regime in regimes:
             for p in policies:
                 for mig in migrations:
                     rows.append(run_market(
@@ -209,19 +245,7 @@ def main(argv=None) -> int:
         if args.json:
             print(json.dumps(rows, indent=1))
         else:
-            print(f"{'regime':11s} {'policy':18s} {'migration':15s} "
-                  f"{'intr':>5s} {'waves':>5s} {'max_intr_s':>10s} "
-                  f"{'migr':>5s} {'down_s':>7s} {'spot_cost':>9s} "
-                  f"{'save%':>6s} {'waste':>7s}")
-            for r in rows:
-                print(f"{r['regime']:11s} {r['policy']:18s} "
-                      f"{r['migration']:15s} "
-                      f"{r['interruptions']:5d} {r['waves']:5d} "
-                      f"{r['max_interruption_time']:10.1f} "
-                      f"{r['migrations']:5d} "
-                      f"{r['migration_downtime_s']:7.1f} "
-                      f"{r['realized_spot_cost']:9.3f} "
-                      f"{r['savings_pct']:6.1f} {r['wasted_cost']:7.3f}")
+            _print_market_rows(rows)
         return 0
 
     if args.scenario == "synthetic":
@@ -241,15 +265,21 @@ def main(argv=None) -> int:
                       f"[{r['wall_s']}s]")
         return 0
 
-    # trace scenario
-    tcfg = TraceConfig(seed=args.seed, n_machines=args.machines,
-                       sim_days=args.days, n_spot=args.spot)
-    tr = generate_trace(tcfg)
-    policy = make_policy(
-        args.policy if args.policy != "all" else "hlem-vmp-adjusted")
+    # trace scenario — same SimConfig wiring as every other path: one
+    # ScenarioSpec, materialized by api.build
+    spec = RunSpec(
+        scenario=ScenarioSpec(
+            workload="trace",
+            workload_params={"n_machines": args.machines,
+                             "sim_days": args.days, "n_spot": args.spot}),
+        policy=_policy_spec(
+            args.policy if args.policy != "all" else "hlem-vmp-adjusted",
+            args.alpha))
+    from ..api import build, collect_row
     t0 = time.time()
-    sim, metrics = simulate_trace(tr, policy=policy, cfg=tcfg)
-    stats = metrics.spot_stats(sim.vms)
+    sim = build(spec, args.seed)
+    metrics = sim.run(until=args.until)
+    stats = collect_row(sim, metrics, spec, args.seed)
     stats.update(machines=args.machines, n_vms=len(sim.vms),
                  wall_s=round(time.time() - t0, 1))
     print(json.dumps(stats, indent=1))

@@ -19,6 +19,7 @@
 """
 from .advisor import generate_advisor_dataset
 from .bids import (
+    BID_REGISTRY,
     OnDemandCapBid,
     PercentileBid,
     RandomizedBid,
@@ -26,15 +27,18 @@ from .bids import (
     assign_bids,
     make_bid_strategy,
     reference_history,
+    register_bid_strategy,
 )
 from .engine import MarketEngine
 from .migration import (
     MIGRATION_POLICIES,
+    MIGRATION_REGISTRY,
     MigrationConfig,
     MigrationPlan,
     MigrationPlanner,
     make_migration_planner,
     plan_reference,
+    register_migration_policy,
 )
 from .pools import MarketConfig, PoolConfig, REGIMES, make_market
 from .risk import (
@@ -47,8 +51,10 @@ from .risk import (
 from .pricing import PriceModel, cost_stats, realized_cost_stats
 from .price_process import (
     AuctionPrice,
+    PRICE_PROCESS_REGISTRY,
     SmoothedPrice,
     regime_comparison,
+    register_price_process,
     simulate_price_series,
 )
 from .correlation import (
@@ -62,6 +68,7 @@ from .trace import (
     generate_trace,
     load_trace,
     simulate_trace,
+    wire_trace,
     write_trace_csv,
 )
 

@@ -34,13 +34,20 @@ from typing import Iterable, List, Optional
 
 import numpy as np
 
+from ..core.registry import Registry
 from ..core.types import Vm
 from .pools import PoolConfig
 from .engine import _build_process
 
-STRATEGIES = ("on-demand-cap", "percentile", "randomized")
+#: string-keyed registry of bid strategies; ``make_bid_strategy`` and
+#: ``BidSpec`` resolve against it — register custom strategies with
+#: ``@register_bid_strategy("my-strategy")`` (any callable whose instances
+#: expose ``bids(n, rng) -> np.ndarray``).
+BID_REGISTRY = Registry("bid strategy")
+register_bid_strategy = BID_REGISTRY.register
 
 
+@register_bid_strategy("on-demand-cap")
 @dataclass
 class OnDemandCapBid:
     name = "on-demand-cap"
@@ -51,6 +58,7 @@ class OnDemandCapBid:
         return np.full(n, self.fraction * self.on_demand_rate)
 
 
+@register_bid_strategy("percentile")
 @dataclass
 class PercentileBid:
     name = "percentile"
@@ -65,6 +73,7 @@ class PercentileBid:
         return np.full(n, float(np.percentile(np.asarray(hist), self.pct)))
 
 
+@register_bid_strategy("randomized")
 @dataclass
 class RandomizedBid:
     name = "randomized"
@@ -124,16 +133,10 @@ def make_bid_strategy(name: str, pool_cfg: Optional[PoolConfig] = None,
     if pool_cfg is not None and "on_demand_rate" not in kwargs \
             and name in ("on-demand-cap", "randomized"):
         kwargs["on_demand_rate"] = pool_cfg.on_demand_rate
-    if name == "on-demand-cap":
-        return OnDemandCapBid(**kwargs)
-    if name == "randomized":
-        return RandomizedBid(**kwargs)
-    if name == "percentile":
-        if "history" not in kwargs:
-            assert pool_cfg is not None, "percentile needs pool_cfg or history"
-            kwargs["history"] = reference_history(pool_cfg, seed=seed)
-        return PercentileBid(**kwargs)
-    raise ValueError(f"unknown bid strategy {name!r} (want {STRATEGIES})")
+    if name == "percentile" and "history" not in kwargs:
+        assert pool_cfg is not None, "percentile needs pool_cfg or history"
+        kwargs["history"] = reference_history(pool_cfg, seed=seed)
+    return BID_REGISTRY.build(name, **kwargs)
 
 
 def assign_bids(vms: Iterable[Vm], strategy, seed: int = 0) -> List[Vm]:

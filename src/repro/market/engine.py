@@ -34,17 +34,16 @@ from typing import List, Tuple
 import numpy as np
 
 from .pools import MarketConfig, PoolConfig
-from .price_process import AuctionPrice, SmoothedPrice
+from .price_process import PRICE_PROCESS_REGISTRY
 
 
 def _build_process(cfg: PoolConfig):
-    kw = dict(cfg.process_kwargs)
-    if cfg.process == "auction":
-        return AuctionPrice(on_demand_rate=cfg.on_demand_rate,
-                            seed=cfg.seed, **kw)
-    assert cfg.process == "smoothed", f"unknown process {cfg.process!r}"
-    return SmoothedPrice(on_demand_rate=cfg.on_demand_rate, seed=cfg.seed,
-                         **kw)
+    """Resolve the pool's price process by name against
+    :data:`~repro.market.price_process.PRICE_PROCESS_REGISTRY` (fails fast
+    with the known names on a typo)."""
+    return PRICE_PROCESS_REGISTRY.build(
+        cfg.process, on_demand_rate=cfg.on_demand_rate, seed=cfg.seed,
+        **dict(cfg.process_kwargs))
 
 
 class MarketEngine:

@@ -54,10 +54,21 @@ from typing import List
 import numpy as np
 
 from . import risk
+from ..core.registry import Registry
 from .price_process import supply_curve_slope
 
 MIGRATION_POLICIES = ("none", "greedy-cheapest", "gradient-aware",
                       "risk-budgeted")
+
+#: string-keyed registry of migration policies; ``make_migration_planner``
+#: and ``MigrationSpec`` resolve against it.  The four built-ins map to
+#: :class:`MigrationPlanner` configured with the matching
+#: :class:`MigrationConfig` policy; custom entries may register any factory
+#: returning a planner-shaped object (``.config.policy``,
+#: ``.plan(pool, engine, now, inflight)``):
+#: ``@register_migration_policy("my-policy")``.
+MIGRATION_REGISTRY = Registry("migration policy")
+register_migration_policy = MIGRATION_REGISTRY.register
 
 
 @dataclass
@@ -381,7 +392,19 @@ def plan_reference(planner: MigrationPlanner, host_pool, engine, now: float,
     return plans
 
 
+def _builtin_planner(policy: str):
+    def _factory(**kwargs) -> MigrationPlanner:
+        return MigrationPlanner(MigrationConfig(policy=policy, **kwargs))
+    _factory.__name__ = f"planner_{policy}"
+    return _factory
+
+
+for _policy in MIGRATION_POLICIES:
+    MIGRATION_REGISTRY.register(_policy, _builtin_planner(_policy))
+del _policy
+
+
 def make_migration_planner(policy: str, **kwargs) -> MigrationPlanner:
     """Build a planner by policy name (including ``"none"``, which attaches
     but never plans — the bit-identity baseline)."""
-    return MigrationPlanner(MigrationConfig(policy=policy, **kwargs))
+    return MIGRATION_REGISTRY.build(policy, **kwargs)

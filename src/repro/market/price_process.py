@@ -22,6 +22,15 @@ from typing import List, Tuple
 
 import numpy as np
 
+from ..core.registry import Registry
+
+#: string-keyed registry of price processes; ``PoolConfig.process`` resolves
+#: against it, so custom processes plug into the market engine by name:
+#: ``@register_price_process("my-process")``.  Factories are called with
+#: ``on_demand_rate``, ``seed``, and the pool's ``process_kwargs``.
+PRICE_PROCESS_REGISTRY = Registry("price process")
+register_price_process = PRICE_PROCESS_REGISTRY.register
+
 
 def _supply_curve(utilization: float, on_demand_rate: float) -> float:
     """Spot clearing price as a convex function of fleet utilization:
@@ -39,6 +48,7 @@ def supply_curve_slope(utilization, on_demand_rate):
     return on_demand_rate * 2.7 * u ** 2
 
 
+@register_price_process("auction")
 @dataclass
 class AuctionPrice:
     """Pre-2017 auction regime: volatile, shock-driven.
@@ -72,6 +82,7 @@ class AuctionPrice:
         return float(min(base * shock, self.on_demand_rate))
 
 
+@register_price_process("smoothed")
 @dataclass
 class SmoothedPrice:
     """Post-2017 regime: EWMA-smoothed utilization, bounded price steps."""

@@ -154,25 +154,13 @@ def load_trace(directory: str) -> Trace:
 
 
 # -- trace-driven simulation --------------------------------------------------
-def simulate_trace(
-    tr: Trace,
-    policy: Optional[AllocationPolicy] = None,
-    cfg: TraceConfig | None = None,
-    sim_config: Optional[SimConfig] = None,
-    until: Optional[float] = None,
-    engine=None,
-    migration=None,
-    rebid=None,
-):
-    """Run the market simulator on a trace. Returns (simulator, metrics).
-    ``engine`` / ``migration`` / ``rebid`` pass through to
-    :class:`MarketSimulator` (all default off — the paper's §VII-D setup)."""
+def wire_trace(sim: MarketSimulator, tr: Trace,
+               cfg: TraceConfig | None = None) -> MarketSimulator:
+    """Populate an (empty) simulator from a trace: t=0 machines become hosts,
+    later machine events become scheduled host add/remove/update, task events
+    become submitted VMs.  Shared by :func:`simulate_trace` and the scenario
+    API's ``trace`` workload, so both wire bit-identically."""
     cfg = cfg or TraceConfig()
-    sim = MarketSimulator(
-        policy=policy or FirstFit(),
-        config=sim_config or SimConfig(record_timeline=False),
-        engine=engine, migration=migration, rebid=rebid,
-    )
     # machine id -> host id mapping (machines can be re-added)
     m2h: Dict[int, int] = {}
     for (t, mid, event, cpu, ram, bw, st) in sorted(tr.machine_events):
@@ -199,6 +187,28 @@ def simulate_trace(
             vm = make_on_demand(vid, demand, dur, waiting_timeout=3600.0,
                                 submit_time=t)
         sim.submit(vm)
+    return sim
 
+
+def simulate_trace(
+    tr: Trace,
+    policy: Optional[AllocationPolicy] = None,
+    cfg: TraceConfig | None = None,
+    sim_config: Optional[SimConfig] = None,
+    until: Optional[float] = None,
+    engine=None,
+    migration=None,
+    rebid=None,
+):
+    """Run the market simulator on a trace. Returns (simulator, metrics).
+    ``engine`` / ``migration`` / ``rebid`` pass through to
+    :class:`MarketSimulator` (all default off — the paper's §VII-D setup)."""
+    cfg = cfg or TraceConfig()
+    sim = MarketSimulator(
+        policy=policy or FirstFit(),
+        config=sim_config or SimConfig(record_timeline=False),
+        engine=engine, migration=migration, rebid=rebid,
+    )
+    wire_trace(sim, tr, cfg)
     metrics = sim.run(until=until)
     return sim, metrics

@@ -1,0 +1,188 @@
+"""Builder bit-identity: ``api.build(spec, seed)`` runs must equal
+hand-wired ``MarketSimulator`` runs exactly (metrics JSON equality) at
+fixed seed — for the synthetic scenario, the trace scenario, and the
+engine-coupled market scenario across regimes and migration policies."""
+import copy
+import json
+
+import pytest
+
+from repro.api import (
+    BidSpec,
+    MigrationSpec,
+    PolicySpec,
+    RebidSpec,
+    RunSpec,
+    ScenarioSpec,
+    build,
+    collect_row,
+    run_one,
+)
+from repro.core import (
+    MarketScenarioConfig,
+    MarketSimulator,
+    ScenarioConfig,
+    SimConfig,
+    make_policy,
+    market_scenario,
+    synthetic_scenario,
+)
+from repro.market import (
+    MarketEngine,
+    RebidOnResume,
+    TraceConfig,
+    assign_bids,
+    generate_trace,
+    make_bid_strategy,
+    make_market,
+    make_migration_planner,
+    simulate_trace,
+)
+
+UNTIL_MARKET = 2400.0
+
+
+def _row_json(sim, metrics, spec, seed) -> str:
+    return json.dumps(collect_row(sim, metrics, spec, seed), sort_keys=True)
+
+
+# -- synthetic ----------------------------------------------------------------
+def test_synthetic_bit_identity():
+    seed, until = 3, 1500.0
+    spec = RunSpec(
+        scenario=ScenarioSpec(
+            workload="synthetic",
+            sim_params={"interruption_selector": "best_fit_remaining"}),
+        policy=PolicySpec("hlem-vmp-adjusted", {"alpha": -0.5}))
+
+    # hand-wired, exactly as launch/market_sim.py did before the API layer
+    hosts, vms = synthetic_scenario(ScenarioConfig(seed=seed))
+    sim = MarketSimulator(
+        policy=make_policy("hlem-vmp-adjusted", alpha=-0.5),
+        config=SimConfig(record_timeline=False,
+                         interruption_selector="best_fit_remaining"))
+    for cap in hosts:
+        sim.add_host(cap)
+    for v in vms:
+        sim.submit(copy.deepcopy(v))
+    m = sim.run(until=until)
+
+    api_sim = build(spec, seed)
+    api_m = api_sim.run(until=until)
+    assert _row_json(api_sim, api_m, spec, seed) == \
+        _row_json(sim, m, spec, seed)
+    assert api_m.interruption_events == m.interruption_events
+
+
+# -- trace --------------------------------------------------------------------
+def test_trace_bit_identity():
+    seed = 5
+    cfg = dict(n_machines=40, sim_days=0.05, n_spot=150)
+    spec = RunSpec(
+        scenario=ScenarioSpec(workload="trace", workload_params=cfg),
+        policy=PolicySpec("hlem-vmp-adjusted", {"alpha": -0.5}))
+
+    tcfg = TraceConfig(seed=seed, **cfg)
+    sim, m = simulate_trace(generate_trace(tcfg),
+                            policy=make_policy("hlem-vmp-adjusted"),
+                            cfg=tcfg)
+
+    api_sim = build(spec, seed)
+    api_m = api_sim.run()
+    assert _row_json(api_sim, api_m, spec, seed) == \
+        _row_json(sim, m, spec, seed)
+    assert api_m.allocations == m.allocations
+    assert api_m.interruption_events == m.interruption_events
+
+
+# -- market (engine-coupled) --------------------------------------------------
+def _hand_market_row(policy_name, regime, seed, until, migration="none",
+                     rebid=False, spec=None):
+    """The exact pre-API wiring of launch/market_sim.run_market."""
+    hosts, pool_ids, vms = market_scenario(
+        MarketScenarioConfig(seed=seed, n_pools=4))
+    mc = make_market(regime, n_pools=4, seed=seed, tick_interval=60.0,
+                     from_advisor=True)
+    engine = MarketEngine(mc)
+    strat = make_bid_strategy("randomized", pool_cfg=mc.pools[0], seed=seed,
+                              lo=0.45)
+    assign_bids(vms, strat, seed=seed)
+    planner = make_migration_planner(migration)
+    rebid_hook = (RebidOnResume(on_demand_rate=mc.pools[0].on_demand_rate,
+                                seed=seed) if rebid else None)
+    sim = MarketSimulator(
+        policy=make_policy(policy_name, alpha=-0.5),
+        config=SimConfig(record_timeline=False),
+        engine=engine, migration=planner, rebid=rebid_hook)
+    for cap, pid in zip(hosts, pool_ids):
+        sim.add_host(cap, pool=pid)
+    for v in vms:
+        sim.submit(v)
+    m = sim.run(until=until)
+    return _row_json(sim, m, spec, seed)
+
+
+def _market_spec(regime, migration="none", rebid=False) -> RunSpec:
+    return RunSpec(
+        scenario=ScenarioSpec(workload="market", regime=regime,
+                              bid=BidSpec("randomized", {"lo": 0.45})),
+        policy=PolicySpec("hlem-vmp-adjusted", {"alpha": -0.5}),
+        migration=MigrationSpec(migration),
+        rebid=RebidSpec() if rebid else None)
+
+
+@pytest.mark.parametrize("regime", ["calm", "volatile", "correlated"])
+def test_market_bit_identity_all_regimes(regime):
+    seed = 0
+    spec = _market_spec(regime)
+    api_json = json.dumps(run_one(spec, seed, until=UNTIL_MARKET),
+                          sort_keys=True)
+    assert api_json == _hand_market_row("hlem-vmp-adjusted", regime, seed,
+                                        UNTIL_MARKET, spec=spec)
+
+
+@pytest.mark.parametrize("migration", ["none", "greedy-cheapest",
+                                       "gradient-aware", "risk-budgeted"])
+def test_market_bit_identity_all_migration_policies(migration):
+    seed = 1
+    spec = _market_spec("volatile", migration=migration)
+    api_json = json.dumps(run_one(spec, seed, until=UNTIL_MARKET),
+                          sort_keys=True)
+    assert api_json == _hand_market_row(
+        "hlem-vmp-adjusted", "volatile", seed, UNTIL_MARKET,
+        migration=migration, spec=spec)
+
+
+def test_market_bit_identity_with_rebid():
+    seed = 2
+    spec = _market_spec("volatile", migration="gradient-aware", rebid=True)
+    api_json = json.dumps(run_one(spec, seed, until=UNTIL_MARKET),
+                          sort_keys=True)
+    assert api_json == _hand_market_row(
+        "hlem-vmp-adjusted", "volatile", seed, UNTIL_MARKET,
+        migration="gradient-aware", rebid=True, spec=spec)
+
+
+# -- fresh state per build ----------------------------------------------------
+def test_build_materializes_fresh_components_per_run():
+    spec = _market_spec("volatile", migration="gradient-aware")
+    sim1 = build(spec, seed=0)
+    sim2 = build(spec, seed=0)
+    assert sim1.engine is not sim2.engine
+    assert sim1.migration is not sim2.migration
+    assert sim1.policy is not sim2.policy
+    # running one must not perturb the other: same decisions either way
+    m1 = sim1.run(until=1200.0)
+    sim3 = build(spec, seed=0)
+    m3 = sim3.run(until=1200.0)
+    assert json.dumps(collect_row(sim1, m1, spec, 0), sort_keys=True) == \
+        json.dumps(collect_row(sim3, m3, spec, 0), sort_keys=True)
+    assert m1.interruption_events == m3.interruption_events
+
+
+def test_run_one_rows_are_wall_clock_free():
+    spec = RunSpec(scenario=ScenarioSpec(workload="synthetic"),
+                   policy=PolicySpec("first-fit"))
+    row = run_one(spec, seed=0, until=400.0)
+    assert "wall_s" not in row
+    assert row == run_one(spec, seed=0, until=400.0)

@@ -1,0 +1,228 @@
+"""Spec tree: JSON round-trip identity, construction-time validation, and
+registry plug-in behavior."""
+import json
+
+import pytest
+
+from repro.api import (
+    BID_REGISTRY,
+    BidSpec,
+    ExperimentSpec,
+    MIGRATION_REGISTRY,
+    MigrationSpec,
+    POLICY_REGISTRY,
+    PolicySpec,
+    PRICE_PROCESS_REGISTRY,
+    RebidSpec,
+    RunSpec,
+    ScenarioSpec,
+    WORKLOAD_REGISTRY,
+    register_policy,
+    register_workload,
+)
+from repro.core import FirstFit, make_policy
+
+
+def _market_scenario() -> ScenarioSpec:
+    return ScenarioSpec(workload="market", regime="volatile", n_pools=3,
+                        tick_interval=30.0, from_advisor=False,
+                        bid=BidSpec("randomized", {"lo": 0.45}),
+                        horizon=1800.0)
+
+
+SPECS = [
+    BidSpec(),
+    BidSpec("percentile", {"pct": 85.0}),
+    PolicySpec("first-fit"),
+    PolicySpec("hlem-vmp-adjusted", {"alpha": -0.4, "rc": 0.9}),
+    MigrationSpec(),
+    MigrationSpec("gradient-aware", {"downtime": 20.0, "hysteresis": 0.1}),
+    RebidSpec(),
+    RebidSpec(bump_lo=1.1, bump_hi=1.5),
+    ScenarioSpec(workload="synthetic"),
+    ScenarioSpec(workload="trace",
+                 workload_params={"n_machines": 30, "sim_days": 0.05}),
+    _market_scenario(),
+    RunSpec(scenario=_market_scenario(),
+            policy=PolicySpec("hlem-vmp-adjusted", {"alpha": -0.5}),
+            migration=MigrationSpec("risk-budgeted"),
+            rebid=RebidSpec()),
+    RunSpec(scenario=ScenarioSpec(workload="synthetic",
+                                  sim_params={"interruption_selector":
+                                              "max_progress"}),
+            policy=PolicySpec("best-fit")),
+    ExperimentSpec(
+        name="grid",
+        scenario=_market_scenario(),
+        policies=(PolicySpec("first-fit"),
+                  PolicySpec("hlem-vmp-adjusted", {"alpha": -0.5})),
+        migrations=(MigrationSpec(), MigrationSpec("gradient-aware")),
+        regimes=("calm", "volatile"),
+        seeds=(0, 1, 2),
+        rebid=RebidSpec()),
+    ExperimentSpec(scenario=ScenarioSpec(workload="synthetic"),
+                   policies=(PolicySpec("first-fit"),),
+                   seeds=(7,)),
+]
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: type(s).__name__)
+def test_dict_round_trip_identity(spec):
+    d = spec.to_dict()
+    clone = type(spec).from_dict(d)
+    assert clone == spec
+    # the dict itself must be JSON-pure (no spec objects smuggled through)
+    assert json.loads(json.dumps(d)) == d
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: type(s).__name__)
+def test_json_round_trip_identity(spec):
+    clone = type(spec).from_json(spec.to_json())
+    assert clone == spec
+    # serialization is canonical: round-tripping the JSON is a fixpoint
+    assert clone.to_json() == spec.to_json()
+
+
+def test_experiment_save_load(tmp_path):
+    exp = SPECS[-2]
+    path = tmp_path / "exp.json"
+    exp.save(str(path))
+    assert ExperimentSpec.load(str(path)) == exp
+
+
+def test_experiment_cells_grid_order():
+    exp = SPECS[-2]
+    cells = exp.cells()
+    assert len(cells) == 2 * 2 * 2  # regimes × policies × migrations
+    assert [c.scenario.regime for c in cells[:4]] == ["calm"] * 4
+    assert [c.policy.name for c in cells[:2]] == ["first-fit"] * 2
+    assert [c.migration.policy for c in cells[:2]] == ["none",
+                                                       "gradient-aware"]
+    runs = list(exp.runs())
+    assert len(runs) == len(cells) * len(exp.seeds)
+
+
+# -- validation: fail fast at construction ----------------------------------
+@pytest.mark.parametrize("factory, match", [
+    (lambda: ScenarioSpec(workload="nope"), "unknown workload"),
+    (lambda: ScenarioSpec(workload="synthetic", regime="wild"),
+     "unknown regime"),
+    (lambda: ScenarioSpec(workload="market"), "requires a market regime"),
+    (lambda: ScenarioSpec(workload="synthetic", regime="calm", n_pools=0),
+     "n_pools"),
+    (lambda: ScenarioSpec(workload="synthetic", regime="calm",
+                          tick_interval=0.0), "tick_interval"),
+    (lambda: ScenarioSpec(workload="synthetic", horizon=-5.0), "horizon"),
+    (lambda: ScenarioSpec(workload="synthetic", bid=BidSpec()),
+     "needs a market engine"),
+    (lambda: ScenarioSpec(workload="trace", regime="calm", bid=BidSpec()),
+     "does not support bid"),
+    (lambda: ScenarioSpec(workload="synthetic",
+                          workload_params={"seed": 1}), "supplied by the"),
+    (lambda: ScenarioSpec(workload="market", regime="calm",
+                          workload_params={"n_pools": 2}),
+     "supplied by the"),
+    (lambda: ScenarioSpec(workload="synthetic",
+                          workload_params={"typo": 1}), "unknown workload"),
+    (lambda: ScenarioSpec(workload="synthetic",
+                          sim_params={"typo": 1}), "unknown sim"),
+    (lambda: PolicySpec("nope"), "unknown allocation policy"),
+    (lambda: PolicySpec("first-fit", {"alpha": 1.0}),
+     "unknown allocation policy 'first-fit' parameter"),
+    (lambda: MigrationSpec("nope"), "unknown migration policy"),
+    (lambda: MigrationSpec("gradient-aware", {"typo": 1}),
+     "unknown migration policy"),
+    (lambda: BidSpec("nope"), "unknown bid strategy"),
+    (lambda: BidSpec("randomized", {"typo": 1}), "unknown bid strategy"),
+    (lambda: RebidSpec(bump_lo=2.0, bump_hi=1.0), "bump"),
+    (lambda: RunSpec(scenario=ScenarioSpec(workload="synthetic"),
+                     policy=PolicySpec("first-fit"),
+                     migration=MigrationSpec("gradient-aware")),
+     "requires a market engine"),
+    (lambda: RunSpec(scenario=ScenarioSpec(workload="synthetic"),
+                     policy=PolicySpec("first-fit"), rebid=RebidSpec()),
+     "re-bidding requires"),
+    (lambda: RunSpec(scenario=_market_scenario(),
+                     policy=PolicySpec("first-fit"), rebid=5),
+     "rebid must be"),
+    (lambda: RunSpec(scenario=_market_scenario(), policy="first-fit"),
+     "policy must be"),
+    (lambda: ExperimentSpec(scenario=ScenarioSpec(workload="synthetic"),
+                            policies=("first-fit",), seeds=(0,)),
+     "policies must all be"),
+    (lambda: ExperimentSpec(scenario=ScenarioSpec(workload="synthetic"),
+                            policies=(PolicySpec("first-fit"),),
+                            migrations=("none",), seeds=(0,)),
+     "migrations must all be"),
+    (lambda: ExperimentSpec(scenario=ScenarioSpec(workload="synthetic"),
+                            policies=(), seeds=(0,)), "at least one policy"),
+    (lambda: ExperimentSpec(scenario=ScenarioSpec(workload="synthetic"),
+                            policies=(PolicySpec("first-fit"),), seeds=()),
+     "at least one seed"),
+    (lambda: ExperimentSpec(scenario=ScenarioSpec(workload="synthetic"),
+                            policies=(PolicySpec("first-fit"),),
+                            seeds=(0, 0)), "duplicate seeds"),
+    (lambda: ExperimentSpec(scenario=ScenarioSpec(workload="synthetic"),
+                            policies=(PolicySpec("first-fit"),),
+                            seeds=(0,), regimes=("wild",)),
+     "unknown regime"),
+    # a bad grid *cell* fails at ExperimentSpec construction, not mid-sweep
+    (lambda: ExperimentSpec(scenario=ScenarioSpec(workload="synthetic"),
+                            policies=(PolicySpec("first-fit"),),
+                            migrations=(MigrationSpec("gradient-aware"),),
+                            seeds=(0,)), "requires a market engine"),
+])
+def test_validation_fails_fast(factory, match):
+    with pytest.raises(ValueError, match=match):
+        factory()
+
+
+# -- registries --------------------------------------------------------------
+@pytest.mark.parametrize("registry, known", [
+    (POLICY_REGISTRY, "hlem-vmp-adjusted"),
+    (BID_REGISTRY, "randomized"),
+    (MIGRATION_REGISTRY, "gradient-aware"),
+    (PRICE_PROCESS_REGISTRY, "smoothed"),
+    (WORKLOAD_REGISTRY, "synthetic"),
+])
+def test_registry_unknown_name_lists_known(registry, known):
+    assert known in registry
+    with pytest.raises(ValueError) as exc:
+        registry.get("definitely-not-registered")
+    msg = str(exc.value)
+    assert "definitely-not-registered" in msg and known in msg
+    assert registry.kind in msg
+
+
+def test_register_custom_policy_plugs_into_specs():
+    @register_policy("test-first-fit-clone")
+    class FirstFitClone(FirstFit):
+        name = "test-first-fit-clone"
+
+    try:
+        assert isinstance(make_policy("test-first-fit-clone"), FirstFitClone)
+        spec = PolicySpec("test-first-fit-clone")
+        assert PolicySpec.from_json(spec.to_json()) == spec
+        with pytest.raises(ValueError, match="already registered"):
+            register_policy("test-first-fit-clone")(FirstFitClone)
+    finally:
+        POLICY_REGISTRY.entries.pop("test-first-fit-clone")
+
+
+def test_register_custom_workload_plugs_into_specs():
+    from repro.core import resources, make_on_demand
+
+    @register_workload("test-tiny")
+    def _populate(sim, scenario, seed):
+        sim.add_host(resources(8, 16_384, 5_000, 200_000))
+        sim.submit(make_on_demand(0, resources(1, 1024, 100, 10_000), 50.0))
+
+    try:
+        from repro.api import build
+        spec = RunSpec(scenario=ScenarioSpec(workload="test-tiny"),
+                       policy=PolicySpec("first-fit"))
+        sim = build(spec, seed=0)
+        m = sim.run()
+        assert m.allocations == 1
+    finally:
+        WORKLOAD_REGISTRY.entries.pop("test-tiny")

@@ -1,0 +1,137 @@
+"""Sweep runner: deterministic reports, serial == multiprocessing, CI
+aggregation math."""
+import json
+import math
+
+import pytest
+
+from repro.api import (
+    BidSpec,
+    ExperimentSpec,
+    MigrationSpec,
+    PolicySpec,
+    RunSpec,
+    ScenarioSpec,
+    aggregate_rows,
+    mean_ci95,
+    run_experiment,
+    run_one,
+    write_report,
+)
+from repro.api.sweep import format_report, t_crit95
+
+UNTIL = 1200.0
+
+
+def _mini_experiment() -> ExperimentSpec:
+    """3 seeds × 2 policies over the synthetic scenario (fast, no engine)."""
+    return ExperimentSpec(
+        name="mini",
+        scenario=ScenarioSpec(workload="synthetic", horizon=UNTIL),
+        policies=(PolicySpec("first-fit"),
+                  PolicySpec("hlem-vmp-adjusted", {"alpha": -0.5})),
+        seeds=(0, 1, 2))
+
+
+def test_mini_sweep_deterministic_report():
+    exp = _mini_experiment()
+    r1 = run_experiment(exp, processes=0)
+    r2 = run_experiment(exp, processes=0)
+    assert json.dumps(r1, sort_keys=True) == json.dumps(r2, sort_keys=True)
+    assert r1["n_runs"] == 6
+    assert [c["policy"] for c in r1["cells"]] == ["first-fit",
+                                                  "hlem-vmp-adjusted"]
+    for cell in r1["cells"]:
+        assert cell["n_seeds"] == 3
+        assert [row["seed"] for row in cell["rows"]] == [0, 1, 2]
+        m = cell["metrics"]["interruptions"]
+        assert m["n"] == 3
+        assert m["min"] <= m["mean"] <= m["max"]
+        # identifier keys never aggregate
+        assert "seed" not in cell["metrics"]
+        assert "policy" not in cell["metrics"]
+
+
+def test_sweep_parallel_equals_serial():
+    exp = _mini_experiment()
+    serial = run_experiment(exp, processes=0)
+    parallel = run_experiment(exp, processes=2)
+    assert json.dumps(serial, sort_keys=True) == \
+        json.dumps(parallel, sort_keys=True)
+
+
+def test_sweep_rows_match_run_one():
+    exp = _mini_experiment()
+    report = run_experiment(exp, processes=0)
+    cell = report["cells"][1]
+    spec = RunSpec(scenario=exp.scenario, policy=exp.policies[1])
+    assert cell["rows"][2] == run_one(spec, seed=2, until=UNTIL)
+
+
+def test_sweep_report_json_artifact(tmp_path):
+    exp = _mini_experiment()
+    report = run_experiment(exp, processes=0)
+    path = write_report(report, str(tmp_path / "report.json"))
+    with open(path) as f:
+        loaded = json.load(f)
+    assert loaded == json.loads(json.dumps(report))
+    # the embedded experiment spec round-trips from the artifact
+    assert ExperimentSpec.from_dict(loaded["experiment"]) == exp
+    assert "first-fit" in format_report(report)
+
+
+def test_market_sweep_cells_fan_regimes_and_migrations():
+    exp = ExperimentSpec(
+        name="market-mini",
+        scenario=ScenarioSpec(workload="market", regime="volatile",
+                              bid=BidSpec("randomized", {"lo": 0.45})),
+        policies=(PolicySpec("hlem-vmp-adjusted", {"alpha": -0.5}),),
+        migrations=(MigrationSpec(), MigrationSpec("gradient-aware")),
+        regimes=("calm", "volatile"),
+        seeds=(0, 1))
+    report = run_experiment(exp, until=900.0)
+    assert [(c["regime"], c["migration"]) for c in report["cells"]] == [
+        ("calm", "none"), ("calm", "gradient-aware"),
+        ("volatile", "none"), ("volatile", "gradient-aware")]
+    for cell in report["cells"]:
+        assert {row["seed"] for row in cell["rows"]} == {0, 1}
+        assert "realized_spot_cost" in cell["metrics"]
+
+
+# -- aggregation math ---------------------------------------------------------
+def test_mean_ci95_known_values():
+    stats = mean_ci95([1.0, 2.0, 3.0])
+    assert stats["mean"] == 2.0
+    assert stats["n"] == 3
+    # sd = 1, se = 1/sqrt(3), t(df=2) = 4.303
+    assert stats["ci95"] == pytest.approx(4.303 / math.sqrt(3), abs=1e-6)
+    assert stats["min"] == 1.0 and stats["max"] == 3.0
+
+
+def test_mean_ci95_single_sample_has_zero_ci():
+    stats = mean_ci95([5.0])
+    assert stats == {"mean": 5.0, "ci95": 0.0, "min": 5.0, "max": 5.0,
+                     "n": 1}
+
+
+def test_t_crit_table():
+    assert t_crit95(1) == pytest.approx(12.706)
+    assert t_crit95(19) == pytest.approx(2.093)   # the >=20-seed sweeps
+    # beyond the table: continuous at the boundary, no drop to 1.96
+    assert t_crit95(31) == pytest.approx(t_crit95(30), abs=0.01)
+    assert t_crit95(40) == pytest.approx(2.021, abs=0.005)
+    assert t_crit95(10_000) == pytest.approx(1.96, abs=0.001)
+    # monotone decreasing toward the normal limit
+    assert t_crit95(30) > t_crit95(31) > t_crit95(60) > 1.96
+
+
+def test_aggregate_rows_skips_identifiers_and_non_numeric():
+    rows = [
+        {"policy": "p", "regime": "calm", "migration": "none", "seed": 0,
+         "interruptions": 4, "note": "x", "flag": True},
+        {"policy": "p", "regime": "calm", "migration": "none", "seed": 1,
+         "interruptions": 6, "note": "y", "flag": False},
+    ]
+    agg = aggregate_rows(rows)
+    assert set(agg) == {"interruptions"}
+    assert agg["interruptions"]["mean"] == 5.0
