@@ -1,0 +1,128 @@
+"""Array-native market-state benchmarks (PR 5 tentpole).
+
+Two row pairs, each measured against the retained legacy path and
+cross-checked for identical results:
+
+* ``market/price_tick_batch_p<N>`` — one fused PRICE_TICK (family step over
+  the packed MarketState + history-segment close) at N pools, vs the
+  per-pool scalar oracle walk (``market/price_tick_scalar_p<N>``, the pr4
+  tick structure — the row the CI gate normalizes against).  Both engines
+  consume identical shock streams; the resulting price histories are
+  asserted bit-identical.
+* ``market/realized_billing_b<B>`` — batched
+  :meth:`MarketEngine.price_integrals` billing B random bid-capped spans in
+  one call, vs the per-span historical ``bisect`` walk
+  (``market/realized_billing_pyref_b<B>``,
+  :func:`repro.market.engine.price_integral_ref`), values cross-checked.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.market import MarketConfig, MarketEngine, PoolConfig
+from repro.market.engine import price_integral_ref
+
+from .common import emit, timeit
+
+
+class _StubHostPool:
+    """Fixed utilization signal: the rows isolate the price-layer cost from
+    host accounting (which trace_scale / engine_e2e already cover)."""
+
+    def __init__(self, util: np.ndarray):
+        self._util = util
+
+    def pool_cpu_utilization(self) -> np.ndarray:
+        return self._util
+
+
+def _make_engine(n_pools: int, vectorized: bool, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    pools = [PoolConfig(f"p{i}", process="auction", seed=seed + i,
+                        process_kwargs={
+                            "shock_sigma": float(rng.uniform(0.2, 0.5)),
+                            "shock_rho": 0.75})
+             for i in range(n_pools)]
+    return MarketEngine(MarketConfig(pools, tick_interval=60.0, seed=seed,
+                                     vectorized=vectorized))
+
+
+def _run_ticks(eng, stub, n_ticks: int, t0: float = 0.0) -> float:
+    t = t0
+    for _ in range(n_ticks):
+        eng.tick(stub, t)
+        t += eng.tick_interval
+    return t
+
+
+def bench_price_tick(n_pools: int, n_ticks: int):
+    rng = np.random.default_rng(1)
+    util = rng.uniform(0.2, 0.9, n_pools)
+    stub = _StubHostPool(util)
+
+    # identical shocks + kernels: the two paths must agree bit for bit
+    vec, sca = _make_engine(n_pools, True), _make_engine(n_pools, False)
+    _run_ticks(vec, stub, 32)
+    _run_ticks(sca, stub, 32)
+    assert np.array_equal(vec.price_history(), sca.price_history()), \
+        "vectorized tick diverged from the scalar oracle"
+
+    state = {"t": 3600.0 * 64}
+
+    def tick_n(eng):
+        state["t"] = _run_ticks(eng, stub, n_ticks, state["t"])
+
+    t_vec = timeit(lambda: tick_n(vec), n=9) / n_ticks
+    t_sca = timeit(lambda: tick_n(sca), n=5) / n_ticks
+    rows = [
+        emit(f"market/price_tick_batch_p{n_pools}", t_vec,
+             f"ticks={n_ticks};speedup_vs_scalar={t_sca / t_vec:.1f}x"),
+        emit(f"market/price_tick_scalar_p{n_pools}", t_sca,
+             f"ticks={n_ticks}"),
+    ]
+    return rows
+
+
+def bench_realized_billing(n_pools: int, n_queries: int, n_ticks: int = 240):
+    rng = np.random.default_rng(2)
+    eng = _make_engine(n_pools, True, seed=3)
+    stub = _StubHostPool(rng.uniform(0.2, 0.9, n_pools))
+    _run_ticks(eng, stub, n_ticks)
+    t_end = n_ticks * eng.tick_interval
+    pids = rng.integers(0, n_pools, n_queries)
+    t0s = rng.uniform(0.0, t_end, n_queries)
+    t1s = t0s + rng.uniform(30.0, t_end / 3, n_queries)
+    caps = rng.uniform(0.2, 1.0, n_queries)
+
+    batched = eng.price_integrals(pids, t0s, t1s, caps)
+    sample = rng.integers(0, n_queries, 200)
+    for k in sample:
+        ref = price_integral_ref(eng, int(pids[k]), float(t0s[k]),
+                                 float(t1s[k]), float(caps[k]))
+        assert abs(batched[k] - ref) <= 1e-9 * max(1.0, abs(ref)), \
+            "batched billing diverged from the bisect reference"
+
+    t_bat = timeit(lambda: eng.price_integrals(pids, t0s, t1s, caps), n=9)
+
+    def pyref():
+        return [price_integral_ref(eng, int(pids[k]), float(t0s[k]),
+                                   float(t1s[k]), float(caps[k]))
+                for k in range(n_queries)]
+
+    t_ref = timeit(pyref, n=3)
+    rows = [
+        emit(f"market/realized_billing_b{n_queries}", t_bat,
+             f"ticks={n_ticks};pools={n_pools};"
+             f"speedup_vs_pyref={t_ref / t_bat:.1f}x"),
+        emit(f"market/realized_billing_pyref_b{n_queries}", t_ref, ""),
+    ]
+    return rows
+
+
+def run(quick: bool = True):
+    rows = []
+    for n_pools in ([64] if quick else [64, 256]):
+        rows.extend(bench_price_tick(n_pools, n_ticks=64))
+    rows.extend(bench_realized_billing(
+        n_pools=64, n_queries=5_000 if quick else 20_000))
+    return rows

@@ -26,6 +26,7 @@ MODULES = [
     "fig16_correlation",        # Fig. 16: advisor association analysis
     "allocation_throughput",    # §VII-D1: scoring throughput (np/jax/pallas)
     "market_engine",            # PR 2: wave selection + engine end-to-end
+    "price_layer",              # PR 5: fused price ticks + batched billing
     "migration",                # PR 3: migration-planner throughput
     "victim_selection",         # beyond-paper: §IX victim selectors
     "cost_analysis",            # beyond-paper: $ cost / waste per policy

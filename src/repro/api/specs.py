@@ -28,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 import inspect
 import json
+from collections import abc
 from dataclasses import dataclass, field
 from typing import Any, Dict, Mapping, Optional, Tuple
 
@@ -350,9 +351,16 @@ class RunSpec(_SpecBase):
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)
 class ExperimentSpec(_SpecBase):
-    """A scenario × (regime × policy × migration) grid swept over seeds —
-    the sweep runner's input, and the one file that describes a whole
-    comparison experiment."""
+    """A scenario × (regime × policy × migration × bid × workload-param)
+    grid swept over seeds — the sweep runner's input, and the one file that
+    describes a whole comparison experiment.
+
+    ``bids`` and ``workload_grid`` are optional extra grid axes: ``bids``
+    fans the scenario over bid strategies (engine scenarios only), and
+    ``workload_grid`` fans named workload parameters over value ladders
+    (e.g. ``{"fleet_scale": [1.0, 1.7, 3.4]}`` for a scaling study).  Both
+    default to inert (one cell per regime × policy × migration, exactly the
+    PR 4 grid)."""
 
     scenario: ScenarioSpec
     policies: Tuple[PolicySpec, ...]
@@ -360,6 +368,11 @@ class ExperimentSpec(_SpecBase):
     migrations: Tuple[MigrationSpec, ...] = (MigrationSpec(),)
     #: fan the scenario over these regimes (None = use ``scenario.regime``)
     regimes: Optional[Tuple[str, ...]] = None
+    #: fan the scenario over these bid strategies (None = ``scenario.bid``)
+    bids: Optional[Tuple[BidSpec, ...]] = None
+    #: fan named workload parameters over value ladders; the cross product
+    #: of all listed values joins the grid
+    workload_grid: Mapping[str, Tuple] = field(default_factory=dict)
     rebid: Optional[RebidSpec] = None
     name: str = "experiment"
 
@@ -385,6 +398,33 @@ class ExperimentSpec(_SpecBase):
             raise _spec_error("rebid must be a RebidSpec or None")
         if self.regimes is not None:
             _set(self, "regimes", tuple(self.regimes))
+        if self.bids is not None:
+            _set(self, "bids", tuple(
+                BidSpec.from_dict(b) if isinstance(b, Mapping) else b
+                for b in self.bids))
+            if not self.bids:
+                raise _spec_error("bids cannot be empty — use None to "
+                                  "inherit scenario.bid")
+            if not all(isinstance(b, BidSpec) for b in self.bids):
+                raise _spec_error("bids must all be BidSpec")
+        grid = {}
+        for key, vals in dict(self.workload_grid).items():
+            if isinstance(vals, (str, bytes)) or not isinstance(
+                    vals, abc.Sequence):
+                raise _spec_error(
+                    f"workload_grid[{key!r}] must be a list/tuple of values "
+                    f"(got {vals!r})")
+            grid[str(key)] = tuple(vals)
+        _set(self, "workload_grid", grid)
+        for key, vals in self.workload_grid.items():
+            if not vals:
+                raise _spec_error(
+                    f"workload_grid[{key!r}] cannot be empty")
+            if key in self.scenario.workload_params:
+                raise _spec_error(
+                    f"workload_grid key {key!r} also appears in "
+                    f"scenario.workload_params — list it in exactly one "
+                    f"place")
         if not self.policies:
             raise _spec_error("an experiment needs at least one policy")
         if not self.migrations:
@@ -405,25 +445,48 @@ class ExperimentSpec(_SpecBase):
                     raise _spec_error(f"unknown regime {r!r} in regimes "
                                       f"(known: {', '.join(REGIMES)})")
         # every grid cell is validated eagerly: a bad combination (e.g.
-        # migration over a regime-less scenario) fails at construction,
+        # migration over a regime-less scenario, a bid axis without an
+        # engine, an unknown workload_grid key) fails at construction,
         # not in a worker process mid-sweep
         self.cells()
 
     # -- grid ---------------------------------------------------------------
+    def workload_combos(self) -> Tuple[Mapping[str, Any], ...]:
+        """The cross product of ``workload_grid`` value ladders as parameter
+        dicts, in axis-declaration order (``({},)`` when the grid is
+        inert)."""
+        if not self.workload_grid:
+            return ({},)
+        keys = list(self.workload_grid)
+        combos: list = [{}]
+        for key in keys:
+            combos = [{**c, key: v} for c in combos
+                      for v in self.workload_grid[key]]
+        return tuple(combos)
+
     def cells(self) -> Tuple[RunSpec, ...]:
-        """The (regime × policy × migration) grid as RunSpecs, in report
-        order."""
+        """The (regime × policy × migration × bid × workload-combo) grid as
+        RunSpecs, in report order (new axes nest innermost, so the PR 4
+        ordering is preserved when they are inert)."""
         regimes = (self.regimes if self.regimes is not None
                    else (self.scenario.regime,))
+        bid_axis = self.bids if self.bids is not None else (None,)
+        combos = self.workload_combos()
         out = []
         for regime in regimes:
-            scenario = (self.scenario if regime == self.scenario.regime
-                        else self.scenario.replace(regime=regime))
+            base = (self.scenario if regime == self.scenario.regime
+                    else self.scenario.replace(regime=regime))
             for policy in self.policies:
                 for migration in self.migrations:
-                    out.append(RunSpec(scenario=scenario, policy=policy,
-                                       migration=migration,
-                                       rebid=self.rebid))
+                    for bid in bid_axis:
+                        s_bid = base if bid is None else base.replace(bid=bid)
+                        for combo in combos:
+                            scenario = (s_bid if not combo else s_bid.replace(
+                                workload_params={**s_bid.workload_params,
+                                                 **combo}))
+                            out.append(RunSpec(
+                                scenario=scenario, policy=policy,
+                                migration=migration, rebid=self.rebid))
         return tuple(out)
 
     def runs(self):
@@ -441,6 +504,10 @@ class ExperimentSpec(_SpecBase):
             "migrations": [m.to_dict() for m in self.migrations],
             "regimes": list(self.regimes) if self.regimes is not None
             else None,
+            "bids": ([b.to_dict() for b in self.bids]
+                     if self.bids is not None else None),
+            "workload_grid": {k: list(v)
+                              for k, v in self.workload_grid.items()},
             "seeds": list(self.seeds),
             "rebid": self.rebid.to_dict() if self.rebid is not None else None,
         }
@@ -449,6 +516,7 @@ class ExperimentSpec(_SpecBase):
     def from_dict(cls, d: Mapping[str, Any]) -> "ExperimentSpec":
         rebid = d.get("rebid")
         regimes = d.get("regimes")
+        bids = d.get("bids")
         return cls(
             name=d.get("name", "experiment"),
             scenario=ScenarioSpec.from_dict(d["scenario"]),
@@ -456,6 +524,9 @@ class ExperimentSpec(_SpecBase):
             migrations=tuple(MigrationSpec.from_dict(m)
                              for m in d.get("migrations", [{}])),
             regimes=tuple(regimes) if regimes is not None else None,
+            bids=(tuple(BidSpec.from_dict(b) for b in bids)
+                  if bids is not None else None),
+            workload_grid=d.get("workload_grid", {}),
             seeds=tuple(int(s) for s in d["seeds"]),
             rebid=RebidSpec.from_dict(rebid) if rebid is not None else None,
         )

@@ -24,6 +24,7 @@ import json
 import math
 import multiprocessing
 import os
+import sys
 from typing import Dict, List, Optional
 
 from .build import resolve_horizon, run_one
@@ -84,21 +85,129 @@ def _run_job(job) -> dict:
     return run_one(RunSpec.from_dict(spec_dict), seed, until=until)
 
 
+def _report_cell(exp: ExperimentSpec, cell: RunSpec,
+                 cell_rows: List[dict]) -> dict:
+    out = {
+        "regime": cell.scenario.regime,
+        "policy": cell.policy.name,
+        "migration": cell.migration.policy,
+        "n_seeds": len(exp.seeds),
+        "metrics": aggregate_rows(cell_rows),
+        "rows": cell_rows,
+    }
+    # extra grid axes identify their cells; inert axes add no keys, so
+    # PR 4-era reports stay byte-identical
+    if exp.bids is not None:
+        # full spec, not just the strategy name — two BidSpecs may share a
+        # strategy and differ only in params
+        out["bid"] = (cell.scenario.bid.to_dict()
+                      if cell.scenario.bid is not None else None)
+    if exp.workload_grid:
+        out["workload_params"] = {
+            k: cell.scenario.workload_params[k] for k in exp.workload_grid}
+    return out
+
+
+def _assemble_report(exp: ExperimentSpec, horizon, n_runs: int,
+                     report_cells: List[dict]) -> dict:
+    return {
+        "name": exp.name,
+        "experiment": exp.to_dict(),
+        "horizon": horizon,
+        "n_runs": n_runs,
+        "cells": report_cells,
+    }
+
+
+def _load_resume_cells(path: str, exp: ExperimentSpec,
+                       horizon) -> List[dict]:
+    """Completed report cells from a partial (or final) report at ``path``,
+    when it matches this experiment + horizon; ``[]`` otherwise.  Partial
+    files only ever contain whole cells, appended in grid order, so the
+    loaded list is always a reusable prefix of the grid."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        return []
+    same = (doc.get("experiment") == json.loads(json.dumps(exp.to_dict()))
+            and doc.get("horizon") == horizon)
+    return list(doc.get("cells", [])) if same else []
+
+
+def _atomic_write(doc: dict, path: str) -> str:
+    """Write ``doc`` as JSON via a temp file + ``os.replace``, so readers
+    (and a crash-resumed rerun) never see a half-written report."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
 def run_experiment(exp: ExperimentSpec, processes: Optional[int] = None,
                    until: Optional[float] = None,
-                   progress: bool = False) -> dict:
+                   progress: bool = False,
+                   report_path: Optional[str] = None,
+                   resume: bool = True) -> dict:
     """Run the full grid × seed fan-out and aggregate per cell.
 
     ``processes``: worker count for the multiprocessing pool; ``0`` or ``1``
     runs serially in-process (reports are identical either way — rows are
     re-assembled in grid order).  ``until`` overrides every run's horizon
-    (e.g. for smoke sweeps)."""
+    (e.g. for smoke sweeps).
+
+    ``report_path``: incremental report writing — the report JSON is
+    re-written (atomic temp-file + rename) after **every completed cell**,
+    with ``"partial": true`` until the grid is done, so long 100+-seed
+    sweeps are inspectable mid-run.  With ``resume=True`` (default) an
+    existing report at that path whose experiment + horizon match is
+    treated as a crash checkpoint: its completed cells are reused verbatim
+    and only the remaining cells run — the finished report is byte-identical
+    to an uninterrupted run."""
     cells = exp.cells()
-    # flat job list in grid-major order (cell 0's seeds, cell 1's seeds, …)
+    n_seeds = len(exp.seeds)
+    horizon = until if until is not None else resolve_horizon(exp.scenario)
+    report_cells: List[dict] = []
+    if report_path and resume:
+        report_cells = _load_resume_cells(report_path, exp, horizon)[
+            : len(cells)]
+    n_done = len(report_cells)
+    if n_done:
+        # always announce reuse (stderr, so --json stdout stays pure):
+        # resumed cells reflect the code that produced the checkpoint —
+        # pass resume=False (CLI: --fresh) after changing the simulator
+        print(f"# sweep resume: {n_done}/{len(cells)} cells reused from "
+              f"{report_path}", file=sys.stderr, flush=True)
+    n_runs = len(cells) * n_seeds
+    # flat job list for the remaining cells, in grid-major order
+    # (cell k's seeds, cell k+1's seeds, …)
     jobs = [(cell.to_dict(), seed, until)
-            for cell in cells for seed in exp.seeds]
+            for cell in cells[n_done:] for seed in exp.seeds]
+
+    pending: List[dict] = []
+    done_jobs = n_done * n_seeds
+
+    def _collect(row: dict) -> None:
+        nonlocal done_jobs
+        pending.append(row)
+        done_jobs += 1
+        if progress:
+            print(f"# sweep {done_jobs}/{n_runs}", flush=True)
+        if len(pending) == n_seeds:       # one whole cell completed
+            report_cells.append(
+                _report_cell(exp, cells[len(report_cells)], pending[:]))
+            pending.clear()
+            if report_path and len(report_cells) < len(cells):
+                partial = _assemble_report(exp, horizon, n_runs,
+                                           report_cells)
+                partial["partial"] = True
+                _atomic_write(partial, report_path)
+
     if processes is None:
-        processes = min(os.cpu_count() or 1, len(jobs))
+        processes = min(os.cpu_count() or 1, max(len(jobs), 1))
     if processes > 1 and len(jobs) > 1:
         # prefer fork so registry entries added at runtime (e.g. a custom
         # policy registered in the caller's __main__) survive into workers;
@@ -109,47 +218,22 @@ def run_experiment(exp: ExperimentSpec, processes: Optional[int] = None,
         except ValueError:  # fork unavailable (e.g. Windows)
             ctx = multiprocessing.get_context()
         with ctx.Pool(processes) as pool:
-            rows = []
             # imap preserves job order, so the report stays deterministic
-            for k, row in enumerate(pool.imap(_run_job, jobs, chunksize=1)):
-                rows.append(row)
-                if progress:
-                    print(f"# sweep {k + 1}/{len(jobs)}", flush=True)
+            # and cells complete strictly in grid order
+            for row in pool.imap(_run_job, jobs, chunksize=1):
+                _collect(row)
     else:
-        rows = []
-        for k, job in enumerate(jobs):
-            rows.append(_run_job(job))
-            if progress:
-                print(f"# sweep {k + 1}/{len(jobs)}", flush=True)
+        for job in jobs:
+            _collect(_run_job(job))
 
-    n_seeds = len(exp.seeds)
-    report_cells = []
-    for i, cell in enumerate(cells):
-        cell_rows = rows[i * n_seeds:(i + 1) * n_seeds]
-        report_cells.append({
-            "regime": cell.scenario.regime,
-            "policy": cell.policy.name,
-            "migration": cell.migration.policy,
-            "n_seeds": n_seeds,
-            "metrics": aggregate_rows(cell_rows),
-            "rows": cell_rows,
-        })
-    horizon = until if until is not None else resolve_horizon(exp.scenario)
-    return {
-        "name": exp.name,
-        "experiment": exp.to_dict(),
-        "horizon": horizon,
-        "n_runs": len(jobs),
-        "cells": report_cells,
-    }
+    report = _assemble_report(exp, horizon, n_runs, report_cells)
+    if report_path:
+        _atomic_write(report, report_path)
+    return report
 
 
 def write_report(report: dict, path: str) -> str:
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    with open(path, "w") as f:
-        json.dump(report, f, indent=1, sort_keys=True)
-        f.write("\n")
-    return path
+    return _atomic_write(report, path)
 
 
 def format_report(report: dict) -> str:

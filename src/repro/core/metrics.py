@@ -221,11 +221,20 @@ class Metrics:
         }
         if vms is None or engine is None:
             return out
-        realized = 0.0
         # an interval still open at end-of-run realizes savings up to the
         # engine's last reprice (otherwise in-flight migrations would count
         # their prediction but contribute zero realization)
-        end = engine._ts[-1] if engine._ts else 0.0
+        ts = engine.tick_times()
+        end = float(ts[-1]) if ts.size else 0.0
+        # gather every realized span, then bill src and dst in one batched
+        # price_integrals call each (the scalar capped integral scans the
+        # whole price history per call — per-event billing would be
+        # O(events × ticks))
+        src_p: List[int] = []
+        dst_p: List[int] = []
+        t0s: List[float] = []
+        t1s: List[float] = []
+        caps: List[float] = []
         for e in self.migration_events:
             if e.t_complete < 0 or e.failed:
                 continue
@@ -234,13 +243,22 @@ class Metrics:
                 if itv.start == e.t_complete and itv.host == e.dst_host:
                     stop = (itv.stop if itv.stop is not None
                             else max(end, e.t_complete))
-                    realized += (
-                        engine.price_integral(e.src_pool, itv.start, stop,
-                                              cap=e.bid)
-                        - engine.price_integral(e.dst_pool, itv.start, stop,
-                                                cap=e.bid))
+                    src_p.append(e.src_pool)
+                    dst_p.append(e.dst_pool)
+                    t0s.append(itv.start)
+                    t1s.append(stop)
+                    caps.append(e.bid)
                     break
-        out["realized_saving"] = realized
+        t0a, t1a, capa = (np.asarray(t0s), np.asarray(t1s),
+                          np.asarray(caps))
+        src_int = engine.price_integrals(np.asarray(src_p, dtype=np.int64),
+                                         t0a, t1a, capa)
+        dst_int = engine.price_integrals(np.asarray(dst_p, dtype=np.int64),
+                                         t0a, t1a, capa)
+        # sequential left-to-right accumulation, matching the historical
+        # per-event loop bit for bit (a .sum()-of-sums reorders the floats)
+        out["realized_saving"] = float(sum((src_int - dst_int).tolist(),
+                                           0.0))
         return out
 
 

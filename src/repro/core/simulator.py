@@ -424,8 +424,8 @@ class MarketSimulator:
         prices = eng.tick(self.pool, t)
         self.pool.set_pool_prices(prices)
         m = self.metrics
-        for pid in range(eng.n_pools):
-            m.price_series.append((t, pid, float(prices[pid])))
+        m.price_series.extend(
+            (t, pid, float(p)) for pid, p in enumerate(prices))
         victims, vpools = self.pool.market_victims(prices, t)
         if victims.size:
             counts = np.bincount(vpools, minlength=eng.n_pools)

@@ -48,7 +48,6 @@ from ..api import (
     format_report,
     run_experiment,
     run_one,
-    write_report,
 )
 from ..market import MIGRATION_POLICIES, REGIMES
 
@@ -131,12 +130,16 @@ def _print_market_rows(rows) -> None:
 
 
 def _sweep_and_report(exp: ExperimentSpec, args) -> int:
+    # report_path flushes the report after every completed cell (atomic
+    # rename) and resumes from a matching partial report after a crash;
+    # --fresh discards any checkpoint (e.g. after changing simulator code)
     report = run_experiment(exp, processes=args.workers,
-                            progress=not args.json)
+                            progress=not args.json,
+                            report_path=args.report or None,
+                            resume=not args.fresh)
     if args.report:
-        path = write_report(report, args.report)
         # stderr keeps --json stdout a pure JSON document
-        print(f"# wrote {path}", file=sys.stderr)
+        print(f"# wrote {args.report}", file=sys.stderr)
     if args.json:
         print(json.dumps(report, indent=1, sort_keys=True))
     else:
@@ -191,7 +194,13 @@ def main(argv=None) -> int:
                     help="run an ExperimentSpec JSON file (overrides every "
                          "scenario flag; see examples/specs/)")
     ap.add_argument("--report", default="",
-                    help="write the sweep's aggregate report JSON here")
+                    help="write the sweep's aggregate report JSON here "
+                         "(flushed after every completed cell; a matching "
+                         "partial report at this path is resumed)")
+    ap.add_argument("--fresh", action="store_true",
+                    help="ignore an existing report at --report instead of "
+                         "resuming from it (use after code changes: resumed "
+                         "cells reflect the run that produced them)")
     ap.add_argument("--workers", type=int, default=None,
                     help="sweep worker processes (default: cpu count; "
                          "0 = serial)")

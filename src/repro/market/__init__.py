@@ -29,7 +29,7 @@ from .bids import (
     reference_history,
     register_bid_strategy,
 )
-from .engine import MarketEngine
+from .engine import MarketEngine, price_integral_ref
 from .migration import (
     MIGRATION_POLICIES,
     MIGRATION_REGISTRY,
@@ -47,14 +47,21 @@ from .risk import (
     price_gradients,
     price_volatility,
     projected_prices,
+    simulated_price_fan,
 )
 from .pricing import PriceModel, cost_stats, realized_cost_stats
 from .price_process import (
+    AUCTION_FAMILY,
     AuctionPrice,
+    MarketState,
     PRICE_PROCESS_REGISTRY,
+    SMOOTHED_FAMILY,
+    ScalarProcessAdapter,
     SmoothedPrice,
+    draw_shock_table,
     regime_comparison,
     register_price_process,
+    simulate_price_paths,
     simulate_price_series,
 )
 from .correlation import (

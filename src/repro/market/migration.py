@@ -134,7 +134,9 @@ class MigrationPlanner:
         if cfg.policy == "greedy-cheapest":
             return engine.prices.copy()
         # gradient-aware / risk-budgeted: project to the arrival time of a
-        # migration started this tick
+        # migration started this tick.  The regression fit reads the
+        # engine's packed price-history arrays directly (zero-copy views —
+        # see risk.recent_prices), so this stays cheap on the tick path.
         lead = cfg.downtime + engine.tick_interval
         return risk.projected_prices(engine, lead, cfg.gradient_window)
 

@@ -49,6 +49,10 @@ class MarketConfig:
     #: span several ticks (0 = the original i.i.d. redraw per tick)
     shock_rho: float = 0.75
     seed: int = 0
+    #: fused array-native price tick (default) vs the per-pool scalar
+    #: oracle walk — both consume identical shocks and kernels, so full
+    #: runs are bit-identical (the oracle exists for cross-validation)
+    vectorized: bool = True
 
 
 def make_market(regime: str, n_pools: int = 2, seed: int = 0,

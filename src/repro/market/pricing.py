@@ -68,11 +68,37 @@ def realized_cost_stats(vms: Iterable[Vm], engine, host_pool,
     running time, or an interruption-warning window) pays its bid, never
     the clearing price, honoring the bid contract.  On-demand VMs bill at
     the flat on-demand rate, exactly as in :func:`cost_stats`.
+
+    The whole fleet's price integrals are computed in **one** batched
+    :meth:`~repro.market.engine.MarketEngine.discount_integrals` call (one
+    ``(pool, start, stop, bid-cap)`` row per closed execution interval);
+    the remaining Python loop only accumulates the per-VM sums, in the same
+    order as the historical per-VM walk.
     """
     model = model or PriceModel()
     total = od_equiv = wasted = spot_cost = 0.0
     pool_of = host_pool.pool_of
-    for vm in vms:
+    vm_list = list(vms)
+    # gather every closed spot execution interval for one batched call
+    pids: list = []
+    t0s: list = []
+    t1s: list = []
+    caps: list = []
+    for vm in vm_list:
+        if vm.vm_type is not VmType.SPOT:
+            continue
+        for itv in vm.history:
+            if itv.stop is None:
+                continue
+            pids.append(int(pool_of[itv.host]))
+            t0s.append(itv.start)
+            t1s.append(itv.stop)
+            caps.append(vm.bid)
+    discounts = engine.discount_integrals(
+        np.asarray(pids, dtype=np.int64), np.asarray(t0s),
+        np.asarray(t1s), np.asarray(caps))
+    cursor = 0
+    for vm in vm_list:
         rate = model.rate(vm.demand)
         od_c = model.vm_od_equivalent(vm)
         od_equiv += od_c
@@ -83,9 +109,8 @@ def realized_cost_stats(vms: Iterable[Vm], engine, host_pool,
         for itv in vm.history:
             if itv.stop is None:
                 continue
-            pid = int(pool_of[itv.host])
-            c += rate / 3600.0 * engine.discount_integral(
-                pid, itv.start, itv.stop, cap=vm.bid)
+            c += rate / 3600.0 * float(discounts[cursor])
+            cursor += 1
         total += c
         spot_cost += c
         if vm.state is VmState.TERMINATED:

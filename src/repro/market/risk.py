@@ -33,23 +33,24 @@ from .advisor import FREQ_BANDS, generate_advisor_dataset
 
 def recent_prices(engine, window: int) -> np.ndarray:
     """(n_pools, k) matrix of the last ``k <= window`` tick prices (k >= 1;
-    a single zero column before the first tick)."""
-    hist = engine._price_hist
-    k = min(window, len(hist[0]))
-    if k == 0:
+    a single zero column before the first tick).  A read-only view into the
+    engine's packed price-history arrays — no per-call copy."""
+    n = engine.n_ticks
+    if n == 0:
         return np.zeros((engine.n_pools, 1))
-    return np.array([h[-k:] for h in hist], dtype=np.float64)
+    k = min(window, n)
+    return engine.price_history()[:, n - k:]
 
 
 def _price_fit(engine, window: int):
     """Shared least-squares machinery: (slopes, window means, centered-time
     offset of the last tick).  Slopes are zero before two ticks exist."""
-    ts = engine._ts
-    k = min(window, len(ts))
+    ts = engine.tick_times()
+    k = min(window, ts.size)
     if k < 2:
         p = recent_prices(engine, max(k, 1))
         return np.zeros(engine.n_pools), p.mean(axis=1), 0.0
-    t = np.asarray(ts[-k:], dtype=np.float64)
+    t = ts[-k:]
     p = recent_prices(engine, k)                 # (n_pools, k)
     t_mean = t.mean()
     tc = t - t_mean
@@ -94,6 +95,42 @@ def bid_crossing_risk(projected: np.ndarray, sigma: np.ndarray,
     s = np.maximum(sigma[pools], 1e-6)
     z = (projected[pools] - bids) / s
     return 1.0 / (1.0 + np.exp(-np.clip(z, -30.0, 30.0)))
+
+
+def simulated_price_fan(engine, n_ticks: int, n_paths: int = 64,
+                        seed: int = 0, quantiles=(0.1, 0.5, 0.9),
+                        util=None, backend: str = "numpy") -> np.ndarray:
+    """Monte-Carlo price fan: simulate ``n_paths`` shock trajectories
+    ``n_ticks`` forward from the engine's *current* packed price state and
+    return per-pool price quantiles — a distributional complement to the
+    point projection of :func:`projected_prices`.
+
+    Returns ``(len(quantiles), n_ticks, n_pools)``.  The demand signal is
+    held at ``util`` (default: the engine's last observed pool utilization);
+    shocks are drawn from a fresh ``default_rng(seed)`` (the engine's own
+    streams are not disturbed).  ``backend="jax"`` runs each family's
+    simulation as one ``jax.lax.scan``; pools of adapter-wrapped legacy
+    processes are excluded from the fan (their column holds the last
+    clearing price — their draws are private to the live objects).
+    """
+    from .price_process import simulate_price_paths
+
+    assert n_ticks >= 1 and n_paths >= 1
+    util = np.asarray(engine.last_util if util is None else util,
+                      dtype=np.float64)
+    rng = np.random.default_rng(seed)
+    paths = np.broadcast_to(
+        engine.prices[None, None, :],
+        (n_ticks, n_paths, engine.n_pools)).copy()
+    for fam, idx, state in engine.price_state():
+        if not getattr(fam, "vectorized", False):
+            continue
+        shocks = rng.standard_normal((n_ticks, n_paths, idx.size))
+        prices, _ = simulate_price_paths(
+            fam, state, np.broadcast_to(util[idx], (n_ticks, idx.size)),
+            shocks, backend=backend)
+        paths[:, :, idx] = prices
+    return np.quantile(paths, np.asarray(quantiles), axis=1)
 
 
 # ---------------------------------------------------------------------------

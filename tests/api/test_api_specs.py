@@ -226,3 +226,113 @@ def test_register_custom_workload_plugs_into_specs():
         assert m.allocations == 1
     finally:
         WORKLOAD_REGISTRY.entries.pop("test-tiny")
+
+
+# ---------------------------------------------------------------------------
+# PR 5 grid axes: bid strategies + workload-parameter ladders
+# ---------------------------------------------------------------------------
+def _grid_experiment(**kw) -> ExperimentSpec:
+    base = dict(
+        name="grid",
+        scenario=_market_scenario(),
+        policies=(PolicySpec("first-fit"),),
+        seeds=(0, 1))
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+def test_bid_axis_fans_cells_and_round_trips():
+    exp = _grid_experiment(
+        bids=(BidSpec("randomized", {"lo": 0.35}),
+              BidSpec("on-demand-cap", {"fraction": 0.8})))
+    cells = exp.cells()
+    assert len(cells) == 2
+    assert [c.scenario.bid.strategy for c in cells] == [
+        "randomized", "on-demand-cap"]
+    # non-bid scenario fields are shared across the axis
+    assert all(c.scenario.n_pools == 3 for c in cells)
+    rt = ExperimentSpec.from_json(exp.to_json())
+    assert rt == exp and rt.to_dict() == exp.to_dict()
+
+
+def test_workload_grid_fans_cross_product_in_axis_order():
+    exp = _grid_experiment(
+        workload_grid={"fleet_scale": (1.0, 2.0),
+                       "spot_submit_window": (300.0,)})
+    cells = exp.cells()
+    assert len(cells) == 2
+    assert [c.scenario.workload_params["fleet_scale"] for c in cells] == \
+        [1.0, 2.0]
+    assert all(c.scenario.workload_params["spot_submit_window"] == 300.0
+               for c in cells)
+    rt = ExperimentSpec.from_json(exp.to_json())
+    assert rt == exp
+    assert rt.workload_grid == {"fleet_scale": (1.0, 2.0),
+                                "spot_submit_window": (300.0,)}
+
+
+def test_new_axes_nest_inside_the_pr4_grid_order():
+    exp = _grid_experiment(
+        regimes=("calm", "volatile"),
+        migrations=(MigrationSpec(), MigrationSpec("gradient-aware")),
+        bids=(BidSpec("randomized"), BidSpec("on-demand-cap")),
+        workload_grid={"fleet_scale": (1.0, 2.0)})
+    cells = exp.cells()
+    assert len(cells) == 2 * 2 * 2 * 2
+    key = [(c.scenario.regime, c.migration.policy, c.scenario.bid.strategy,
+            c.scenario.workload_params["fleet_scale"]) for c in cells]
+    # regime outermost, then migration, bid, workload innermost
+    assert key[0] == ("calm", "none", "randomized", 1.0)
+    assert key[1] == ("calm", "none", "randomized", 2.0)
+    assert key[2] == ("calm", "none", "on-demand-cap", 1.0)
+    assert key[4] == ("calm", "gradient-aware", "randomized", 1.0)
+    assert key[8] == ("volatile", "none", "randomized", 1.0)
+
+
+def test_inert_axes_keep_pr4_cells_and_dict_shape():
+    exp = _grid_experiment()
+    assert exp.bids is None and exp.workload_grid == {}
+    d = exp.to_dict()
+    assert d["bids"] is None and d["workload_grid"] == {}
+    # pre-PR5 spec files (no bids / workload_grid keys) still load
+    legacy = {k: v for k, v in d.items()
+              if k not in ("bids", "workload_grid")}
+    assert ExperimentSpec.from_dict(legacy) == exp
+
+
+def test_grid_axis_validation_errors():
+    with pytest.raises(ValueError, match="bids cannot be empty"):
+        _grid_experiment(bids=())
+    with pytest.raises(ValueError, match="cannot be empty"):
+        _grid_experiment(workload_grid={"fleet_scale": ()})
+    with pytest.raises(ValueError, match="exactly one place"):
+        ExperimentSpec(
+            name="x",
+            scenario=_market_scenario().replace(
+                workload_params={"fleet_scale": 1.0}),
+            policies=(PolicySpec("first-fit"),),
+            seeds=(0,),
+            workload_grid={"fleet_scale": (1.0, 2.0)})
+    # unknown workload param fails at construction, not in a worker
+    with pytest.raises(ValueError, match="unknown workload"):
+        _grid_experiment(workload_grid={"not_a_param": (1,)})
+    # scalars and strings are spec errors, not raw TypeErrors or
+    # silent per-character axes
+    with pytest.raises(ValueError, match="list/tuple of values"):
+        _grid_experiment(workload_grid={"fleet_scale": 2.0})
+    with pytest.raises(ValueError, match="list/tuple of values"):
+        _grid_experiment(workload_grid={"fleet_scale": "1.0"})
+    # a bid axis over a regime-less scenario fails via cell validation
+    with pytest.raises(ValueError, match="bid strategy needs a market"):
+        ExperimentSpec(
+            name="x",
+            scenario=ScenarioSpec(workload="synthetic"),
+            policies=(PolicySpec("first-fit"),),
+            seeds=(0,),
+            bids=(BidSpec("randomized"),))
+
+
+def test_bid_axis_coerces_mappings():
+    exp = _grid_experiment(bids=({"strategy": "on-demand-cap",
+                                  "params": {"fraction": 0.9}},))
+    assert exp.bids[0] == BidSpec("on-demand-cap", {"fraction": 0.9})

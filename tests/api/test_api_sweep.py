@@ -135,3 +135,110 @@ def test_aggregate_rows_skips_identifiers_and_non_numeric():
     agg = aggregate_rows(rows)
     assert set(agg) == {"interruptions"}
     assert agg["interruptions"]["mean"] == 5.0
+
+
+# ---------------------------------------------------------------------------
+# PR 5: incremental report writing + crash resume + grid-axis metadata
+# ---------------------------------------------------------------------------
+def test_report_path_writes_final_report_atomically(tmp_path):
+    exp = _mini_experiment()
+    path = str(tmp_path / "report.json")
+    report = run_experiment(exp, processes=0, report_path=path)
+    with open(path) as f:
+        on_disk = json.load(f)
+    assert on_disk == json.loads(json.dumps(report))
+    assert "partial" not in on_disk
+    assert not (tmp_path / "report.json.tmp").exists()
+
+
+def test_partial_report_resumes_and_matches_fresh_run(tmp_path, monkeypatch):
+    exp = _mini_experiment()
+    path = str(tmp_path / "report.json")
+    fresh = run_experiment(exp, processes=0)
+
+    # simulate a crash after the first completed cell: a partial file with
+    # the prefix of the grid, marked partial
+    partial = json.loads(json.dumps(fresh))
+    partial["cells"] = partial["cells"][:1]
+    partial["partial"] = True
+    with open(path, "w") as f:
+        json.dump(partial, f)
+
+    calls = []
+    import repro.api.sweep as sweep_mod
+    real = sweep_mod._run_job
+
+    def counting(job):
+        calls.append(job)
+        return real(job)
+
+    monkeypatch.setattr(sweep_mod, "_run_job", counting)
+    resumed = run_experiment(exp, processes=0, report_path=path)
+    # only the second cell's seeds ran; the report is byte-identical
+    assert len(calls) == len(exp.seeds)
+    assert json.dumps(resumed, sort_keys=True) == \
+        json.dumps(fresh, sort_keys=True)
+    with open(path) as f:
+        assert json.load(f) == json.loads(json.dumps(fresh))
+
+
+def test_mismatched_partial_is_ignored(tmp_path, monkeypatch):
+    exp = _mini_experiment()
+    other = exp.replace(seeds=(5, 6, 7))
+    path = str(tmp_path / "report.json")
+    run_experiment(other, processes=0, report_path=path, until=UNTIL / 2)
+
+    calls = []
+    import repro.api.sweep as sweep_mod
+    real = sweep_mod._run_job
+
+    def counting(job):
+        calls.append(job)
+        return real(job)
+
+    monkeypatch.setattr(sweep_mod, "_run_job", counting)
+    report = run_experiment(exp, processes=0, report_path=path)
+    assert len(calls) == len(exp.cells()) * len(exp.seeds)
+    assert json.dumps(report, sort_keys=True) == json.dumps(
+        run_experiment(exp, processes=0), sort_keys=True)
+
+
+def test_resume_false_recomputes(tmp_path, monkeypatch):
+    exp = _mini_experiment()
+    path = str(tmp_path / "report.json")
+    run_experiment(exp, processes=0, report_path=path)
+    calls = []
+    import repro.api.sweep as sweep_mod
+    real = sweep_mod._run_job
+
+    def counting(job):
+        calls.append(job)
+        return real(job)
+
+    monkeypatch.setattr(sweep_mod, "_run_job", counting)
+    run_experiment(exp, processes=0, report_path=path, resume=False)
+    assert len(calls) == len(exp.cells()) * len(exp.seeds)
+
+
+def test_grid_axis_cells_carry_identifying_metadata():
+    exp = ExperimentSpec(
+        name="axes",
+        scenario=ScenarioSpec(workload="market", regime="volatile",
+                              bid=BidSpec("randomized", {"lo": 0.45})),
+        policies=(PolicySpec("first-fit"),),
+        bids=(BidSpec("randomized", {"lo": 0.45}),
+              BidSpec("on-demand-cap", {"fraction": 0.7})),
+        workload_grid={"fleet_scale": (0.5, 1.0)},
+        seeds=(0,))
+    report = run_experiment(exp, processes=0, until=600.0)
+    assert [(c["bid"]["strategy"], c["workload_params"]["fleet_scale"])
+            for c in report["cells"]] == [
+        ("randomized", 0.5), ("randomized", 1.0),
+        ("on-demand-cap", 0.5), ("on-demand-cap", 1.0)]
+    # the full bid spec (params included) identifies the cell: two specs
+    # sharing a strategy stay distinguishable
+    assert report["cells"][2]["bid"]["params"] == {"fraction": 0.7}
+    # inert axes add no cell keys (PR 4 report shape preserved)
+    plain = run_experiment(_mini_experiment(), processes=0, until=600.0)
+    assert all("bid" not in c and "workload_params" not in c
+               for c in plain["cells"])
