@@ -1,0 +1,110 @@
+"""Fleet-manager hot-path benchmarks (PR 6).
+
+Two row pairs, each cross-checked against its per-pool / per-row Python
+oracle before timing:
+
+* ``market/fleet_replenish`` — the vectorized residual-capacity
+  apportionment planner (:func:`repro.market.fleet.plan_replenish`) over a
+  batch of shortfall snapshots, vs the per-pool reference walk
+  (``market/fleet_replenish_pyref``, :func:`plan_replenish_ref`).  Every
+  snapshot's launch counts are asserted bit-identical first.
+* ``market/fleet_capacity`` — the registry liveness scan
+  (:func:`fleet_pool_capacity`: one sorted-membership test + two bincounts
+  over a ~20k-row synthetic RUNNING-spot registry), vs the per-row walk
+  (``market/fleet_capacity_pyref``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.market import (
+    fleet_pool_capacity,
+    fleet_pool_capacity_ref,
+    plan_replenish,
+    plan_replenish_ref,
+)
+
+from .common import emit, timeit
+
+
+def _snapshots(n_snaps: int, n_pools: int, seed: int = 0):
+    """Synthetic per-tick planning inputs (shortfall, holdings, market)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_snaps):
+        need = int(rng.integers(1, 64))
+        cur = rng.integers(0, 32, size=n_pools)
+        weights = np.where(rng.random(n_pools) < 0.15, 0.0,
+                           rng.uniform(0.1, 3.0, n_pools))
+        if not weights.any():
+            weights[0] = 1.0
+        prices = np.round(rng.uniform(0.05, 1.2, n_pools), 2)
+        bids = np.full(n_pools, 0.6)
+        free = np.round(rng.uniform(0.0, 120.0, n_pools), 1)
+        out.append((need, cur, weights, prices, bids, free))
+    return out
+
+
+def bench_replenish(n_snaps: int, n_pools: int, strategy: str = "diversified"):
+    snaps = _snapshots(n_snaps, n_pools)
+    for s in snaps:
+        vec = plan_replenish(*s, 2.0, strategy)
+        ref = plan_replenish_ref(*s, 2.0, strategy)
+        assert np.array_equal(vec, ref), \
+            "vectorized replenish diverged from the per-pool reference"
+
+    def vec_all():
+        for s in snaps:
+            plan_replenish(*s, 2.0, strategy)
+
+    def ref_all():
+        for s in snaps:
+            plan_replenish_ref(*s, 2.0, strategy)
+
+    t_vec = timeit(vec_all, n=9) / n_snaps
+    t_ref = timeit(ref_all, n=3) / n_snaps
+    return [
+        emit(f"market/fleet_replenish_p{n_pools}", t_vec,
+             f"snaps={n_snaps};strategy={strategy};"
+             f"speedup_vs_pyref={t_ref / t_vec:.1f}x"),
+        emit(f"market/fleet_replenish_pyref_p{n_pools}", t_ref, ""),
+    ]
+
+
+def bench_capacity(n_rows: int, n_pools: int, n_fleet: int):
+    rng = np.random.default_rng(1)
+    vids = np.sort(rng.permutation(n_rows * 4)[:n_rows]).astype(np.int64)
+    registry = {
+        "vid": vids,
+        "pool": rng.integers(0, n_pools, size=n_rows),
+        "cpu": rng.uniform(1.0, 4.0, size=n_rows),
+    }
+    fleet_vids = np.sort(rng.choice(n_rows * 4, size=n_fleet,
+                                    replace=False)).astype(np.int64)
+
+    units, cpu = fleet_pool_capacity(registry, fleet_vids, n_pools)
+    r_units, r_cpu = fleet_pool_capacity_ref(registry, fleet_vids, n_pools)
+    assert np.array_equal(units, r_units) and np.array_equal(cpu, r_cpu), \
+        "vectorized capacity scan diverged from the per-row reference"
+
+    t_vec = timeit(lambda: fleet_pool_capacity(registry, fleet_vids,
+                                               n_pools), n=9)
+    t_ref = timeit(lambda: fleet_pool_capacity_ref(registry, fleet_vids,
+                                                   n_pools), n=3)
+    return [
+        emit(f"market/fleet_capacity_r{n_rows}", t_vec,
+             f"pools={n_pools};fleet={n_fleet};"
+             f"speedup_vs_pyref={t_ref / t_vec:.1f}x"),
+        emit(f"market/fleet_capacity_pyref_r{n_rows}", t_ref, ""),
+    ]
+
+
+def run(quick: bool = True):
+    rows = []
+    n_snaps = 200 if quick else 1_000
+    for strategy in ("diversified",) if quick else ("diversified",
+                                                    "lowest-price"):
+        rows.extend(bench_replenish(n_snaps, n_pools=64, strategy=strategy))
+    rows.extend(bench_capacity(n_rows=20_000 if quick else 80_000,
+                               n_pools=64, n_fleet=2_000))
+    return rows

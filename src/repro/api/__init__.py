@@ -45,6 +45,8 @@ from .registry import (
 from .specs import (
     BidSpec,
     ExperimentSpec,
+    FaultSpec,
+    FleetSpec,
     MigrationSpec,
     PolicySpec,
     RebidSpec,

@@ -20,6 +20,8 @@ from ..core.simulator import MarketSimulator, SimConfig
 from ..core.allocation import make_policy
 from ..market.bids import RebidOnResume
 from ..market.engine import MarketEngine
+from ..market.faults import make_fault_injector
+from ..market.fleet import make_fleet_manager
 from ..market.migration import make_migration_planner
 from ..market.pools import make_market
 from ..market.pricing import realized_cost_stats
@@ -58,10 +60,23 @@ def build(spec: RunSpec, seed: int) -> MarketSimulator:
         rebid = RebidOnResume(
             bump_lo=spec.rebid.bump_lo, bump_hi=spec.rebid.bump_hi,
             on_demand_rate=engine.config.pools[0].on_demand_rate, seed=seed)
+    # fleet managers and fault injectors are stateful (slot arrays, fired
+    # flags, pre-drawn stochastic schedules) — always fresh per build
+    fleet = None
+    if spec.fleet is not None:
+        fleet = make_fleet_manager(scenario.n_pools,
+                                   spec.fleet.config(scenario.n_pools))
+    faults = None
+    if spec.faults is not None:
+        faults = make_fault_injector(
+            spec.faults.scenario, scenario.n_pools,
+            resolve_horizon(scenario), scenario.tick_interval, seed,
+            **dict(spec.faults.params))
     sim = MarketSimulator(
         policy=make_policy(spec.policy.name, **dict(spec.policy.params)),
         config=SimConfig(record_timeline=False, **dict(scenario.sim_params)),
-        engine=engine, migration=migration, rebid=rebid)
+        engine=engine, migration=migration, rebid=rebid,
+        fleet=fleet, faults=faults)
     WORKLOAD_REGISTRY.get(scenario.workload)(sim, scenario, seed)
     return sim
 
@@ -124,4 +139,19 @@ def collect_row(sim: MarketSimulator, metrics, spec: RunSpec,
         "wasted_cost": round(cost["wasted_cost"], 4),
         "allocations": metrics.allocations,
     })
+    if sim.fleet is not None:
+        rs = metrics.resilience_stats(sim.vms, sim.engine, sim.pool)
+        row.update({
+            "time_below_target_s": round(rs["time_below_target"], 1),
+            "time_below_frac": round(rs["time_below_frac"], 4),
+            "shortfall_area": round(rs["shortfall_area"], 1),
+            "mean_recovery_s": round(rs["mean_recovery_s"], 1),
+            "max_recovery_s": round(rs["max_recovery_s"], 1),
+            "faults_fired": rs["faults_fired"],
+            "fleet_launches": rs["fleet_launches"],
+            "od_spill_launches": rs["od_spill_launches"],
+            "fleet_slots_retired": rs["slots_retired"],
+            "fleet_spot_cost": round(rs["fleet_spot_cost"], 4),
+            "od_spill_cost": round(rs["od_spill_cost"], 4),
+        })
     return row

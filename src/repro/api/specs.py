@@ -14,10 +14,14 @@ CI-gateable artifacts:
 * :class:`RebidSpec`      — adaptive re-bid bump range (RebidOnResume).
 * :class:`ScenarioSpec`   — workload + market regime + pools + tick +
   horizon (``WORKLOAD_REGISTRY``; ``regime=None`` = no market engine).
-* :class:`RunSpec`        — scenario × policy × migration × rebid: the unit
-  :func:`repro.api.build` materializes.
-* :class:`ExperimentSpec` — scenario + policy/migration/regime grid + seed
-  list: the unit :func:`repro.api.sweep.run_experiment` fans out.
+* :class:`FleetSpec`      — spot-fleet strategy + FleetConfig params
+  (``FLEET_STRATEGY_REGISTRY``).
+* :class:`FaultSpec`      — fault-injection scenario name + params
+  (``FAULT_REGISTRY``).
+* :class:`RunSpec`        — scenario × policy × migration × rebid × fleet ×
+  faults: the unit :func:`repro.api.build` materializes.
+* :class:`ExperimentSpec` — scenario + policy/migration/regime/fleet grid +
+  seed list: the unit :func:`repro.api.sweep.run_experiment` fans out.
 
 Specs carry *names and parameters*, never live objects — stateful
 components (engines, planners, policies) are materialized fresh per run by
@@ -39,6 +43,12 @@ from ..market.migration import (
     MIGRATION_POLICIES,
     MIGRATION_REGISTRY,
     MigrationConfig,
+)
+from ..market.faults import FAULT_REGISTRY, make_fault_injector
+from ..market.fleet import (
+    FLEET_STRATEGY_REGISTRY,
+    FleetConfig,
+    validate_fleet_config,
 )
 from ..market.pools import REGIMES
 from .workloads import WORKLOAD_REGISTRY
@@ -193,6 +203,90 @@ class RebidSpec(_SpecBase):
                    bump_hi=d.get("bump_hi", 1.30))
 
 
+@dataclass(frozen=True)
+class FleetSpec(_SpecBase):
+    """Spot-fleet manager: diversification strategy by registry name +
+    :class:`~repro.market.fleet.FleetConfig` parameters (target capacity,
+    pool weights, fallback ladder, backoff).  Validated at construction;
+    pool-count-dependent checks (weight length, ``pool:<k>`` rungs) re-run
+    inside :class:`RunSpec`, where ``n_pools`` is known."""
+
+    strategy: str = "diversified"
+    params: Mapping[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        FLEET_STRATEGY_REGISTRY.get(self.strategy)  # raises on unknown name
+        _set(self, "params", dict(self.params))
+        allowed = {f.name for f in dataclasses.fields(FleetConfig)
+                   } - {"strategy"}
+        _check_param_keys(self.params, allowed,
+                          f"fleet strategy {self.strategy!r}")
+        try:
+            self.config()
+        except ValueError as e:
+            raise _spec_error(str(e)) from None
+
+    def config(self, n_pools: Optional[int] = None) -> FleetConfig:
+        """Materialize (and validate) the FleetConfig; with ``n_pools`` the
+        pool-dependent checks run too."""
+        p = dict(self.params)
+        if "ladder" in p:
+            p["ladder"] = tuple((str(r), int(b)) for r, b in p["ladder"])
+        if p.get("pool_weights") is not None:
+            p["pool_weights"] = tuple(float(x) for x in p["pool_weights"])
+        cfg = FleetConfig(strategy=self.strategy, **p)
+        validate_fleet_config(cfg, n_pools)
+        return cfg
+
+    def to_dict(self) -> dict:
+        return {"strategy": self.strategy, "params": dict(self.params)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "FleetSpec":
+        return cls(strategy=d.get("strategy", "diversified"),
+                   params=d.get("params", {}))
+
+
+@dataclass(frozen=True)
+class FaultSpec(_SpecBase):
+    """Market fault injection: scenario by registry name + generator
+    parameters.  The builder compiles it into a fresh seeded
+    :class:`~repro.market.faults.FaultInjector` per run."""
+
+    scenario: str = "storm"
+    params: Mapping[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        factory = FAULT_REGISTRY.get(self.scenario)  # raises on unknown name
+        _set(self, "params", dict(self.params))
+        allowed = _factory_param_names(factory)
+        if allowed is not None:
+            _check_param_keys(
+                self.params,
+                set(allowed) - {"n_pools", "horizon", "tick_interval",
+                                "seed"},
+                f"fault scenario {self.scenario!r}")
+
+    def validate_events(self, n_pools: int, horizon: Optional[float],
+                        tick_interval: float) -> None:
+        """Compile the schedule once (seed 0) so bad events — unknown pools,
+        negative times, out-of-range magnitudes — fail at spec construction,
+        not mid-sweep in a worker."""
+        try:
+            make_fault_injector(self.scenario, n_pools, horizon,
+                                tick_interval, 0, **self.params)
+        except (ValueError, TypeError) as e:
+            raise _spec_error(str(e)) from None
+
+    def to_dict(self) -> dict:
+        return {"scenario": self.scenario, "params": dict(self.params)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "FaultSpec":
+        return cls(scenario=d.get("scenario", "storm"),
+                   params=d.get("params", {}))
+
+
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)
 class ScenarioSpec(_SpecBase):
@@ -306,6 +400,8 @@ class RunSpec(_SpecBase):
     policy: PolicySpec
     migration: MigrationSpec = field(default_factory=MigrationSpec)
     rebid: Optional[RebidSpec] = None
+    fleet: Optional[FleetSpec] = None
+    faults: Optional[FaultSpec] = None
 
     def __post_init__(self):
         for name, typ in (("scenario", ScenarioSpec), ("policy", PolicySpec),
@@ -315,10 +411,13 @@ class RunSpec(_SpecBase):
                 _set(self, name, typ.from_dict(val))
             elif not isinstance(getattr(self, name), typ):
                 raise _spec_error(f"{name} must be a {typ.__name__}")
-        if isinstance(self.rebid, Mapping):
-            _set(self, "rebid", RebidSpec.from_dict(self.rebid))
-        if self.rebid is not None and not isinstance(self.rebid, RebidSpec):
-            raise _spec_error("rebid must be a RebidSpec or None")
+        for name, typ in (("rebid", RebidSpec), ("fleet", FleetSpec),
+                          ("faults", FaultSpec)):
+            val = getattr(self, name)
+            if isinstance(val, Mapping):
+                _set(self, name, typ.from_dict(val))
+            elif val is not None and not isinstance(val, typ):
+                raise _spec_error(f"{name} must be a {typ.__name__} or None")
         if self.migration.enabled and not self.scenario.has_market:
             raise _spec_error(
                 f"migration policy {self.migration.policy!r} requires a "
@@ -328,6 +427,24 @@ class RunSpec(_SpecBase):
             raise _spec_error(
                 "adaptive re-bidding requires a market engine — set "
                 "scenario.regime, or drop the rebid spec")
+        if self.fleet is not None:
+            if not self.scenario.has_market:
+                raise _spec_error(
+                    "a fleet manager requires a market engine — set "
+                    "scenario.regime, or drop the fleet spec")
+            try:
+                # pool-count-dependent checks: weight length, pool:<k> rungs
+                self.fleet.config(self.scenario.n_pools)
+            except ValueError as e:
+                raise _spec_error(str(e)) from None
+        if self.faults is not None:
+            if not self.scenario.has_market:
+                raise _spec_error(
+                    "fault injection requires a market engine — set "
+                    "scenario.regime, or drop the faults spec")
+            self.faults.validate_events(self.scenario.n_pools,
+                                        self.scenario.horizon,
+                                        self.scenario.tick_interval)
 
     def to_dict(self) -> dict:
         return {
@@ -335,16 +452,24 @@ class RunSpec(_SpecBase):
             "policy": self.policy.to_dict(),
             "migration": self.migration.to_dict(),
             "rebid": self.rebid.to_dict() if self.rebid is not None else None,
+            "fleet": self.fleet.to_dict() if self.fleet is not None else None,
+            "faults": (self.faults.to_dict()
+                       if self.faults is not None else None),
         }
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "RunSpec":
         rebid = d.get("rebid")
+        fleet = d.get("fleet")
+        faults = d.get("faults")
         return cls(
             scenario=ScenarioSpec.from_dict(d["scenario"]),
             policy=PolicySpec.from_dict(d["policy"]),
             migration=MigrationSpec.from_dict(d.get("migration", {})),
             rebid=RebidSpec.from_dict(rebid) if rebid is not None else None,
+            fleet=FleetSpec.from_dict(fleet) if fleet is not None else None,
+            faults=(FaultSpec.from_dict(faults)
+                    if faults is not None else None),
         )
 
 
@@ -374,6 +499,12 @@ class ExperimentSpec(_SpecBase):
     #: of all listed values joins the grid
     workload_grid: Mapping[str, Tuple] = field(default_factory=dict)
     rebid: Optional[RebidSpec] = None
+    #: fan the grid over fleet managers; entries may be None (the per-VM
+    #: baseline cell).  None (the default) = no fleet axis at all (inert)
+    fleets: Optional[Tuple[Optional["FleetSpec"], ...]] = None
+    #: fault injection applied to *every* cell (same seeded schedule per
+    #: seed, so cells stay comparable); None = no faults
+    faults: Optional[FaultSpec] = None
     name: str = "experiment"
 
     def __post_init__(self):
@@ -388,6 +519,21 @@ class ExperimentSpec(_SpecBase):
             _set(self, "scenario", ScenarioSpec.from_dict(self.scenario))
         if isinstance(self.rebid, Mapping):
             _set(self, "rebid", RebidSpec.from_dict(self.rebid))
+        if isinstance(self.faults, Mapping):
+            _set(self, "faults", FaultSpec.from_dict(self.faults))
+        if self.faults is not None and not isinstance(self.faults, FaultSpec):
+            raise _spec_error("faults must be a FaultSpec or None")
+        if self.fleets is not None:
+            _set(self, "fleets", tuple(
+                FleetSpec.from_dict(f) if isinstance(f, Mapping) else f
+                for f in self.fleets))
+            if not self.fleets:
+                raise _spec_error("fleets cannot be empty — use None for no "
+                                  "fleet axis, or include a None entry for "
+                                  "the per-VM baseline")
+            if not all(f is None or isinstance(f, FleetSpec)
+                       for f in self.fleets):
+                raise _spec_error("fleets must all be FleetSpec or None")
         if not isinstance(self.scenario, ScenarioSpec):
             raise _spec_error("scenario must be a ScenarioSpec")
         if not all(isinstance(p, PolicySpec) for p in self.policies):
@@ -465,12 +611,13 @@ class ExperimentSpec(_SpecBase):
         return tuple(combos)
 
     def cells(self) -> Tuple[RunSpec, ...]:
-        """The (regime × policy × migration × bid × workload-combo) grid as
-        RunSpecs, in report order (new axes nest innermost, so the PR 4
-        ordering is preserved when they are inert)."""
+        """The (regime × policy × migration × bid × workload-combo × fleet)
+        grid as RunSpecs, in report order (new axes nest innermost, so the
+        PR 4 ordering is preserved when they are inert)."""
         regimes = (self.regimes if self.regimes is not None
                    else (self.scenario.regime,))
         bid_axis = self.bids if self.bids is not None else (None,)
+        fleet_axis = self.fleets if self.fleets is not None else (None,)
         combos = self.workload_combos()
         out = []
         for regime in regimes:
@@ -484,9 +631,11 @@ class ExperimentSpec(_SpecBase):
                             scenario = (s_bid if not combo else s_bid.replace(
                                 workload_params={**s_bid.workload_params,
                                                  **combo}))
-                            out.append(RunSpec(
-                                scenario=scenario, policy=policy,
-                                migration=migration, rebid=self.rebid))
+                            for fleet in fleet_axis:
+                                out.append(RunSpec(
+                                    scenario=scenario, policy=policy,
+                                    migration=migration, rebid=self.rebid,
+                                    fleet=fleet, faults=self.faults))
         return tuple(out)
 
     def runs(self):
@@ -510,6 +659,11 @@ class ExperimentSpec(_SpecBase):
                               for k, v in self.workload_grid.items()},
             "seeds": list(self.seeds),
             "rebid": self.rebid.to_dict() if self.rebid is not None else None,
+            "fleets": ([f.to_dict() if f is not None else None
+                        for f in self.fleets]
+                       if self.fleets is not None else None),
+            "faults": (self.faults.to_dict()
+                       if self.faults is not None else None),
         }
 
     @classmethod
@@ -517,6 +671,8 @@ class ExperimentSpec(_SpecBase):
         rebid = d.get("rebid")
         regimes = d.get("regimes")
         bids = d.get("bids")
+        fleets = d.get("fleets")
+        faults = d.get("faults")
         return cls(
             name=d.get("name", "experiment"),
             scenario=ScenarioSpec.from_dict(d["scenario"]),
@@ -529,6 +685,11 @@ class ExperimentSpec(_SpecBase):
             workload_grid=d.get("workload_grid", {}),
             seeds=tuple(int(s) for s in d["seeds"]),
             rebid=RebidSpec.from_dict(rebid) if rebid is not None else None,
+            fleets=(tuple(FleetSpec.from_dict(f) if f is not None else None
+                          for f in fleets)
+                    if fleets is not None else None),
+            faults=(FaultSpec.from_dict(faults)
+                    if faults is not None else None),
         )
 
     @classmethod

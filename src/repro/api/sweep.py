@@ -105,6 +105,11 @@ def _report_cell(exp: ExperimentSpec, cell: RunSpec,
     if exp.workload_grid:
         out["workload_params"] = {
             k: cell.scenario.workload_params[k] for k in exp.workload_grid}
+    if exp.fleets is not None:
+        # full spec (None = the per-VM baseline cell) — two FleetSpecs may
+        # share a strategy and differ only in ladder/weights params
+        out["fleet"] = (cell.fleet.to_dict()
+                        if cell.fleet is not None else None)
     return out
 
 
@@ -238,13 +243,17 @@ def write_report(report: dict, path: str) -> str:
 
 def format_report(report: dict) -> str:
     """Human-readable mean ± CI table (the sweep CLI's default output)."""
+    fleet_axis = any("fleet" in c for c in report["cells"])
     lines = [
         f"sweep: {report['name']}  "
         f"({report['n_runs']} runs, {report['cells'][0]['n_seeds']} seeds "
         f"per cell, horizon={report['horizon']})",
         f"{'regime':11s} {'policy':18s} {'migration':15s} "
-        f"{'interruptions':>20s} {'max_intr_s':>18s} {'migr':>12s} "
-        f"{'spot_cost':>17s}",
+        + (f"{'fleet':12s} " if fleet_axis else "")
+        + f"{'interruptions':>20s} {'max_intr_s':>18s} {'migr':>12s} "
+        f"{'spot_cost':>17s}"
+        + (f" {'below_tgt_s':>18s} {'recovery_s':>16s}" if fleet_axis
+           else ""),
     ]
     for c in report["cells"]:
         m = c["metrics"]
@@ -255,9 +264,15 @@ def format_report(report: dict) -> str:
             return (f"{m[key]['mean']:.{digits}f}"
                     f"±{m[key]['ci95']:.{digits}f}")
 
+        fl = ""
+        if fleet_axis:
+            spec = c.get("fleet")
+            fl = f"{spec['strategy'] if spec else 'per-vm':12s} "
         lines.append(
             f"{str(c['regime']):11s} {c['policy']:18s} "
-            f"{c['migration']:15s} {pm('interruptions'):>20s} "
+            f"{c['migration']:15s} {fl}{pm('interruptions'):>20s} "
             f"{pm('max_interruption_time'):>18s} {pm('migrations'):>12s} "
-            f"{pm('realized_spot_cost', 3):>17s}")
+            f"{pm('realized_spot_cost', 3):>17s}"
+            + (f" {pm('time_below_target_s'):>18s} "
+               f"{pm('mean_recovery_s'):>16s}" if fleet_axis else ""))
     return "\n".join(lines)

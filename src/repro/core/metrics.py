@@ -11,6 +11,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from .causes import InterruptionCause
 from .types import Vm, VmState, VmType
 
 
@@ -20,7 +21,9 @@ class InterruptionEvent:
     time: float
     host: int
     kind: str  # "terminate" | "hibernate" | "host-removed"
-    cause: str = "capacity"  # | "price-wave" (market engine bid crossing)
+    #: why — one of :class:`repro.core.causes.InterruptionCause` (serialized
+    #: verbatim; "capacity" is the classic on-demand-preemption default)
+    cause: str = InterruptionCause.CAPACITY
 
 
 @dataclass
@@ -31,6 +34,19 @@ class WaveEvent:
     pool: int
     price: float
     size: int
+
+
+@dataclass
+class FaultRecord:
+    """One injected market fault that fired during the run (``market/faults``).
+
+    ``t1`` equals ``t0`` for instantaneous faults (storms); windowed faults
+    (crunch / spike / outage) carry their scheduled end."""
+    kind: str
+    t0: float
+    t1: float
+    pools: tuple
+    magnitude: float
 
 
 @dataclass
@@ -105,6 +121,21 @@ class Metrics:
     #: stop-and-copy seconds of *completed* migrations; a failed flight's
     #: downtime lands in the VM's interruption gap instead (one home each)
     migration_downtime: float = 0.0
+    # -- fleet resilience layer (empty when no FleetManager is attached) -----
+    #: (t, up_cpu, target_cpu) sampled by the fleet manager each PRICE_TICK
+    fleet_samples: List[tuple] = field(default_factory=list)
+    #: fallback-ladder rung usage: rung name -> replacement attempts routed
+    #: through it (including the implicit initial "launch" rung)
+    fallback_counts: Dict[str, int] = field(default_factory=dict)
+    fleet_launches: int = 0         # spot launch attempts submitted
+    od_spill_launches: int = 0      # on-demand fallback launches submitted
+    fleet_slots_retired: int = 0    # slots that exhausted the ladder
+    #: vm ids the fleet manager launched (spot / on-demand spill), for the
+    #: batched realized-billing pass in :meth:`resilience_stats`
+    fleet_spot_ids: List[int] = field(default_factory=list)
+    fleet_od_ids: List[int] = field(default_factory=list)
+    # -- fault injection (empty when no FaultInjector is attached) -----------
+    fault_records: List[FaultRecord] = field(default_factory=list)
 
     def on_transition(self, vm: Vm, old: VmState, new: VmState) -> None:
         """Update the incremental counters for one VM state change."""
@@ -181,7 +212,8 @@ class Metrics:
         waves = self.wave_events
         sizes = [w.size for w in waves]
         price_interruptions = sum(
-            1 for e in self.interruption_events if e.cause == "price-wave")
+            1 for e in self.interruption_events
+            if e.cause == InterruptionCause.PRICE_WAVE)
         by_pool: Dict[int, List[float]] = {}
         for (_, pid, price) in self.price_series:
             by_pool.setdefault(pid, []).append(price)
@@ -259,6 +291,107 @@ class Metrics:
         # per-event loop bit for bit (a .sum()-of-sums reorders the floats)
         out["realized_saving"] = float(sum((src_int - dst_int).tolist(),
                                            0.0))
+        return out
+
+    def resilience_stats(self, vms: Optional[Dict[int, Vm]] = None,
+                         engine=None, host_pool=None) -> dict:
+        """Fleet resilience aggregates (all-zero when no fleet manager ran).
+
+        Core statistics integrate the per-tick ``fleet_samples`` series
+        piecewise-constant: *time below target capacity* (seconds the fleet's
+        running CPU sat under its effective target), *shortfall area*
+        (∫ max(target − up, 0) dt, CPU·seconds — how deep × how long), and a
+        per-fault *recovery time* (from the fault start to the first sample
+        back at target after the dip; censored at the last sample when the
+        fleet never recovered).  With ``vms`` + the run's engine + host pool,
+        also bills the fleet's realized cost: spot launches through one
+        batched :meth:`~repro.market.engine.MarketEngine.price_integrals`
+        call (clearing price capped at bid, the billing contract), on-demand
+        spill at the pools' flat on-demand rates — both in price·hours, the
+        same unit as :func:`~repro.market.pricing.realized_cost_stats`."""
+        samples = self.fleet_samples
+        out = {
+            "time_below_target": 0.0,
+            "shortfall_area": 0.0,
+            "time_below_frac": 0.0,
+            "fleet_launches": self.fleet_launches,
+            "od_spill_launches": self.od_spill_launches,
+            "slots_retired": self.fleet_slots_retired,
+            "fallback_counts": dict(sorted(self.fallback_counts.items())),
+            "faults_fired": len(self.fault_records),
+            "mean_recovery_s": 0.0,
+            "max_recovery_s": 0.0,
+        }
+        if len(samples) >= 2:
+            arr = np.asarray(samples, dtype=np.float64)
+            t, up, tgt = arr[:, 0], arr[:, 1], arr[:, 2]
+            dt = np.diff(t)
+            short = np.maximum(tgt[:-1] - up[:-1], 0.0)
+            below = short > 1e-12
+            out["time_below_target"] = float(np.sum(dt[below]))
+            out["shortfall_area"] = float(np.sum(short * dt))
+            span = float(t[-1] - t[0])
+            if span > 0:
+                out["time_below_frac"] = out["time_below_target"] / span
+            # per-fault recovery: from the fault start, find the dip below
+            # the effective target, then the first sample back at it
+            recoveries = []
+            fault_rows = []
+            for rec in self.fault_records:
+                after = np.flatnonzero(t >= rec.t0 - 1e-9)
+                r = 0.0
+                censored = False
+                if after.size:
+                    dips = after[up[after] < tgt[after] - 1e-12]
+                    if dips.size:
+                        d0 = dips[0]
+                        back = np.flatnonzero(up[d0:] >= tgt[d0:] - 1e-12)
+                        if back.size:
+                            r = float(t[d0 + back[0]] - rec.t0)
+                        else:
+                            r = float(t[-1] - rec.t0)
+                            censored = True
+                recoveries.append(r)
+                fault_rows.append({
+                    "kind": rec.kind, "t0": rec.t0,
+                    "recovery_s": round(r, 3), "censored": censored,
+                })
+            if recoveries:
+                out["mean_recovery_s"] = float(np.mean(recoveries))
+                out["max_recovery_s"] = float(np.max(recoveries))
+            out["faults"] = fault_rows
+        if vms is None or engine is None or host_pool is None:
+            return out
+        # realized fleet billing: one batched integral call for every closed
+        # spot interval, flat od rate × duration for the spill
+        pool_of = host_pool.pool_of
+        pids: List[int] = []
+        t0s: List[float] = []
+        t1s: List[float] = []
+        caps: List[float] = []
+        for vid in self.fleet_spot_ids:
+            vm = vms[vid]
+            for itv in vm.history:
+                if itv.stop is None:
+                    continue
+                pids.append(int(pool_of[itv.host]))
+                t0s.append(itv.start)
+                t1s.append(itv.stop)
+                caps.append(vm.bid)
+        integrals = engine.price_integrals(
+            np.asarray(pids, dtype=np.int64), np.asarray(t0s),
+            np.asarray(t1s), np.asarray(caps))
+        out["fleet_spot_cost"] = float(sum(integrals.tolist(), 0.0)) / 3600.0
+        od_rates = engine.od_rates
+        spill = 0.0
+        for vid in self.fleet_od_ids:
+            vm = vms[vid]
+            for itv in vm.history:
+                if itv.stop is None:
+                    continue
+                spill += float(od_rates[int(pool_of[itv.host])]) * (
+                    itv.stop - itv.start) / 3600.0
+        out["od_spill_cost"] = spill
         return out
 
 

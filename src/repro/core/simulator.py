@@ -32,9 +32,11 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from .allocation import AllocationPolicy, FirstFit
+from .causes import InterruptionCause
 from .events import Event, EventKind, EventQueue
 from .hosts import HostPool
-from .metrics import InterruptionEvent, Metrics, MigrationEvent, WaveEvent
+from .metrics import (FaultRecord, InterruptionEvent, Metrics,
+                      MigrationEvent, WaveEvent)
 from .types import (
     ExecutionInterval,
     Vm,
@@ -61,7 +63,8 @@ class MarketSimulator:
 
     def __init__(self, policy: Optional[AllocationPolicy] = None,
                  config: Optional[SimConfig] = None,
-                 engine=None, migration=None, rebid=None):
+                 engine=None, migration=None, rebid=None,
+                 fleet=None, faults=None):
         """``engine`` — optional :class:`repro.market.engine.MarketEngine`.
         When attached, the simulator runs periodic PRICE_TICK events: each
         tick re-clears every capacity pool's price from live utilization,
@@ -81,7 +84,20 @@ class MarketSimulator:
 
         ``rebid`` — optional :class:`repro.market.bids.RebidOnResume`:
         adaptive re-bidding applied when a spot VM enters hibernation, so it
-        resubmits with a (seeded, randomized) higher bid.  Off by default."""
+        resubmits with a (seeded, randomized) higher bid.  Off by default.
+
+        ``fleet`` — optional :class:`repro.market.fleet.FleetManager`.  Runs
+        at the end of each PRICE_TICK (post-wave, post-flush, post-planner):
+        it samples the fleet's live capacity, and launches replacements for
+        dead slots through its fallback ladder.  ``fleet=None`` is
+        bit-identical to a fleet-less simulator.
+
+        ``faults`` — optional :class:`repro.market.faults.FaultInjector`.
+        Each PRICE_TICK first advances the fault schedule: pool outages
+        deactivate/reactivate their hosts, crunch/spike windows bias the
+        engine's tick inputs, and interruption storms reclaim resident spot
+        VMs right after the normal price wave.  ``faults=None`` is
+        bit-identical to a fault-less simulator."""
         self.policy = policy or FirstFit()
         self.config = config or SimConfig()
         assert self.config.flush_mode in ("batched", "per_vm")
@@ -93,6 +109,23 @@ class MarketSimulator:
                 "a migration planner (policy != 'none') requires a market "
                 "engine — prices drive the scoring")
         self._rebid = rebid
+        self.fleet = fleet
+        self.faults = faults
+        if fleet is not None:
+            assert engine is not None, (
+                "a fleet manager requires a market engine — pool prices "
+                "drive admission and the fallback ladder")
+        if faults is not None:
+            assert engine is not None, (
+                "a fault injector requires a market engine — faults flow "
+                "through the PRICE_TICK machinery")
+            assert faults.n_pools == engine.n_pools, (
+                f"fault injector covers {faults.n_pools} pools, engine has "
+                f"{engine.n_pools}")
+        # transient pool outages: fault-event index -> deactivated host ids
+        self._outage_hosts: Dict[int, List[int]] = {}
+        # storms that fired at the current tick, applied after the wave
+        self._storms_due: List = []
         # in-flight migrations: vm_id -> its MigrationEvent, plus a per-pool
         # arrival counter feeding the risk-budgeted planner
         self._migrating: Dict[int, MigrationEvent] = {}
@@ -353,7 +386,8 @@ class MarketSimulator:
                 v = self.vms[vid]
                 if v.state is not VmState.INTERRUPTING:
                     continue  # finished during the warning
-                self._interrupt(v, kind=v.behavior.value, cause="price-wave")
+                self._interrupt(v, kind=v.behavior.value,
+                                cause=InterruptionCause.PRICE_WAVE)
             self._flush_pending()
             self._record()
             return
@@ -373,7 +407,8 @@ class MarketSimulator:
         self._flush_pending()
         self._record()
 
-    def _interrupt(self, vm: Vm, kind: str, cause: str = "capacity") -> None:
+    def _interrupt(self, vm: Vm, kind: str,
+                   cause: str = InterruptionCause.CAPACITY) -> None:
         """Stop a running/interrupting spot VM and apply its behavior."""
         self._account_progress(vm)
         self.pool.release(vm)
@@ -421,7 +456,15 @@ class MarketSimulator:
         selects every resident spot VM whose bid the new price crossed."""
         eng = self.engine
         t = self.now
-        prices = eng.tick(self.pool, t)
+        fi = self.faults
+        if fi is not None:
+            # outage transitions first (the utilization signal must see the
+            # downed hosts), then crunch/spike biases into the normal tick
+            self._fault_begin_tick(t)
+            prices = eng.tick(self.pool, t, util_bias=fi.util_bias(t),
+                              shock_bias=fi.shock_bias(t))
+        else:
+            prices = eng.tick(self.pool, t)
         self.pool.set_pool_prices(prices)
         m = self.metrics
         m.price_series.extend(
@@ -446,7 +489,12 @@ class MarketSimulator:
                 for vid in victims:
                     v = self.vms[int(vid)]
                     self._interrupt(v, kind=v.behavior.value,
-                                    cause="price-wave")
+                                    cause=InterruptionCause.PRICE_WAVE)
+        # injected interruption storms land after the ordinary wave — the
+        # wave already reclaimed below-bid VMs, the storm takes its share of
+        # whoever is left running
+        if fi is not None and self._storms_due:
+            self._fault_apply_storms()
         # capacity freed by the wave (and any price drops, via the gain log)
         # feeds straight back into the queue — victims can land in a cheaper
         # pool within the same tick
@@ -456,6 +504,12 @@ class MarketSimulator:
         # (processed after same-time submissions; each start re-validates)
         if self.migration is not None:
             self._plan_migrations()
+        # the fleet manager observes the settled post-wave, post-flush,
+        # post-planner state: sample capacity, replace dead slots (its
+        # submissions are VM_SUBMIT events at this timestamp, processed
+        # after the tick by event priority)
+        if self.fleet is not None:
+            self.fleet.on_tick(self, t)
         self._record()
         # keep ticking while any event or live VM remains (the chain is the
         # only self-scheduling event kind, so it must not outlive the run).
@@ -463,10 +517,16 @@ class MarketSimulator:
         # with infinite timeouts, gated purely on a price that may never
         # clear) must not keep the chain alive — the pre-engine simulator
         # terminated there, and run(until=inf) would otherwise never return.
+        # A fleet with live (unretired) slots, or a fault schedule with
+        # events still to fire, also keeps a *bounded* run ticking — backoff
+        # retries and future faults need the clock even when nothing runs.
         c = m.state_counts
         bounded = self._run_limit != float("inf")
         if (self.queue._heap or c[1] + c[2] > 0
-                or (bounded and c[3] + c[4] > 0)):
+                or (bounded and c[3] + c[4] > 0)
+                or (bounded and self.fleet is not None
+                    and self.fleet.wants_tick())
+                or (bounded and fi is not None and fi.pending())):
             self.queue.push(t + eng.tick_interval, EventKind.PRICE_TICK)
         else:
             self._tick_armed = False  # idle: submit()/schedule_* re-arm
@@ -567,7 +627,7 @@ class MarketSimulator:
             # reached is in the MigrationEvent.
             self.metrics.interruption_events.append(
                 InterruptionEvent(vid, self.now, vm.history[-1].host, kind,
-                                  cause="migration-failed"))
+                                  cause=InterruptionCause.MIGRATION_FAILED))
             self._emit("vm_interrupted", vm=vm, kind=kind)
             self._apply_interruption_behavior(vm, kind)
         self._flush_pending()
@@ -616,6 +676,17 @@ class MarketSimulator:
         self._record()
 
     def _on_host_remove(self, hid: int) -> None:
+        self._evict_host(hid, InterruptionCause.CAPACITY)
+        self._flush_pending()
+        self._record()
+
+    def _evict_host(self, hid: int,
+                    cause: str = InterruptionCause.CAPACITY) -> None:
+        """Deactivate ``hid`` and evict its residents through the ordinary
+        interruption lifecycle (spot VMs take their behavior, on-demand VMs
+        requeue).  Shared by trace machine-removal events (``cause``
+        "capacity", the historical value) and transient pool outages from
+        the fault injector ("fault-outage").  The caller flushes/records."""
         victims = self.pool.remove_host(hid)
         for v in victims:
             if v.vm_type is VmType.SPOT:
@@ -623,7 +694,8 @@ class MarketSimulator:
                 self.pool.release(v)
                 v.interruptions += 1
                 self.metrics.interruption_events.append(
-                    InterruptionEvent(v.id, self.now, hid, "host-removed"))
+                    InterruptionEvent(v.id, self.now, hid,
+                                      InterruptionCause.HOST_REMOVED, cause))
                 self._apply_interruption_behavior(v, v.behavior.value)
             else:
                 # on-demand VMs are resubmitted as persistent requests
@@ -637,8 +709,45 @@ class MarketSimulator:
                     v.waiting_since = self.now
                     self._waiting_od[v.id] = v
                     self._retry_pos.pop(v.id, None)  # untested after removal
-        self._flush_pending()
-        self._record()
+
+    # -------------------------------------------------------- fault injection
+    def _fault_begin_tick(self, t: float) -> None:
+        """Advance the fault schedule to ``t``: record fired faults, start /
+        end pool outages, and stash storms for application after the wave."""
+        fi = self.faults
+        started, ended = fi.begin_tick(t)
+        for i, ev in started:
+            self.metrics.fault_records.append(
+                FaultRecord(ev.kind, ev.t0, ev.t1,
+                            tuple(fi._pool_ids(ev)), ev.magnitude))
+            if ev.kind == "pool-outage":
+                pool = self.pool
+                n = pool.n
+                hids = [int(h) for p in fi._pool_ids(ev)
+                        for h in np.flatnonzero(
+                            pool.active[:n] & (pool.pool_of[:n] == p))]
+                for hid in hids:
+                    self._evict_host(hid, InterruptionCause.FAULT_OUTAGE)
+                self._outage_hosts[i] = hids
+            elif ev.kind == "storm":
+                self._storms_due.append(ev)
+        for i in ended:
+            for hid in self._outage_hosts.pop(i, ()):
+                self.pool.reactivate_host(hid)
+
+    def _fault_apply_storms(self) -> None:
+        """Reclaim each due storm's victims — a fraction of the resident
+        running spot VMs per affected pool, lowest bids first — through the
+        normal interruption path (cause "fault-storm", no warning: storms
+        model abrupt provider reclamation)."""
+        fi = self.faults
+        for ev in self._storms_due:
+            vids = fi.victims(self.pool.market_registry(), ev)
+            for vid in vids:
+                v = self.vms[int(vid)]
+                self._interrupt(v, kind=v.behavior.value,
+                                cause=InterruptionCause.FAULT_STORM)
+        self._storms_due.clear()
 
     # --------------------------------------------------------- resubmission
     def _flush_pending(self) -> None:

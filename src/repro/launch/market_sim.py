@@ -18,6 +18,17 @@ interruption metrics:
   python -m repro.launch.market_sim --market --migration gradient-aware \\
       --regimes volatile,correlated --rebid
 
+``--fleet STRATEGY`` attaches the spot-fleet manager (target capacity held
+through a fallback ladder), ``--faults SCENARIO`` injects a seeded market
+fault scenario, and ``--fleet compare --sweep N`` runs the fleet-vs-per-VM
+resilience comparison:
+
+  python -m repro.launch.market_sim --market --fleet diversified \\
+      --faults storm
+  python -m repro.launch.market_sim --market --regimes volatile \\
+      --fleet compare --faults storm --sweep 10 \\
+      --report results/sweep/fleet_resilience.json
+
 Every mode routes through the declarative scenario API
 (:mod:`repro.api`): the CLI flags assemble a spec tree, ``api.build``
 materializes fresh components per run.  Two spec-file modes make whole
@@ -40,6 +51,8 @@ import time
 from ..api import (
     BidSpec,
     ExperimentSpec,
+    FaultSpec,
+    FleetSpec,
     MigrationSpec,
     PolicySpec,
     RebidSpec,
@@ -96,17 +109,19 @@ def run_market(policy_name: str, regime: str, seed: int, until: float = 14400.0,
                n_pools: int = 4, bid_strategy: str = "randomized",
                tick_interval: float = 60.0, alpha: float = -0.5,
                migration: str = "none", rebid: bool = False,
-               from_advisor: bool = True) -> dict:
+               from_advisor: bool = True, fleet: FleetSpec | None = None,
+               faults: FaultSpec | None = None) -> dict:
     """One engine-coupled run over the market scenario through the scenario
     API (fresh engine/planner per call; ``migration="none"`` is
     bit-identical to no planner; ``rebid`` switches on adaptive re-bidding
-    on hibernation)."""
+    on hibernation; ``fleet``/``faults`` attach the resilience layer)."""
     spec = RunSpec(
         scenario=_market_scenario_spec(regime, n_pools, bid_strategy,
                                        tick_interval, from_advisor),
         policy=_policy_spec(policy_name, alpha),
         migration=MigrationSpec(migration),
-        rebid=RebidSpec() if rebid else None)
+        rebid=RebidSpec() if rebid else None,
+        fleet=fleet, faults=faults)
     t0 = time.time()
     row = run_one(spec, seed, until=until)
     row["wall_s"] = round(time.time() - t0, 1)
@@ -114,19 +129,27 @@ def run_market(policy_name: str, regime: str, seed: int, until: float = 14400.0,
 
 
 def _print_market_rows(rows) -> None:
+    fleet = any("time_below_target_s" in r for r in rows)
     print(f"{'regime':11s} {'policy':18s} {'migration':15s} "
           f"{'intr':>5s} {'waves':>5s} {'max_intr_s':>10s} "
           f"{'migr':>5s} {'down_s':>7s} {'spot_cost':>9s} "
-          f"{'save%':>6s} {'waste':>7s}")
+          f"{'save%':>6s} {'waste':>7s}"
+          + (f" {'below_tgt_s':>11s} {'recov_s':>8s} {'od_spill':>8s}"
+             if fleet else ""))
     for r in rows:
-        print(f"{r['regime']:11s} {r['policy']:18s} "
-              f"{r['migration']:15s} "
-              f"{r['interruptions']:5d} {r['waves']:5d} "
-              f"{r['max_interruption_time']:10.1f} "
-              f"{r['migrations']:5d} "
-              f"{r['migration_downtime_s']:7.1f} "
-              f"{r['realized_spot_cost']:9.3f} "
-              f"{r['savings_pct']:6.1f} {r['wasted_cost']:7.3f}")
+        line = (f"{r['regime']:11s} {r['policy']:18s} "
+                f"{r['migration']:15s} "
+                f"{r['interruptions']:5d} {r['waves']:5d} "
+                f"{r['max_interruption_time']:10.1f} "
+                f"{r['migrations']:5d} "
+                f"{r['migration_downtime_s']:7.1f} "
+                f"{r['realized_spot_cost']:9.3f} "
+                f"{r['savings_pct']:6.1f} {r['wasted_cost']:7.3f}")
+        if "time_below_target_s" in r:
+            line += (f" {r['time_below_target_s']:11.1f} "
+                     f"{r['mean_recovery_s']:8.1f} "
+                     f"{r['od_spill_launches']:8d}")
+        print(line)
 
 
 def _sweep_and_report(exp: ExperimentSpec, args) -> int:
@@ -181,6 +204,17 @@ def main(argv=None) -> int:
                          + ", or 'all' to compare every policy per regime")
     ap.add_argument("--rebid", action="store_true",
                     help="adaptive re-bidding on hibernation (Bhuyan-style)")
+    ap.add_argument("--fleet", default="",
+                    help="attach a spot-fleet manager: a fleet strategy "
+                         "name (diversified, lowest-price, single-pool), or "
+                         "'compare' to sweep the diversified fleet against "
+                         "the per-VM baseline (sweep mode only)")
+    ap.add_argument("--fleet-target", type=float, default=64.0,
+                    help="fleet target capacity in CPU cores (with --fleet)")
+    ap.add_argument("--faults", default="",
+                    help="inject a registered fault scenario (storm, "
+                         "random-storms, pool-outage, price-spike, "
+                         "capacity-crunch, scripted)")
     ap.add_argument("--flat-volatility", action="store_true",
                     help="use the regime's hand-set volatility constant for "
                          "every pool instead of deriving per-pool sigmas "
@@ -208,6 +242,8 @@ def main(argv=None) -> int:
 
     if args.sweep and not (args.market or args.spec):
         ap.error("--sweep requires --market (or use --spec FILE)")
+    if (args.fleet or args.faults) and not args.market:
+        ap.error("--fleet/--faults require --market")
     if args.report and not (args.sweep or args.spec):
         ap.error("--report only applies to sweep modes "
                  "(--sweep N or --spec FILE)")
@@ -225,8 +261,23 @@ def main(argv=None) -> int:
                       else args.migration.split(","))
         until = args.until if args.until is not None else 14400.0
         regimes = args.regimes.split(",")
+        # the resilience layer: --fleet names a strategy ("compare" sweeps
+        # fleet vs the per-VM baseline), --faults a fault scenario; both
+        # fail fast at spec construction on unknown names
+        faults = FaultSpec(scenario=args.faults) if args.faults else None
+        fleet = None
+        if args.fleet and args.fleet != "compare":
+            fleet = FleetSpec(strategy=args.fleet,
+                              params={"target_capacity": args.fleet_target})
 
         if args.sweep:
+            fleets = None
+            if args.fleet == "compare":
+                fleets = (None, FleetSpec(
+                    strategy="diversified",
+                    params={"target_capacity": args.fleet_target}))
+            elif fleet is not None:
+                fleets = (fleet,)
             exp = ExperimentSpec(
                 name=f"market_sweep_{args.sweep}x",
                 scenario=_market_scenario_spec(
@@ -237,9 +288,12 @@ def main(argv=None) -> int:
                 migrations=tuple(MigrationSpec(m) for m in migrations),
                 regimes=tuple(regimes),
                 seeds=tuple(range(args.seed, args.seed + args.sweep)),
-                rebid=RebidSpec() if args.rebid else None)
+                rebid=RebidSpec() if args.rebid else None,
+                fleets=fleets, faults=faults)
             return _sweep_and_report(exp, args)
 
+        if args.fleet == "compare":
+            ap.error("--fleet compare requires --sweep N")
         rows = []
         for regime in regimes:
             for p in policies:
@@ -250,7 +304,8 @@ def main(argv=None) -> int:
                         bid_strategy=args.bid_strategy,
                         tick_interval=args.tick, alpha=args.alpha,
                         migration=mig, rebid=args.rebid,
-                        from_advisor=not args.flat_volatility))
+                        from_advisor=not args.flat_volatility,
+                        fleet=fleet, faults=faults))
         if args.json:
             print(json.dumps(rows, indent=1))
         else:

@@ -9,6 +9,12 @@
                     re-bidding on hibernation (``RebidOnResume``).
 * ``migration``   — proactive cross-pool migration planner (PRICE_TICK
                     scoring, MIGRATE_START/COMPLETE execution).
+* ``fleet``       — spot-fleet manager: target-capacity allocation across
+                    pools with a configurable fallback ladder (same-pool →
+                    cheaper-pool → on-demand → queue → scale-down).
+* ``faults``      — deterministic seeded market fault injection (capacity
+                    crunch, price spike, pool outage, correlated storm)
+                    composing with the PRICE_TICK machinery.
 * ``risk``        — pool price gradients/volatility + advisor-band-derived
                     pool volatility.
 * ``trace``       — Google-Cluster-Trace-style machine/task event generation,
@@ -30,6 +36,28 @@ from .bids import (
     register_bid_strategy,
 )
 from .engine import MarketEngine, price_integral_ref
+from .faults import (
+    FAULT_KINDS,
+    FAULT_REGISTRY,
+    FaultEvent,
+    FaultInjector,
+    make_fault_injector,
+    register_fault_scenario,
+    storm_victims,
+)
+from .fleet import (
+    FLEET_STRATEGY_REGISTRY,
+    FleetConfig,
+    FleetManager,
+    LADDER_RUNGS,
+    fleet_pool_capacity,
+    fleet_pool_capacity_ref,
+    make_fleet_manager,
+    plan_replenish,
+    plan_replenish_ref,
+    register_fleet_strategy,
+    validate_fleet_config,
+)
 from .migration import (
     MIGRATION_POLICIES,
     MIGRATION_REGISTRY,

@@ -181,11 +181,19 @@ class MarketEngine:
         self._shock_pos += 1
         return z
 
-    def tick(self, host_pool, now: float) -> np.ndarray:
+    def tick(self, host_pool, now: float, util_bias=None,
+             shock_bias=None) -> np.ndarray:
         """Advance every pool's price process one step against live pool
         utilization; returns the new (n_pools,) clearing-price vector.  The
         caller (simulator) pushes the prices into the host pool and collects
-        the wave."""
+        the wave.
+
+        ``util_bias`` / ``shock_bias`` are optional (n_pools,) additive
+        biases from the fault-injection layer (``market/faults``): a
+        capacity crunch raises the demand signal *before* the clearing
+        curve, a price spike raises the tick's standard-normal shocks —
+        either way the faults flow through the normal price processes.
+        ``None`` (the default) is bit-identical to the unbiased tick."""
         util = host_pool.pool_cpu_utilization()
         if util.size < self.n_pools:
             util = np.concatenate(
@@ -197,8 +205,12 @@ class MarketEngine:
             self._shared_shock = rho * self._shared_shock + innov
             util = np.clip(
                 util + self.config.correlation * self._shared_shock, 0.0, 1.0)
+        if util_bias is not None:
+            util = np.clip(util + util_bias, 0.0, 1.0)
         self.last_util = util
         z = self._draw_shocks()
+        if shock_bias is not None:
+            z = z + shock_bias
         # close the previous price segment in the integrals
         k = self._n_ticks
         if k + 1 > self._hist_cap:

@@ -336,3 +336,153 @@ def test_bid_axis_coerces_mappings():
     exp = _grid_experiment(bids=({"strategy": "on-demand-cap",
                                   "params": {"fraction": 0.9}},))
     assert exp.bids[0] == BidSpec("on-demand-cap", {"fraction": 0.9})
+
+
+# ---------------------------------------------------------------------------
+# PR 6 grid axes: fleet managers + fault injection
+# ---------------------------------------------------------------------------
+from repro.api import FaultSpec, FleetSpec  # noqa: E402
+from repro.market import FAULT_REGISTRY, FLEET_STRATEGY_REGISTRY  # noqa: E402
+
+FLEET_FAULT_SPECS = [
+    FleetSpec(),
+    FleetSpec("single-pool", {"target_capacity": 8.0,
+                              "pool_weights": [1.0, 0.5],
+                              "ladder": [["same-pool", 3], ["on-demand", 1]]}),
+    FaultSpec(),
+    FaultSpec("random-storms", {"rate_per_hour": 1.5, "fraction": 0.3}),
+    RunSpec(scenario=_market_scenario(),
+            policy=PolicySpec("first-fit"),
+            fleet=FleetSpec(params={"target_capacity": 16.0}),
+            faults=FaultSpec("storm", {"count": 2})),
+    ExperimentSpec(
+        name="resilience",
+        scenario=_market_scenario(),
+        policies=(PolicySpec("first-fit"),),
+        fleets=(None, FleetSpec(params={"target_capacity": 16.0})),
+        faults=FaultSpec("pool-outage", {"pool": 1}),
+        seeds=(0, 1)),
+]
+
+
+@pytest.mark.parametrize("spec", FLEET_FAULT_SPECS,
+                         ids=lambda s: type(s).__name__)
+def test_fleet_fault_round_trip_identity(spec):
+    d = spec.to_dict()
+    assert type(spec).from_dict(d) == spec
+    assert json.loads(json.dumps(d)) == d
+    clone = type(spec).from_json(spec.to_json())
+    assert clone == spec and clone.to_json() == spec.to_json()
+
+
+@pytest.mark.parametrize("factory, match", [
+    (lambda: FleetSpec("nope"), "unknown fleet strategy"),
+    (lambda: FleetSpec(params={"typo": 1}),
+     "unknown fleet strategy 'diversified' parameter"),
+    (lambda: FleetSpec(params={"target_capacity": -1.0}),
+     "target_capacity"),
+    (lambda: FleetSpec(params={"pool_weights": [1.0, -1.0]}),
+     "conflicting fleet pool_weights"),
+    (lambda: FleetSpec(params={"ladder": [["teleport", 1]]}),
+     "unknown fallback rung"),
+    (lambda: FaultSpec("nope"), "unknown fault scenario"),
+    (lambda: FaultSpec(params={"typo": 1}),
+     "fault scenario 'storm' parameter"),
+    (lambda: RunSpec(scenario=ScenarioSpec(workload="synthetic"),
+                     policy=PolicySpec("first-fit"), fleet=FleetSpec()),
+     "fleet manager requires a market engine"),
+    (lambda: RunSpec(scenario=ScenarioSpec(workload="synthetic"),
+                     policy=PolicySpec("first-fit"), faults=FaultSpec()),
+     "fault injection requires a market engine"),
+    (lambda: RunSpec(scenario=_market_scenario(),
+                     policy=PolicySpec("first-fit"),
+                     fleet=FleetSpec(params={"pool_weights": [1.0, 1.0]})),
+     "2 entries for 3 pools"),
+    (lambda: RunSpec(scenario=_market_scenario(),
+                     policy=PolicySpec("first-fit"),
+                     fleet=FleetSpec(params={"ladder": [["pool:9", 1]]})),
+     "names unknown pool 9"),
+    (lambda: RunSpec(scenario=_market_scenario(),
+                     policy=PolicySpec("first-fit"),
+                     faults=FaultSpec("pool-outage", {"pool": 7})),
+     "unknown pool"),
+    (lambda: RunSpec(scenario=_market_scenario(),
+                     policy=PolicySpec("first-fit"), fleet="diversified"),
+     "fleet must be"),
+    (lambda: RunSpec(scenario=_market_scenario(),
+                     policy=PolicySpec("first-fit"), faults=5),
+     "faults must be"),
+    (lambda: ExperimentSpec(scenario=_market_scenario(),
+                            policies=(PolicySpec("first-fit"),),
+                            seeds=(0,), fleets=()), "fleets cannot be empty"),
+    (lambda: ExperimentSpec(scenario=_market_scenario(),
+                            policies=(PolicySpec("first-fit"),),
+                            seeds=(0,), fleets=("diversified",)),
+     "fleets must all be"),
+    (lambda: ExperimentSpec(scenario=_market_scenario(),
+                            policies=(PolicySpec("first-fit"),),
+                            seeds=(0,), faults=5), "faults must be"),
+    # a fleet over an engine-less scenario fails via cell validation
+    (lambda: ExperimentSpec(scenario=ScenarioSpec(workload="synthetic"),
+                            policies=(PolicySpec("first-fit"),),
+                            seeds=(0,), fleets=(FleetSpec(),)),
+     "fleet manager requires a market engine"),
+])
+def test_fleet_fault_validation_fails_fast(factory, match):
+    with pytest.raises(ValueError, match=match):
+        factory()
+
+
+@pytest.mark.parametrize("registry, known", [
+    (FLEET_STRATEGY_REGISTRY, "diversified"),
+    (FAULT_REGISTRY, "random-storms"),
+])
+def test_fleet_fault_registries_list_known_names(registry, known):
+    assert known in registry
+    with pytest.raises(ValueError) as exc:
+        registry.get("definitely-not-registered")
+    msg = str(exc.value)
+    assert "definitely-not-registered" in msg and known in msg
+
+
+def test_fleet_axis_fans_cells_and_round_trips():
+    exp = _grid_experiment(
+        fleets=(None, FleetSpec(params={"target_capacity": 8.0})),
+        faults=FaultSpec("storm", {"count": 2}))
+    cells = exp.cells()
+    assert len(cells) == 2
+    assert cells[0].fleet is None
+    assert cells[1].fleet.params["target_capacity"] == 8.0
+    # faults apply to every cell (the same seeded schedule per seed), so
+    # fleet-vs-baseline cells stay comparable
+    assert all(c.faults == exp.faults for c in cells)
+    rt = ExperimentSpec.from_json(exp.to_json())
+    assert rt == exp and rt.to_dict() == exp.to_dict()
+
+
+def test_fleet_axis_nests_innermost():
+    exp = _grid_experiment(
+        bids=(BidSpec("randomized"), BidSpec("on-demand-cap")),
+        fleets=(None, FleetSpec()))
+    key = [(c.scenario.bid.strategy, c.fleet is not None)
+           for c in exp.cells()]
+    assert key == [("randomized", False), ("randomized", True),
+                   ("on-demand-cap", False), ("on-demand-cap", True)]
+
+
+def test_inert_fleet_axes_keep_prior_dict_shape():
+    exp = _grid_experiment()
+    d = exp.to_dict()
+    assert d["fleets"] is None and d["faults"] is None
+    # pre-PR6 spec files (no fleets / faults keys) still load
+    legacy = {k: v for k, v in d.items() if k not in ("fleets", "faults")}
+    assert ExperimentSpec.from_dict(legacy) == exp
+
+
+def test_fleet_axis_coerces_mappings():
+    exp = _grid_experiment(
+        fleets=({"strategy": "lowest-price", "params": {}}, None),
+        faults={"scenario": "price-spike", "params": {"magnitude": 1.5}})
+    assert exp.fleets[0] == FleetSpec("lowest-price")
+    assert exp.fleets[1] is None
+    assert exp.faults == FaultSpec("price-spike", {"magnitude": 1.5})

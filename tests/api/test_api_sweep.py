@@ -242,3 +242,51 @@ def test_grid_axis_cells_carry_identifying_metadata():
     plain = run_experiment(_mini_experiment(), processes=0, until=600.0)
     assert all("bid" not in c and "workload_params" not in c
                for c in plain["cells"])
+
+
+# ---------------------------------------------------------------------------
+# PR 6: fleet axis + fault injection through the sweep runner
+# ---------------------------------------------------------------------------
+def _resilience_experiment() -> ExperimentSpec:
+    from repro.api import FaultSpec, FleetSpec
+    return ExperimentSpec(
+        name="resilience-mini",
+        scenario=ScenarioSpec(workload="market", regime="volatile",
+                              n_pools=2, horizon=1800.0),
+        policies=(PolicySpec("first-fit"),),
+        fleets=(None, FleetSpec(params={"target_capacity": 8.0})),
+        faults=FaultSpec("storm", {"first": 600.0, "every": 600.0,
+                                   "count": 2, "fraction": 0.5}),
+        seeds=(0, 1))
+
+
+def test_fleet_fault_sweep_parallel_equals_serial():
+    """Chaos-determinism through the sweep runner: a fleet axis under
+    injected storms produces byte-identical reports serial vs
+    multiprocessing."""
+    exp = _resilience_experiment()
+    serial = run_experiment(exp, processes=0)
+    parallel = run_experiment(exp, processes=2)
+    assert json.dumps(serial, sort_keys=True) == \
+        json.dumps(parallel, sort_keys=True)
+
+
+def test_fleet_cells_carry_spec_and_resilience_metrics():
+    exp = _resilience_experiment()
+    report = run_experiment(exp, processes=0)
+    baseline, fleet_cell = report["cells"]
+    assert baseline["fleet"] is None
+    assert fleet_cell["fleet"]["strategy"] == "diversified"
+    # resilience columns appear only where a fleet manager ran
+    assert "time_below_target_s" not in baseline["metrics"]
+    for key in ("time_below_target_s", "shortfall_area", "mean_recovery_s",
+                "faults_fired", "fleet_launches", "fleet_spot_cost"):
+        assert key in fleet_cell["metrics"], key
+    # every cell saw the same number of injected faults
+    assert all(r["faults_fired"] == 2 for r in fleet_cell["rows"])
+    # the report renders with fleet + recovery columns
+    txt = format_report(report)
+    assert "per-vm" in txt and "diversified" in txt and "below_tgt_s" in txt
+    # inert-axis reports keep the old column set
+    assert "below_tgt_s" not in format_report(
+        run_experiment(_mini_experiment(), processes=0, until=600.0))

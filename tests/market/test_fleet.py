@@ -1,0 +1,333 @@
+"""Spot-fleet manager (PR 6 tentpole): config validation, planner-vs-oracle
+equality, target-capacity convergence, the fallback ladder (same-pool →
+cheaper-pool → on-demand → queue → scale-down), resilience metrics, and the
+hibernate→resume→fallback-ladder composition chain."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    FirstFit,
+    InterruptionBehavior,
+    MarketSimulator,
+    SimConfig,
+    VmState,
+    dynamic_vm_table,
+    make_spot,
+    resources,
+    to_json,
+)
+from repro.core.causes import InterruptionCause
+from repro.market import (
+    FaultEvent,
+    FaultInjector,
+    FleetConfig,
+    MarketConfig,
+    MarketEngine,
+    PoolConfig,
+    fleet_pool_capacity,
+    fleet_pool_capacity_ref,
+    make_fleet_manager,
+    plan_replenish,
+    plan_replenish_ref,
+    validate_fleet_config,
+)
+
+BIG = resources(64, 131_072, 40_000, 1_600_000)
+
+
+class ScriptedProcess:
+    """Price process stub: scripted sequence, then holds the last value."""
+
+    def __init__(self, seq):
+        self.seq = list(seq)
+        self.last = self.seq[-1]
+
+    def price(self, utilization: float) -> float:
+        if self.seq:
+            self.last = self.seq.pop(0)
+        return self.last
+
+
+def scripted_engine(*pool_price_seqs, tick=10.0) -> MarketEngine:
+    pools = [PoolConfig(f"p{i}") for i in range(len(pool_price_seqs))]
+    eng = MarketEngine(MarketConfig(pools, tick_interval=tick))
+    eng.processes = [ScriptedProcess(s) for s in pool_price_seqs]
+    return eng
+
+
+def fleet_sim(engine, fleet, faults=None):
+    sim = MarketSimulator(policy=FirstFit(),
+                          config=SimConfig(strict_invariants=True),
+                          engine=engine, fleet=fleet, faults=faults)
+    for p in range(engine.n_pools):
+        sim.add_host(BIG, pool=p)
+    return sim
+
+
+# ---------------------------------------------------------------------------
+# config validation (fail-fast satellite)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cfg_kw, n_pools, match", [
+    ({"target_capacity": 0.0}, None, "target_capacity"),
+    ({"unit_cpu": -1.0}, None, "unit_cpu"),
+    ({"bid_fraction": 0.0}, None, "bid_fraction"),
+    ({"pool_weights": (1.0, -0.5)}, None,
+     "conflicting fleet pool_weights.*negative"),
+    ({"pool_weights": (0.0, 0.0)}, None,
+     "conflicting fleet pool_weights.*all zero"),
+    ({"pool_weights": (1.0, 1.0, 1.0)}, 2, "3 entries for 2 pools"),
+    ({"ladder": ()}, None, "at least one rung"),
+    ({"ladder": (("teleport", 1),)}, None,
+     "unknown fallback rung 'teleport'"),
+    ({"ladder": (("pool:7", 1),)}, 4,
+     r"names unknown pool 7 \(known pools: 0\.\.3\)"),
+    ({"ladder": (("same-pool", 0),)}, None, "retry budget"),
+    ({"backoff_base": 0.0}, None, "backoff_base"),
+    ({"backoff_mult": 0.5}, None, "backoff_mult"),
+    ({"backoff_cap": 30.0}, None, "backoff_cap"),
+    ({"od_lease": 0.0}, None, "od_lease"),
+])
+def test_fleet_config_validation(cfg_kw, n_pools, match):
+    with pytest.raises(ValueError, match=match):
+        validate_fleet_config(FleetConfig(**cfg_kw), n_pools)
+
+
+def test_unknown_strategy_lists_known():
+    with pytest.raises(ValueError) as exc:
+        make_fleet_manager(2, strategy="teleport-everything")
+    msg = str(exc.value)
+    assert "teleport-everything" in msg and "diversified" in msg
+
+
+def test_pinned_rung_accepted():
+    validate_fleet_config(FleetConfig(ladder=(("pool:2", 3),)), n_pools=4)
+
+
+# ---------------------------------------------------------------------------
+# planner == per-pool Python oracle (benchmarked pair)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("strategy",
+                         ["diversified", "lowest-price", "single-pool"])
+def test_plan_replenish_matches_reference_oracle(strategy):
+    rng = np.random.default_rng(0)
+    unit = 2.0
+    for trial in range(60):
+        n = int(rng.integers(1, 7))
+        need = int(rng.integers(0, 24))
+        cur = rng.integers(0, 6, size=n)
+        weights = np.where(rng.random(n) < 0.2, 0.0, rng.uniform(0.1, 3.0, n))
+        if not weights.any():
+            weights[0] = 1.0
+        prices = np.round(rng.uniform(0.05, 1.2, n), 2)   # engineered ties
+        bids = np.full(n, 0.6)
+        free = np.round(rng.uniform(0.0, 30.0, n), 1)
+        vec = plan_replenish(need, cur, weights, prices, bids, free, unit,
+                             strategy)
+        ref = plan_replenish_ref(need, cur, weights, prices, bids, free,
+                                 unit, strategy)
+        assert np.array_equal(vec, ref), (strategy, trial)
+        assert vec.sum() <= need
+        # never over-commit a pool's free CPU or an inadmissible pool
+        for p in range(n):
+            if vec[p]:
+                assert prices[p] <= bids[p] + 1e-9 and weights[p] > 0
+                assert vec[p] * unit <= free[p] + 1e-9
+
+
+def test_plan_replenish_ref_rejects_unknown_strategy():
+    with pytest.raises(ValueError, match="no reference walk"):
+        plan_replenish_ref(1, [0], [1.0], [0.1], [0.6], [10.0], 2.0,
+                           strategy="custom")
+
+
+def test_fleet_pool_capacity_matches_reference():
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        m = int(rng.integers(0, 400))
+        vids = rng.permutation(10_000)[:m].astype(np.int64)
+        registry = {
+            "vid": vids,
+            "pool": rng.integers(0, 5, size=m),
+            "cpu": rng.uniform(1.0, 4.0, size=m),
+        }
+        fleet_vids = np.sort(rng.choice(10_000, size=200, replace=False))
+        units, cpu = fleet_pool_capacity(registry, fleet_vids, 5)
+        r_units, r_cpu = fleet_pool_capacity_ref(registry, fleet_vids, 5)
+        assert np.array_equal(units, r_units)
+        assert np.array_equal(cpu, r_cpu)     # bit-identical accumulation
+
+
+# ---------------------------------------------------------------------------
+# the manager: reach target, hold it, degrade through the ladder
+# ---------------------------------------------------------------------------
+def test_fleet_reaches_and_holds_target():
+    eng = scripted_engine([0.1] * 60, [0.1] * 60, tick=10.0)
+    fleet = make_fleet_manager(2, target_capacity=8.0, unit_cpu=2.0)
+    sim = fleet_sim(eng, fleet)
+    m = sim.run(until=100.0)
+
+    assert m.fleet_launches == 4
+    # diversified over uniform weights: 2 units per pool
+    units, cpu = fleet_pool_capacity(
+        sim.pool.market_registry(), np.sort(fleet.slot_vid), 2)
+    assert units.tolist() == [2, 2] and cpu.tolist() == [4.0, 4.0]
+    # first sample is the pre-launch shortfall, then the fleet holds target
+    assert m.fleet_samples[0] == (0.0, 0.0, 8.0)
+    assert all(s[1] == 8.0 for s in m.fleet_samples[1:])
+    rs = m.resilience_stats()
+    assert rs["time_below_target"] == 10.0      # one tick of ramp-up
+    assert rs["shortfall_area"] == 80.0         # 8 CPU × 10 s
+    assert rs["fallback_counts"] == {"launch": 4}
+    # the billing contract bills closed spans only: every VM is still
+    # running (open interval) at end-of-run, so realized cost is zero
+    rs_full = m.resilience_stats(sim.vms, sim.engine, sim.pool)
+    assert rs_full["fleet_spot_cost"] == 0.0
+    assert rs_full["od_spill_cost"] == 0.0
+
+
+def test_fallback_ladder_same_pool_then_cheaper_pool():
+    # pool 0 cheap for 5 ticks then permanently above the bid; pool 1 stays
+    # admissible — the ladder must walk same-pool (burn budget) → cheaper
+    eng = scripted_engine([0.1] * 5 + [10.0] * 60, [0.2] * 65, tick=10.0)
+    fleet = make_fleet_manager(
+        2, strategy="single-pool", target_capacity=4.0, unit_cpu=2.0,
+        pool_weights=(1.0, 0.5),
+        ladder=(("same-pool", 1), ("cheaper-pool", 1)),
+        backoff_base=10.0, backoff_mult=1.0, backoff_cap=10.0)
+    sim = fleet_sim(eng, fleet)
+    m = sim.run(until=200.0)
+
+    # both slots launched in pool 0, were reclaimed by the wave at t=50,
+    # burned the same-pool rung (price 10 > bid 0.6), then landed in pool 1
+    wave = [e for e in m.interruption_events
+            if e.cause == InterruptionCause.PRICE_WAVE]
+    assert len(wave) == 2 and all(e.time == 50.0 for e in wave)
+    assert m.fallback_counts == {"launch": 2, "same-pool": 2,
+                                 "cheaper-pool": 2}
+    assert fleet.slot_pool.tolist() == [1, 1]
+    units, _ = fleet_pool_capacity(
+        sim.pool.market_registry(), np.sort(fleet.slot_vid), 2)
+    assert units.tolist() == [0, 2]
+    # capacity dipped during the episode and recovered
+    assert any(s[1] == 0.0 for s in m.fleet_samples)
+    assert m.fleet_samples[-1][1] == 4.0
+    assert m.fleet_launches == 4     # 2 initial + 2 ladder relaunches
+    # realized billing: the two reclaimed pool-0 incarnations are closed
+    # intervals [0, 50) at price 0.1; the pool-1 relaunches are still open
+    rs = m.resilience_stats(sim.vms, sim.engine, sim.pool)
+    assert rs["fleet_spot_cost"] == pytest.approx(2 * 0.1 * 50 / 3600)
+
+
+def test_on_demand_fallback_lease_and_return_to_spot():
+    eng = scripted_engine([0.1, 0.1] + [10.0] * 19 + [0.1] * 60, tick=10.0)
+    fleet = make_fleet_manager(
+        1, target_capacity=2.0, unit_cpu=2.0,
+        ladder=(("on-demand", 1), ("queue", 99)),
+        backoff_base=10.0, backoff_mult=1.0, backoff_cap=10.0, od_lease=50.0)
+    sim = fleet_sim(eng, fleet)
+    m = sim.run(until=260.0)
+
+    # the spot VM died at the t=20 spike → the ladder's on-demand rung
+    # bridged 50s (price-blind), the lease expired, the slot idled fresh
+    # until the price fell at t=210, then returned to spot
+    assert m.od_spill_launches == 1 and len(m.fleet_od_ids) == 1
+    assert m.fallback_counts["on-demand"] == 1
+    assert m.fleet_launches == 2        # initial spot + post-lease spot
+    od = sim.vms[m.fleet_od_ids[0]]
+    assert od.state is VmState.FINISHED
+    assert od.history[0].start == 20.0 and od.history[0].stop == 70.0
+    spot2 = sim.vms[m.fleet_spot_ids[-1]]
+    assert spot2.state is VmState.RUNNING
+    assert spot2.history[0].start == 210.0
+    rs = m.resilience_stats(sim.vms, sim.engine, sim.pool)
+    assert rs["od_spill_cost"] == pytest.approx(1.0 * 50 / 3600)
+
+
+def test_scale_down_retires_slots_and_lowers_target():
+    eng = scripted_engine([0.1, 0.1] + [10.0] * 60, tick=10.0)
+    fleet = make_fleet_manager(1, target_capacity=4.0, unit_cpu=2.0,
+                               ladder=(("scale-down", 1),))
+    sim = fleet_sim(eng, fleet)
+    m = sim.run(until=300.0)
+
+    assert m.fleet_slots_retired == 2
+    assert fleet.effective_target() == 0.0
+    assert not fleet.wants_tick()
+    assert m.fallback_counts == {"launch": 2, "scale-down": 2}
+    # the sample at the kill tick still measures against the pre-retirement
+    # target — the fleet had not yet chosen to shrink
+    assert (20.0, 0.0, 4.0) in m.fleet_samples
+
+
+def test_exhausted_ladder_retires():
+    # one rung, budget 1, permanently inadmissible: try once, then retire
+    eng = scripted_engine([0.1, 0.1] + [10.0] * 60, tick=10.0)
+    fleet = make_fleet_manager(1, target_capacity=2.0, unit_cpu=2.0,
+                               ladder=(("same-pool", 1),),
+                               backoff_base=10.0, backoff_mult=1.0,
+                               backoff_cap=10.0)
+    sim = fleet_sim(eng, fleet)
+    m = sim.run(until=300.0)
+    assert m.fallback_counts == {"launch": 1, "same-pool": 1}
+    assert m.fleet_slots_retired == 1
+    assert not fleet.wants_tick()
+
+
+# ---------------------------------------------------------------------------
+# composition: hibernate → resume → fallback ladder (chaos chain satellite)
+# ---------------------------------------------------------------------------
+def _chain_run():
+    eng = scripted_engine([0.1] * 60, [0.3] * 60, tick=10.0)
+    fi = FaultInjector([FaultEvent("storm", 30.0, pools=(0,),
+                                   magnitude=1.0)], 2)
+    fleet = make_fleet_manager(
+        2, strategy="single-pool", target_capacity=4.0, unit_cpu=2.0,
+        pool_weights=(1.0, 0.5),
+        ladder=(("same-pool", 2), ("cheaper-pool", 2)),
+        backoff_base=10.0, backoff_mult=1.0, backoff_cap=10.0)
+    sim = fleet_sim(eng, fleet, faults=fi)
+    # a per-VM workload spot VM shares pool 0 with the fleet: the storm
+    # hibernates it (behavior) while terminating the fleet's slots
+    wl = make_spot(10_000, resources(2, 2048, 100, 1000), 100.0, bid=0.9,
+                   pool=0, hibernation_timeout=1e6,
+                   behavior=InterruptionBehavior.HIBERNATE)
+    sim.submit(wl)
+    m = sim.run(until=200.0)
+    return sim, m, wl
+
+
+def test_hibernate_resume_fallback_chain():
+    sim, m, wl = _chain_run()
+    storm = [e for e in m.interruption_events
+             if e.cause == InterruptionCause.FAULT_STORM]
+    # the storm took every pool-0 resident: the workload VM + both slots
+    assert {e.vm_id for e in storm} == {10_000} | set(m.fleet_spot_ids[:2])
+    assert {e.kind for e in storm} == {"hibernate", "terminate"}
+    # per-VM resilience: hibernated, then resumed in the same tick's flush
+    # (pool 0 still clears below its bid) and finished
+    assert wl.interruptions == 1 and len(wl.history) == 2
+    assert wl.history[1].start == 30.0
+    assert wl.state is VmState.FINISHED
+    # fleet resilience: the same-pool rung relaunched both slots at the
+    # storm tick (pool 0 is still admissible — the storm was capacity
+    # reclamation, not a price event)
+    assert m.fallback_counts == {"launch": 2, "same-pool": 2}
+    assert m.fleet_launches == 4
+    assert m.fleet_samples[-1][1] == 4.0
+    rs = m.resilience_stats()
+    assert rs["faults_fired"] == 1
+    assert rs["faults"][0]["kind"] == "storm"
+    # dipped at t=30, recovered by t=40 → 10s recovery
+    assert rs["faults"][0]["recovery_s"] == pytest.approx(10.0)
+    assert not rs["faults"][0]["censored"]
+
+
+def test_chain_two_run_bit_identity():
+    sim1, m1, _ = _chain_run()
+    sim2, m2, _ = _chain_run()
+    assert to_json(dynamic_vm_table(sim1.all_vms())) == \
+        to_json(dynamic_vm_table(sim2.all_vms()))
+    assert m1.interruption_events == m2.interruption_events
+    assert m1.fleet_samples == m2.fleet_samples
+    assert m1.fallback_counts == m2.fallback_counts
+    assert m1.fault_records == m2.fault_records
