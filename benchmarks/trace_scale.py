@@ -17,20 +17,22 @@ import time
 
 from repro.core import SimConfig, make_policy
 from repro.market import TraceConfig, generate_trace, simulate_trace
+from repro.obs import Tracer
 
 from .common import emit
 
 REPS = 3
 
 
-def _one(tr, cfg, flush_mode: str):
+def _one(tr, cfg, flush_mode: str, traced: bool = False):
     best, sim, metrics = float("inf"), None, None
     for _ in range(REPS):
+        obs = (Tracer(keep_records=False, profile=True) if traced else None)
         t0 = time.time()
         sim, metrics = simulate_trace(
             tr, policy=make_policy("hlem-vmp-adjusted"), cfg=cfg,
             sim_config=SimConfig(record_timeline=False,
-                                 flush_mode=flush_mode))
+                                 flush_mode=flush_mode), obs=obs)
         best = min(best, time.time() - t0)
     return best, sim, metrics
 
@@ -65,4 +67,16 @@ def run(quick: bool = True):
         wall_ref * 1e6 / max(metrics_ref.allocations, 1),
         f"batched_speedup={wall_ref / max(wall, 1e-9):.2f}x;"
         f"decisions_match={match}"))
+    # PR 7: same workload with a profile-mode tracer attached
+    # (keep_records=False, so memory stays bounded at trace scale).  CI
+    # gates this row normalized by the same-run untraced headline
+    # (--reference-metric trace/hlem-vmp-adjusted), making the check
+    # machine-independent: it compares tracing *overhead*, not host speed.
+    wall_obs, sim_obs, metrics_obs = _one(tr, cfg, "batched", traced=True)
+    s_obs = metrics_obs.spot_stats(sim_obs.vms)
+    rows.append(emit(
+        "obs/tracing_overhead",
+        wall_obs * 1e6 / max(metrics_obs.allocations, 1),
+        f"overhead={wall_obs / max(wall, 1e-9):.3f}x;"
+        f"metrics_match={s_obs == s and metrics_obs.allocations == metrics.allocations}"))
     return rows

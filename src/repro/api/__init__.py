@@ -48,12 +48,14 @@ from .specs import (
     FaultSpec,
     FleetSpec,
     MigrationSpec,
+    ObsSpec,
     PolicySpec,
     RebidSpec,
     RunSpec,
     ScenarioSpec,
 )
-from .build import build, build_engine, collect_row, resolve_horizon, run_one
+from .build import (build, build_engine, build_tracer, collect_row,
+                    resolve_horizon, run_one)
 from .sweep import (
     aggregate_rows,
     format_report,

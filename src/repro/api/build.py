@@ -25,8 +25,21 @@ from ..market.fleet import make_fleet_manager
 from ..market.migration import make_migration_planner
 from ..market.pools import make_market
 from ..market.pricing import realized_cost_stats
-from .specs import RunSpec, ScenarioSpec
+from ..obs.tracer import Tracer
+from .specs import ObsSpec, RunSpec, ScenarioSpec
 from .workloads import WORKLOAD_REGISTRY
+
+
+def build_tracer(obs: Optional[ObsSpec]) -> Optional[Tracer]:
+    """A fresh :class:`~repro.obs.tracer.Tracer` for an :class:`ObsSpec`,
+    or None when the spec is absent/fully off (the simulator then runs the
+    plain untraced loop).  ``keep_records`` follows ``trace`` — profile- or
+    counters-only modes still time spans but retain no per-span records, so
+    memory stays bounded at trace scale."""
+    if obs is None or not obs.enabled:
+        return None
+    return Tracer(keep_records=obs.trace, profile=obs.profile,
+                  counters_every=obs.counters_every)
 
 
 def build_engine(scenario: ScenarioSpec, seed: int) -> Optional[MarketEngine]:
@@ -72,11 +85,23 @@ def build(spec: RunSpec, seed: int) -> MarketSimulator:
             spec.faults.scenario, scenario.n_pools,
             resolve_horizon(scenario), scenario.tick_interval, seed,
             **dict(spec.faults.params))
+    obs = build_tracer(spec.obs)
     sim = MarketSimulator(
         policy=make_policy(spec.policy.name, **dict(spec.policy.params)),
         config=SimConfig(record_timeline=False, **dict(scenario.sim_params)),
         engine=engine, migration=migration, rebid=rebid,
-        fleet=fleet, faults=faults)
+        fleet=fleet, faults=faults, obs=obs)
+    if obs is not None:
+        # one tracer per run, shared by every subsystem so spans nest and
+        # counters land in a single registry; components are fresh per
+        # build, so instance-level attachment cannot leak across runs
+        sim.policy.tracer = obs
+        if engine is not None:
+            engine.tracer = obs
+        if migration is not None:
+            migration.tracer = obs
+        if fleet is not None:
+            fleet.tracer = obs
     WORKLOAD_REGISTRY.get(scenario.workload)(sim, scenario, seed)
     return sim
 

@@ -18,8 +18,10 @@ CI-gateable artifacts:
   (``FLEET_STRATEGY_REGISTRY``).
 * :class:`FaultSpec`      — fault-injection scenario name + params
   (``FAULT_REGISTRY``).
+* :class:`ObsSpec`        — observability switches (tracing / profiling /
+  counter snapshots, ``repro.obs``).
 * :class:`RunSpec`        — scenario × policy × migration × rebid × fleet ×
-  faults: the unit :func:`repro.api.build` materializes.
+  faults × obs: the unit :func:`repro.api.build` materializes.
 * :class:`ExperimentSpec` — scenario + policy/migration/regime/fleet grid +
   seed list: the unit :func:`repro.api.sweep.run_experiment` fans out.
 
@@ -287,6 +289,52 @@ class FaultSpec(_SpecBase):
                    params=d.get("params", {}))
 
 
+@dataclass(frozen=True)
+class ObsSpec(_SpecBase):
+    """Observability: tracing / profiling / counter snapshots
+    (``repro.obs``).  All three are independent switches on one
+    :class:`~repro.obs.tracer.Tracer`: ``trace`` retains span/instant
+    records for Chrome-trace export, ``profile`` aggregates span wall-times
+    into the per-subsystem self/total table, and ``counters_every``
+    snapshots the counter registry every N simulated seconds.  The default
+    spec is fully off and builds no tracer at all — byte-identical metrics
+    to a pre-observability run."""
+
+    trace: bool = False
+    profile: bool = False
+    #: counter-snapshot cadence in simulated seconds; None = off
+    counters_every: Optional[float] = None
+
+    def __post_init__(self):
+        _set(self, "trace", bool(self.trace))
+        _set(self, "profile", bool(self.profile))
+        if self.counters_every is not None:
+            try:
+                _set(self, "counters_every", float(self.counters_every))
+            except (TypeError, ValueError):
+                raise _spec_error(
+                    f"counters_every must be a number or None "
+                    f"(got {self.counters_every!r})") from None
+            if not self.counters_every > 0:
+                raise _spec_error(
+                    f"counters_every must be > 0 or None "
+                    f"(got {self.counters_every!r})")
+
+    @property
+    def enabled(self) -> bool:
+        return self.trace or self.profile or self.counters_every is not None
+
+    def to_dict(self) -> dict:
+        return {"trace": self.trace, "profile": self.profile,
+                "counters_every": self.counters_every}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ObsSpec":
+        return cls(trace=d.get("trace", False),
+                   profile=d.get("profile", False),
+                   counters_every=d.get("counters_every"))
+
+
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)
 class ScenarioSpec(_SpecBase):
@@ -402,6 +450,8 @@ class RunSpec(_SpecBase):
     rebid: Optional[RebidSpec] = None
     fleet: Optional[FleetSpec] = None
     faults: Optional[FaultSpec] = None
+    #: observability (tracing/profiling/counters); None = fully off
+    obs: Optional[ObsSpec] = None
 
     def __post_init__(self):
         for name, typ in (("scenario", ScenarioSpec), ("policy", PolicySpec),
@@ -412,7 +462,7 @@ class RunSpec(_SpecBase):
             elif not isinstance(getattr(self, name), typ):
                 raise _spec_error(f"{name} must be a {typ.__name__}")
         for name, typ in (("rebid", RebidSpec), ("fleet", FleetSpec),
-                          ("faults", FaultSpec)):
+                          ("faults", FaultSpec), ("obs", ObsSpec)):
             val = getattr(self, name)
             if isinstance(val, Mapping):
                 _set(self, name, typ.from_dict(val))
@@ -455,6 +505,7 @@ class RunSpec(_SpecBase):
             "fleet": self.fleet.to_dict() if self.fleet is not None else None,
             "faults": (self.faults.to_dict()
                        if self.faults is not None else None),
+            "obs": self.obs.to_dict() if self.obs is not None else None,
         }
 
     @classmethod
@@ -462,6 +513,7 @@ class RunSpec(_SpecBase):
         rebid = d.get("rebid")
         fleet = d.get("fleet")
         faults = d.get("faults")
+        obs = d.get("obs")
         return cls(
             scenario=ScenarioSpec.from_dict(d["scenario"]),
             policy=PolicySpec.from_dict(d["policy"]),
@@ -470,6 +522,7 @@ class RunSpec(_SpecBase):
             fleet=FleetSpec.from_dict(fleet) if fleet is not None else None,
             faults=(FaultSpec.from_dict(faults)
                     if faults is not None else None),
+            obs=ObsSpec.from_dict(obs) if obs is not None else None,
         )
 
 

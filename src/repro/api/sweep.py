@@ -25,9 +25,11 @@ import math
 import multiprocessing
 import os
 import sys
+import time
 from typing import Dict, List, Optional
 
 from .build import resolve_horizon, run_one
+from ..obs.manifest import run_manifest
 from .specs import ExperimentSpec, RunSpec
 
 #: two-sided 95% Student-t critical values by degrees of freedom (n - 1);
@@ -156,7 +158,8 @@ def run_experiment(exp: ExperimentSpec, processes: Optional[int] = None,
                    until: Optional[float] = None,
                    progress: bool = False,
                    report_path: Optional[str] = None,
-                   resume: bool = True) -> dict:
+                   resume: bool = True,
+                   manifest: bool = False) -> dict:
     """Run the full grid × seed fan-out and aggregate per cell.
 
     ``processes``: worker count for the multiprocessing pool; ``0`` or ``1``
@@ -171,7 +174,19 @@ def run_experiment(exp: ExperimentSpec, processes: Optional[int] = None,
     existing report at that path whose experiment + horizon match is
     treated as a crash checkpoint: its completed cells are reused verbatim
     and only the remaining cells run — the finished report is byte-identical
-    to an uninterrupted run."""
+    to an uninterrupted run.
+
+    ``progress``: per-job progress lines on **stderr** (stdout stays pure
+    for ``--json`` consumers) with per-cell wall time and a simple ETA
+    extrapolated from this session's completed jobs.
+
+    ``manifest``: attach a :func:`repro.obs.manifest.run_manifest` block
+    (spec hash, git SHA, package versions, wall duration) to the report.
+    Off by default — the manifest carries wall-clock fields, and the
+    *default* report is byte-deterministic (two runs of the same spec are
+    identical artifacts; the determinism tests rely on it).  The CLI turns
+    it on for every report it writes.  Resume ignores the block."""
+    t_session = time.perf_counter()
     cells = exp.cells()
     n_seeds = len(exp.seeds)
     horizon = until if until is not None else resolve_horizon(exp.scenario)
@@ -194,17 +209,33 @@ def run_experiment(exp: ExperimentSpec, processes: Optional[int] = None,
 
     pending: List[dict] = []
     done_jobs = n_done * n_seeds
+    session_jobs = 0                      # jobs actually run this session
+    t_cell = time.perf_counter()          # start of the current cell
 
     def _collect(row: dict) -> None:
-        nonlocal done_jobs
+        nonlocal done_jobs, session_jobs, t_cell
         pending.append(row)
         done_jobs += 1
+        session_jobs += 1
         if progress:
-            print(f"# sweep {done_jobs}/{n_runs}", flush=True)
+            # ETA from this session's throughput only — resumed cells were
+            # free and must not make the estimate optimistic
+            elapsed = time.perf_counter() - t_session
+            rate = elapsed / session_jobs
+            eta = rate * (n_runs - done_jobs)
+            print(f"# sweep {done_jobs}/{n_runs}  "
+                  f"avg {rate:.2f}s/run  eta {eta:.0f}s",
+                  file=sys.stderr, flush=True)
         if len(pending) == n_seeds:       # one whole cell completed
             report_cells.append(
                 _report_cell(exp, cells[len(report_cells)], pending[:]))
             pending.clear()
+            now = time.perf_counter()
+            if progress:
+                print(f"# sweep cell {len(report_cells)}/{len(cells)} "
+                      f"done in {now - t_cell:.2f}s",
+                      file=sys.stderr, flush=True)
+            t_cell = now
             if report_path and len(report_cells) < len(cells):
                 partial = _assemble_report(exp, horizon, n_runs,
                                            report_cells)
@@ -232,6 +263,11 @@ def run_experiment(exp: ExperimentSpec, processes: Optional[int] = None,
             _collect(_run_job(job))
 
     report = _assemble_report(exp, horizon, n_runs, report_cells)
+    if manifest:
+        report["manifest"] = run_manifest(
+            spec_dict=exp.to_dict(), seed=list(exp.seeds),
+            duration_s=time.perf_counter() - t_session,
+            extra={"resumed_cells": n_done})
     if report_path:
         _atomic_write(report, report_path)
     return report

@@ -35,6 +35,7 @@ from .hlem import (
     hlem_select_jax,
 )
 from .hosts import HostPool
+from ..obs.tracer import NULL_TRACER
 from .registry import Registry
 from .types import Vm
 
@@ -74,6 +75,10 @@ def feasibility_masks(vm: Vm, pool: HostPool, now: float):
 
 class AllocationPolicy:
     name = "abstract"
+
+    #: telemetry hook (``repro.obs``); the build layer swaps in the live
+    #: tracer — batched-flush scoring volume feeds the counter registry
+    tracer = NULL_TRACER
 
     def _pick(self, mask: np.ndarray, vm: Vm, pool: HostPool) -> int:
         raise NotImplementedError
@@ -133,6 +138,9 @@ class AllocationPolicy:
         greedy commit loop re-decides only the suffix after each placement,
         so scoring work is one pass per placement instead of per queued VM."""
         nvm = len(vms)
+        if self.tracer.enabled:
+            self.tracer.counters.inc("alloc/batch_calls")
+            self.tracer.counters.inc("alloc/batch_rows", nvm)
         demands = np.empty((nvm, vms[0].demand.shape[0]))
         bids = np.empty(nvm)
         pids = np.empty(nvm, dtype=np.int64)

@@ -37,6 +37,7 @@ from .events import Event, EventKind, EventQueue
 from .hosts import HostPool
 from .metrics import (FaultRecord, InterruptionEvent, Metrics,
                       MigrationEvent, WaveEvent)
+from ..obs.tracer import NULL_TRACER
 from .types import (
     ExecutionInterval,
     Vm,
@@ -64,7 +65,7 @@ class MarketSimulator:
     def __init__(self, policy: Optional[AllocationPolicy] = None,
                  config: Optional[SimConfig] = None,
                  engine=None, migration=None, rebid=None,
-                 fleet=None, faults=None):
+                 fleet=None, faults=None, obs=None):
         """``engine`` — optional :class:`repro.market.engine.MarketEngine`.
         When attached, the simulator runs periodic PRICE_TICK events: each
         tick re-clears every capacity pool's price from live utilization,
@@ -97,8 +98,17 @@ class MarketSimulator:
         deactivate/reactivate their hosts, crunch/spike windows bias the
         engine's tick inputs, and interruption storms reclaim resident spot
         VMs right after the normal price wave.  ``faults=None`` is
-        bit-identical to a fault-less simulator."""
+        bit-identical to a fault-less simulator.
+
+        ``obs`` — optional :class:`repro.obs.tracer.Tracer`.  When enabled,
+        the event loop runs a traced variant that records a span per
+        dispatch, per-kind/per-cause counters, and cadence counter
+        snapshots; subsystem tick phases add nested spans.  The tracer is
+        observation-only (no randomness, no state mutation), so metrics
+        are identical with or without it; ``obs=None`` selects the plain
+        untraced loop with zero added per-event work."""
         self.policy = policy or FirstFit()
+        self.obs = obs if obs is not None else NULL_TRACER
         self.config = config or SimConfig()
         assert self.config.flush_mode in ("batched", "per_vm")
         self.pool = HostPool()
@@ -227,6 +237,8 @@ class MarketSimulator:
             # the chain stopped in a previous run (idle, or queued-only
             # state under an unbounded horizon); resume it for this run
             self._arm_tick(self.now)
+        if self.obs.enabled:
+            return self._run_traced(limit)
         heappop = heapq.heappop
         strict = self.config.strict_invariants
         while heap and heap[0][0] <= limit:
@@ -237,6 +249,50 @@ class MarketSimulator:
                 self.pool.check_invariants(self.now)
         self.now = min(limit, self.now) if limit != float("inf") else self.now
         return self.metrics
+
+    def _run_traced(self, limit: float) -> Metrics:
+        """Traced twin of the ``run`` hot loop: a ``dispatch/<kind>`` span
+        and per-kind counter per event, plus cadence counter snapshots.
+        Kept separate so the untraced loop carries zero added per-event
+        work — selecting the loop body happens once per ``run`` call."""
+        heap = self.queue._heap
+        heappop = heapq.heappop
+        strict = self.config.strict_invariants
+        tr = self.obs
+        counters = tr.counters
+        inc = counters.inc
+        while heap and heap[0][0] <= limit:
+            ev = heappop(heap)[3]
+            t = ev.time
+            self.now = t
+            kind_name = ev.kind.value
+            inc("events/total")
+            inc("events/" + kind_name)
+            tr.begin("event-loop", "dispatch/" + kind_name)
+            self._dispatch(ev)
+            tr.end(t, None)
+            if tr.counters_due(t):
+                tr.snapshot(t, self._obs_gauges())
+            if strict:
+                self.pool.check_invariants(self.now)
+        self.now = min(limit, self.now) if limit != float("inf") else self.now
+        # closing snapshot so the counter timeseries always covers run end
+        tr.snapshot(self.now, self._obs_gauges())
+        return self.metrics
+
+    def _obs_gauges(self) -> Dict[str, float]:
+        """Point-in-time gauges merged into each counter snapshot."""
+        c = self.metrics.state_counts
+        pool = self.pool
+        return {
+            "gauge/queue_depth": len(self.queue._heap),
+            "gauge/registry_size": getattr(pool, "_mk_n", 0) or 0,
+            "gauge/running_spot": c[1],
+            "gauge/running_od": c[2],
+            "gauge/waiting": c[3],
+            "gauge/hibernated": c[4],
+            "gauge/hosts_active": int(np.count_nonzero(pool.active[:pool.n])),
+        }
 
     def _dispatch(self, ev: Event) -> None:
         kind = ev.kind
@@ -281,6 +337,8 @@ class MarketSimulator:
         self._record()
 
     def _try_allocate(self, vm: Vm, fresh: bool) -> bool:
+        if self.obs.enabled:
+            self.obs.counters.inc("alloc/find_host")
         hid, needs_clearing = self.policy.find_host(
             vm, self.pool, self.now, allow_spot_clearing=True
         )
@@ -416,6 +474,8 @@ class MarketSimulator:
         self.metrics.interruption_events.append(
             InterruptionEvent(vm.id, self.now, vm.history[-1].host, kind,
                               cause))
+        if self.obs.enabled:
+            self.obs.counters.inc("interruptions/" + cause)
         self._emit("vm_interrupted", vm=vm, kind=kind)
         self._apply_interruption_behavior(vm, kind)
 
@@ -457,14 +517,27 @@ class MarketSimulator:
         eng = self.engine
         t = self.now
         fi = self.faults
+        tr = self.obs
+        traced = tr.enabled
         if fi is not None:
             # outage transitions first (the utilization signal must see the
             # downed hosts), then crunch/spike biases into the normal tick
+            if traced:
+                tr.begin("market-tick", "tick/faults")
             self._fault_begin_tick(t)
+            if traced:
+                tr.end(t, None)
+                tr.begin("market-tick", "tick/engine")
             prices = eng.tick(self.pool, t, util_bias=fi.util_bias(t),
                               shock_bias=fi.shock_bias(t))
         else:
+            if traced:
+                tr.begin("market-tick", "tick/engine")
             prices = eng.tick(self.pool, t)
+        if traced:
+            tr.end(t, None)
+            tr.counters.inc("ticks")
+            tr.begin("market-tick", "tick/wave")
         self.pool.set_pool_prices(prices)
         m = self.metrics
         m.price_series.extend(
@@ -476,6 +549,11 @@ class MarketSimulator:
                 m.wave_events.append(
                     WaveEvent(t, int(pid), float(prices[pid]),
                               int(counts[pid])))
+            if traced:
+                tr.counters.inc("waves")
+                tr.counters.inc("wave_victims", int(victims.size))
+                tr.instant("market-tick", "wave", t,
+                           {"victims": int(victims.size)})
             w = self.config.warning_time
             if w > 0:
                 vids = [int(v) for v in victims]
@@ -490,11 +568,18 @@ class MarketSimulator:
                     v = self.vms[int(vid)]
                     self._interrupt(v, kind=v.behavior.value,
                                     cause=InterruptionCause.PRICE_WAVE)
+        if traced:
+            tr.end(t, {"victims": int(victims.size)})
         # injected interruption storms land after the ordinary wave — the
         # wave already reclaimed below-bid VMs, the storm takes its share of
         # whoever is left running
         if fi is not None and self._storms_due:
-            self._fault_apply_storms()
+            if traced:
+                tr.begin("market-tick", "tick/storms")
+                self._fault_apply_storms()
+                tr.end(t, None)
+            else:
+                self._fault_apply_storms()
         # capacity freed by the wave (and any price drops, via the gain log)
         # feeds straight back into the queue — victims can land in a cheaper
         # pool within the same tick
@@ -503,13 +588,23 @@ class MarketSimulator:
         # post-flush state and emits MIGRATE_START events at this timestamp
         # (processed after same-time submissions; each start re-validates)
         if self.migration is not None:
-            self._plan_migrations()
+            if traced:
+                tr.begin("market-tick", "tick/migration")
+                self._plan_migrations()
+                tr.end(t, None)
+            else:
+                self._plan_migrations()
         # the fleet manager observes the settled post-wave, post-flush,
         # post-planner state: sample capacity, replace dead slots (its
         # submissions are VM_SUBMIT events at this timestamp, processed
         # after the tick by event priority)
         if self.fleet is not None:
-            self.fleet.on_tick(self, t)
+            if traced:
+                tr.begin("market-tick", "tick/fleet")
+                self.fleet.on_tick(self, t)
+                tr.end(t, None)
+            else:
+                self.fleet.on_tick(self, t)
         self._record()
         # keep ticking while any event or live VM remains (the chain is the
         # only self-scheduling event kind, so it must not outlive the run).
@@ -575,6 +670,8 @@ class MarketSimulator:
         self._migrating[vid] = mev
         self.metrics.migration_events.append(mev)
         self.metrics.migrations_started += 1
+        if self.obs.enabled:
+            self.obs.counters.inc("migrations/started")
         self.queue.push(self.now + self.migration.config.downtime,
                         EventKind.MIGRATE_COMPLETE, (vid, hid),
                         vm.generation)
@@ -613,6 +710,8 @@ class MarketSimulator:
                             vm.id, vm.generation)
             self.metrics.migrations_completed += 1
             self.metrics.migration_downtime += self.now - mev.t_start
+            if self.obs.enabled:
+                self.obs.counters.inc("migrations/completed")
             self._emit("vm_migrated", vm=vm, host=hid)
         else:
             mev.failed = True
@@ -628,6 +727,10 @@ class MarketSimulator:
             self.metrics.interruption_events.append(
                 InterruptionEvent(vid, self.now, vm.history[-1].host, kind,
                                   cause=InterruptionCause.MIGRATION_FAILED))
+            if self.obs.enabled:
+                self.obs.counters.inc(
+                    "interruptions/" + InterruptionCause.MIGRATION_FAILED)
+                self.obs.counters.inc("migrations/failed")
             self._emit("vm_interrupted", vm=vm, kind=kind)
             self._apply_interruption_behavior(vm, kind)
         self._flush_pending()
@@ -696,6 +799,8 @@ class MarketSimulator:
                 self.metrics.interruption_events.append(
                     InterruptionEvent(v.id, self.now, hid,
                                       InterruptionCause.HOST_REMOVED, cause))
+                if self.obs.enabled:
+                    self.obs.counters.inc("interruptions/" + cause)
                 self._apply_interruption_behavior(v, v.behavior.value)
             else:
                 # on-demand VMs are resubmitted as persistent requests
@@ -752,6 +857,18 @@ class MarketSimulator:
     # --------------------------------------------------------- resubmission
     def _flush_pending(self) -> None:
         """Resubmission pass: try to place queued requests (§V-D)."""
+        tr = self.obs
+        if tr.enabled:
+            mode = self.config.flush_mode
+            before = self.metrics.allocations
+            tr.begin("allocation", "flush/" + mode)
+            if mode == "per_vm":
+                self._flush_pending_per_vm()
+            else:
+                self._flush_pending_batched()
+            tr.end(self.now,
+                   {"placed": self.metrics.allocations - before})
+            return
         if self.config.flush_mode == "per_vm":
             self._flush_pending_per_vm()
         else:

@@ -40,6 +40,16 @@ experiments shareable artifacts:
 
   # run an ExperimentSpec JSON file directly (see examples/specs/)
   python -m repro.launch.market_sim --spec examples/specs/migration_sweep.json
+
+Observability (single-run modes): ``--trace-out trace.json`` writes a
+Chrome trace-event file, ``--profile`` / ``--profile-out`` aggregate the
+per-subsystem self/total wall-time table, ``--counters-every 600`` prints a
+live counter line per 600 s of sim time.  Tracing is observation-only —
+the metrics rows are identical with and without it:
+
+  python -m repro.launch.market_sim --market --regimes volatile \\
+      --policy hlem-vmp-adjusted --trace-out results/profile/trace.json \\
+      --profile --counters-every 600
 """
 from __future__ import annotations
 
@@ -54,15 +64,21 @@ from ..api import (
     FaultSpec,
     FleetSpec,
     MigrationSpec,
+    ObsSpec,
     PolicySpec,
     RebidSpec,
     RunSpec,
     ScenarioSpec,
+    collect_row,
     format_report,
+    resolve_horizon,
     run_experiment,
     run_one,
 )
+from ..api import build as build_run
 from ..market import MIGRATION_POLICIES, REGIMES
+from ..obs import format_profile_table, run_manifest, write_chrome_trace
+from ..obs import write_profile
 
 POLICY_SET = ["first-fit", "best-fit", "worst-fit", "hlem-vmp",
               "hlem-vmp-adjusted"]
@@ -91,14 +107,82 @@ def _market_scenario_spec(regime: str, n_pools: int = 4,
         bid=BidSpec(bid_strategy, bid_params), horizon=horizon)
 
 
+def _live_counter_line(sim_t: float, snap: dict) -> None:
+    """The counter tracer's live progress line (stderr — stdout stays a
+    pure document for --json consumers)."""
+    running = int(snap.get("gauge/running_spot", 0)
+                  + snap.get("gauge/running_od", 0))
+    intr = int(sum(v for k, v in snap.items()
+                   if k.startswith("interruptions/")))
+    print(f"# t={sim_t:9.0f}s  events={int(snap.get('events/total', 0)):8d}"
+          f"  running={running:6d}"
+          f"  waiting={int(snap.get('gauge/waiting', 0)):6d}"
+          f"  hibernated={int(snap.get('gauge/hibernated', 0)):5d}"
+          f"  queue={int(snap.get('gauge/queue_depth', 0)):6d}"
+          f"  interruptions={intr:6d}",
+          file=sys.stderr, flush=True)
+
+
+def _emit_obs_artifacts(sim, spec: RunSpec, seed: int, args,
+                        duration_s: float) -> dict:
+    """Write/print the run's observability artifacts per the CLI flags;
+    returns the extra blocks (counters) to merge into a JSON document."""
+    tr = sim.obs
+    if not tr.enabled:
+        return {}
+    man = run_manifest(spec_dict=spec.to_dict(), seed=seed,
+                       duration_s=duration_s)
+    if args.trace_out:
+        write_chrome_trace(tr, args.trace_out, manifest=man)
+        print(f"# wrote {args.trace_out}", file=sys.stderr)
+    if args.profile_out:
+        write_profile(tr, args.profile_out, manifest=man)
+        print(f"# wrote {args.profile_out}", file=sys.stderr)
+    if args.profile:
+        print(format_profile_table(tr), file=sys.stderr)
+    extra = {}
+    if args.counters_every:
+        extra["counters"] = {
+            "every": args.counters_every,
+            "series": [{"t": round(t, 3), "values": snap}
+                       for t, _wall, snap in tr.counters.series],
+            "final": dict(tr.counters.values),
+        }
+    return extra
+
+
+def _run_one_obs(spec: RunSpec, seed: int, until, args, sink: dict) -> dict:
+    """Single-run unit with a live tracer: build, attach the live counter
+    line, run, collect the standard row, then emit trace/profile/counters
+    artifacts.  The metrics row is identical to :func:`repro.api.run_one`
+    (tracing is observation-only; regression-tested in ``tests/obs``)."""
+    sim = build_run(spec, seed)
+    if args.counters_every and not args.json:
+        sim.obs.on_snapshot = _live_counter_line
+    horizon = until if until is not None else resolve_horizon(spec.scenario)
+    t0 = time.time()
+    metrics = sim.run(until=horizon)
+    wall = time.time() - t0
+    row = collect_row(sim, metrics, spec, seed)
+    row["wall_s"] = round(wall, 1)
+    sink.update(_emit_obs_artifacts(sim, spec, seed, args, wall))
+    return row
+
+
 def run_synthetic(policy_name: str, seed: int, until: float,
-                  selector: str = "list_order", alpha: float = -0.5) -> dict:
+                  selector: str = "list_order", alpha: float = -0.5,
+                  obs: ObsSpec | None = None, cli_args=None,
+                  obs_sink: dict | None = None) -> dict:
     """One §VII-E synthetic run through the scenario API."""
     spec = RunSpec(
         scenario=ScenarioSpec(
             workload="synthetic",
             sim_params={"interruption_selector": selector}),
-        policy=_policy_spec(policy_name, alpha))
+        policy=_policy_spec(policy_name, alpha),
+        obs=obs)
+    if obs is not None and obs.enabled:
+        return _run_one_obs(spec, seed, until, cli_args,
+                            obs_sink if obs_sink is not None else {})
     t0 = time.time()
     stats = run_one(spec, seed, until=until)
     stats["wall_s"] = round(time.time() - t0, 1)
@@ -110,22 +194,37 @@ def run_market(policy_name: str, regime: str, seed: int, until: float = 14400.0,
                tick_interval: float = 60.0, alpha: float = -0.5,
                migration: str = "none", rebid: bool = False,
                from_advisor: bool = True, fleet: FleetSpec | None = None,
-               faults: FaultSpec | None = None) -> dict:
+               faults: FaultSpec | None = None,
+               obs: ObsSpec | None = None, cli_args=None,
+               obs_sink: dict | None = None) -> dict:
     """One engine-coupled run over the market scenario through the scenario
     API (fresh engine/planner per call; ``migration="none"`` is
     bit-identical to no planner; ``rebid`` switches on adaptive re-bidding
-    on hibernation; ``fleet``/``faults`` attach the resilience layer)."""
+    on hibernation; ``fleet``/``faults`` attach the resilience layer;
+    ``obs`` attaches the telemetry tracer — metrics rows are identical
+    either way)."""
     spec = RunSpec(
         scenario=_market_scenario_spec(regime, n_pools, bid_strategy,
                                        tick_interval, from_advisor),
         policy=_policy_spec(policy_name, alpha),
         migration=MigrationSpec(migration),
         rebid=RebidSpec() if rebid else None,
-        fleet=fleet, faults=faults)
+        fleet=fleet, faults=faults, obs=obs)
+    if obs is not None and obs.enabled:
+        return _run_one_obs(spec, seed, until, cli_args,
+                            obs_sink if obs_sink is not None else {})
     t0 = time.time()
     row = run_one(spec, seed, until=until)
     row["wall_s"] = round(time.time() - t0, 1)
     return row
+
+
+def _cli_manifest(args, t0: float) -> dict:
+    """The provenance block for CLI-assembled (possibly multi-row) runs:
+    the manifest's spec dict is the parsed CLI namespace, so the hash
+    pins the exact flag combination that produced the document."""
+    return run_manifest(spec_dict=dict(sorted(vars(args).items())),
+                        seed=args.seed, duration_s=time.time() - t0)
 
 
 def _print_market_rows(rows) -> None:
@@ -159,7 +258,7 @@ def _sweep_and_report(exp: ExperimentSpec, args) -> int:
     report = run_experiment(exp, processes=args.workers,
                             progress=not args.json,
                             report_path=args.report or None,
-                            resume=not args.fresh)
+                            resume=not args.fresh, manifest=True)
     if args.report:
         # stderr keeps --json stdout a pure JSON document
         print(f"# wrote {args.report}", file=sys.stderr)
@@ -188,6 +287,23 @@ def main(argv=None) -> int:
     ap.add_argument("--spot", type=int, default=1000)
     ap.add_argument("--days", type=float, default=0.25)
     ap.add_argument("--json", action="store_true")
+    # observability (single-run modes; see README "Observability")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event JSON of the run here "
+                         "(open in chrome://tracing or Perfetto); single-run "
+                         "modes only")
+    ap.add_argument("--profile", action="store_true",
+                    help="aggregate span wall-times and print the "
+                         "per-subsystem self/total table to stderr")
+    ap.add_argument("--profile-out", default="",
+                    help="write the profile report JSON here "
+                         "(implies --profile aggregation)")
+    ap.add_argument("--counters-every", type=float, default=None,
+                    metavar="SECS",
+                    help="snapshot live counters every SECS of sim time; "
+                         "prints a progress line per snapshot to stderr "
+                         "(suppressed under --json; the series lands in the "
+                         "JSON document instead)")
     # market-engine mode
     ap.add_argument("--market", action="store_true",
                     help="run the dynamic market engine across price regimes")
@@ -247,6 +363,16 @@ def main(argv=None) -> int:
     if args.report and not (args.sweep or args.spec):
         ap.error("--report only applies to sweep modes "
                  "(--sweep N or --spec FILE)")
+    obs_spec = None
+    if (args.trace_out or args.profile or args.profile_out
+            or args.counters_every is not None):
+        if args.sweep or args.spec:
+            ap.error("--trace-out/--profile/--profile-out/--counters-every "
+                     "apply to single runs only (not --sweep/--spec)")
+        obs_spec = ObsSpec(trace=bool(args.trace_out),
+                           profile=bool(args.profile or args.profile_out),
+                           counters_every=args.counters_every)
+    t_main = time.time()
 
     if args.spec:
         return _sweep_and_report(ExperimentSpec.load(args.spec), args)
@@ -294,7 +420,13 @@ def main(argv=None) -> int:
 
         if args.fleet == "compare":
             ap.error("--fleet compare requires --sweep N")
+        if obs_spec is not None and (len(regimes) > 1 or len(policies) > 1
+                                     or len(migrations) > 1):
+            ap.error("observability flags trace a single run — pick one "
+                     "regime × policy × migration cell (e.g. --regimes "
+                     "volatile --policy hlem-vmp-adjusted --migration none)")
         rows = []
+        obs_sink: dict = {}
         for regime in regimes:
             for p in policies:
                 for mig in migrations:
@@ -305,20 +437,30 @@ def main(argv=None) -> int:
                         tick_interval=args.tick, alpha=args.alpha,
                         migration=mig, rebid=args.rebid,
                         from_advisor=not args.flat_volatility,
-                        fleet=fleet, faults=faults))
+                        fleet=fleet, faults=faults,
+                        obs=obs_spec, cli_args=args, obs_sink=obs_sink))
         if args.json:
-            print(json.dumps(rows, indent=1))
+            doc = {"rows": rows, "manifest": _cli_manifest(args, t_main)}
+            doc.update(obs_sink)
+            print(json.dumps(doc, indent=1))
         else:
             _print_market_rows(rows)
         return 0
 
     if args.scenario == "synthetic":
         policies = POLICY_SET if args.policy == "all" else [args.policy]
+        if obs_spec is not None and len(policies) > 1:
+            ap.error("observability flags trace a single run — pick one "
+                     "--policy")
         until = args.until if args.until is not None else 3000.0
+        obs_sink: dict = {}
         rows = [run_synthetic(p, args.seed, until, args.selector,
-                              args.alpha) for p in policies]
+                              args.alpha, obs=obs_spec, cli_args=args,
+                              obs_sink=obs_sink) for p in policies]
         if args.json:
-            print(json.dumps(rows, indent=1))
+            doc = {"rows": rows, "manifest": _cli_manifest(args, t_main)}
+            doc.update(obs_sink)
+            print(json.dumps(doc, indent=1))
         else:
             for r in rows:
                 print(f"{r['policy']:20s} interruptions={r['interruptions']:5d} "
@@ -338,14 +480,20 @@ def main(argv=None) -> int:
                              "sim_days": args.days, "n_spot": args.spot}),
         policy=_policy_spec(
             args.policy if args.policy != "all" else "hlem-vmp-adjusted",
-            args.alpha))
-    from ..api import build, collect_row
+            args.alpha),
+        obs=obs_spec)
     t0 = time.time()
-    sim = build(spec, args.seed)
+    sim = build_run(spec, args.seed)
+    if args.counters_every is not None:
+        sim.obs.on_snapshot = _live_counter_line
     metrics = sim.run(until=args.until)
+    wall = time.time() - t0
     stats = collect_row(sim, metrics, spec, args.seed)
     stats.update(machines=args.machines, n_vms=len(sim.vms),
-                 wall_s=round(time.time() - t0, 1))
+                 wall_s=round(wall, 1))
+    stats.update(_emit_obs_artifacts(sim, spec, args.seed, args, wall))
+    stats["manifest"] = run_manifest(spec_dict=spec.to_dict(),
+                                     seed=args.seed, duration_s=wall)
     print(json.dumps(stats, indent=1))
     return 0
 

@@ -55,6 +55,7 @@ from .price_process import (
     MarketState,
     ScalarProcessAdapter,
 )
+from ..obs.tracer import NULL_TRACER
 
 #: per-pool shock streams are drawn in blocks of this many ticks (one
 #: ``standard_normal(block)`` call per pool per block — stream-identical to
@@ -81,6 +82,9 @@ class MarketEngine:
 
     def __init__(self, config: MarketConfig):
         self.config = config
+        #: telemetry hook (``repro.obs``); the build layer swaps in the
+        #: live tracer, instrumentation guards on ``tracer.enabled``
+        self.tracer = NULL_TRACER
         self.n_pools = len(config.pools)
         assert self.n_pools >= 1, "market needs at least one pool"
         self.tick_interval = float(config.tick_interval)
@@ -224,6 +228,12 @@ class MarketEngine:
         self._ts_buf[k] = now
         if self._groups is None:
             self._build_groups()
+        tr = self.tracer
+        traced = tr.enabled
+        if traced:
+            tr.begin("market-engine",
+                     "engine/families" if self.use_vectorized
+                     else "engine/scalar-walk")
         if self.use_vectorized:
             for g in self._groups:
                 fam, idx, state = g
@@ -238,6 +248,8 @@ class MarketEngine:
                 else:
                     p = proc.price(float(util[i]))
                 self.prices[i] = p
+        if traced:
+            tr.end(now, None)
         self._ph_buf[:, k] = self.prices
         self._n_ticks = k + 1
         return self.prices
@@ -287,6 +299,9 @@ class MarketEngine:
         t0s = np.asarray(t0s, dtype=np.float64)
         t1s = np.asarray(t1s, dtype=np.float64)
         b = pids.size
+        if self.tracer.enabled:
+            self.tracer.counters.inc("billing/calls")
+            self.tracer.counters.inc("billing/spans", int(b))
         out = np.zeros(b)
         k = self._n_ticks
         if b == 0 or k == 0:

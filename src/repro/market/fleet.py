@@ -40,6 +40,7 @@ import numpy as np
 from ..core.registry import Registry
 from ..core.types import (InterruptionBehavior, VmState, make_on_demand,
                           make_spot, resources)
+from ..obs.tracer import NULL_TRACER
 
 _EPS = 1e-9
 
@@ -393,6 +394,10 @@ class FleetManager:
     fleet's whole job.  Stateful across one run; use a fresh manager per
     simulation, like the engine."""
 
+    #: telemetry hook (``repro.obs``); the build layer swaps in the live
+    #: tracer — rung hits and launches feed the counter registry
+    tracer = NULL_TRACER
+
     def __init__(self, config: FleetConfig, n_pools: int):
         validate_fleet_config(config, n_pools)
         FLEET_STRATEGY_REGISTRY.get(config.strategy)   # fail fast
@@ -513,6 +518,8 @@ class FleetManager:
             for s, p in zip(fresh, targets):
                 m.fallback_counts["launch"] = (
                     m.fallback_counts.get("launch", 0) + 1)
+                if self.tracer.enabled:
+                    self.tracer.counters.inc("fleet/rung/launch")
                 self._launch_spot(sim, s, p, now, bids, free_cpu)
         # -- episode slots: one ladder attempt each ------------------------
         for s in due:
@@ -538,6 +545,10 @@ class FleetManager:
         m = sim.metrics
         rung = self._ladder[int(self.slot_rung[s])][0]
         m.fallback_counts[rung] = m.fallback_counts.get(rung, 0) + 1
+        if self.tracer.enabled:
+            self.tracer.counters.inc("fleet/rung/" + rung)
+            self.tracer.instant("fleet", "rung/" + rung, now,
+                                {"slot": int(s)})
         if rung == "scale-down":
             self._retire(sim, s)
             return

@@ -55,6 +55,7 @@ import numpy as np
 
 from . import risk
 from ..core.registry import Registry
+from ..obs.tracer import NULL_TRACER
 from .price_process import supply_curve_slope
 
 MIGRATION_POLICIES = ("none", "greedy-cheapest", "gradient-aware",
@@ -125,6 +126,10 @@ class MigrationPlan:
 class MigrationPlanner:
     """Scores the market registry each tick and emits batched plans."""
 
+    #: telemetry hook (``repro.obs``); the build layer swaps in the live
+    #: tracer — a class attribute so planner construction stays untouched
+    tracer = NULL_TRACER
+
     def __init__(self, config: MigrationConfig | None = None):
         self.config = config or MigrationConfig()
 
@@ -148,6 +153,18 @@ class MigrationPlanner:
         shifts the destination's effective price by the clearing curve's
         slope, so the planner's own herd prices itself out of a destination
         before it can spike it.  Fully deterministic, no RNG."""
+        tr = self.tracer
+        if not tr.enabled:
+            return self._plan_impl(host_pool, engine, now, inflight_per_pool)
+        tr.begin("migration", "plan/" + self.config.policy)
+        plans = self._plan_impl(host_pool, engine, now, inflight_per_pool)
+        if plans:
+            tr.counters.inc("migrations/planned", len(plans))
+        tr.end(now, {"plans": len(plans)})
+        return plans
+
+    def _plan_impl(self, host_pool, engine, now: float,
+                   inflight_per_pool: np.ndarray) -> List[MigrationPlan]:
         cfg = self.config
         if cfg.policy == "none":
             return []

@@ -76,6 +76,9 @@ def realized_cost_stats(vms: Iterable[Vm], engine, host_pool,
     order as the historical per-VM walk.
     """
     model = model or PriceModel()
+    tr = engine.tracer
+    if tr.enabled:
+        tr.begin("billing", "realized_cost")
     total = od_equiv = wasted = spot_cost = 0.0
     pool_of = host_pool.pool_of
     vm_list = list(vms)
@@ -115,6 +118,10 @@ def realized_cost_stats(vms: Iterable[Vm], engine, host_pool,
         spot_cost += c
         if vm.state is VmState.TERMINATED:
             wasted += c
+    if tr.enabled:
+        # post-run call: stamp with the last tick time, not a live clock
+        sim_t = float(engine.tick_times()[-1]) if engine.n_ticks else 0.0
+        tr.end(sim_t, {"intervals": len(pids)})
     return {
         "cost": total,
         "od_equivalent": od_equiv,

@@ -199,16 +199,23 @@ def simulate_trace(
     engine=None,
     migration=None,
     rebid=None,
+    obs=None,
 ):
     """Run the market simulator on a trace. Returns (simulator, metrics).
-    ``engine`` / ``migration`` / ``rebid`` pass through to
+    ``engine`` / ``migration`` / ``rebid`` / ``obs`` pass through to
     :class:`MarketSimulator` (all default off — the paper's §VII-D setup)."""
     cfg = cfg or TraceConfig()
     sim = MarketSimulator(
         policy=policy or FirstFit(),
         config=sim_config or SimConfig(record_timeline=False),
-        engine=engine, migration=migration, rebid=rebid,
+        engine=engine, migration=migration, rebid=rebid, obs=obs,
     )
+    if obs is not None and obs.enabled:
+        sim.policy.tracer = obs
+        if engine is not None:
+            engine.tracer = obs
+        if migration is not None:
+            migration.tracer = obs
     wire_trace(sim, tr, cfg)
     metrics = sim.run(until=until)
     return sim, metrics

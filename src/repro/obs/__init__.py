@@ -1,0 +1,28 @@
+"""Zero-dependency runtime telemetry: tracing, counters, profiles, manifests.
+
+Public surface:
+
+* :class:`Tracer` / :data:`NULL_TRACER` — span/instant/counter recorder
+  and its inert default (``repro.obs.tracer``).
+* :func:`write_chrome_trace` / :func:`validate_chrome_trace` — Chrome
+  trace-event JSON export for Perfetto / chrome://tracing
+  (``repro.obs.export``).
+* :func:`profile_table` / :func:`write_profile` /
+  :func:`format_profile_table` — per-subsystem self/total wall-time
+  breakdown (``repro.obs.profile``).
+* :func:`run_manifest` / :func:`spec_hash` — self-describing metadata
+  blocks for committed artifacts (``repro.obs.manifest``).
+"""
+from .tracer import NULL_TRACER, Counters, NullTracer, Tracer
+from .export import chrome_trace, validate_chrome_trace, write_chrome_trace
+from .profile import (format_profile_table, profile_report, profile_table,
+                      write_profile)
+from .manifest import run_manifest, spec_hash
+
+__all__ = [
+    "Tracer", "NullTracer", "NULL_TRACER", "Counters",
+    "chrome_trace", "write_chrome_trace", "validate_chrome_trace",
+    "profile_table", "profile_report", "write_profile",
+    "format_profile_table",
+    "run_manifest", "spec_hash",
+]

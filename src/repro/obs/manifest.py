@@ -1,0 +1,80 @@
+"""Run manifests: make every committed metrics/report JSON self-describing.
+
+A manifest answers "what produced this file?" months later: the seed(s),
+the full spec dict plus a content hash (so two artifacts are comparable
+at a glance), the git SHA if the tree is a checkout, the versions of the
+packages whose numerics matter, and the wall-clock duration of the run.
+
+Everything degrades gracefully: no git, no jax, no installed-package
+metadata — the corresponding fields are simply ``null``.  The manifest is
+*additive* metadata, deliberately excluded from determinism comparisons
+(the sweep runner's byte-identity tests run with ``manifest=False``).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import platform
+import subprocess
+import sys
+from typing import Any, Dict, Optional
+
+MANIFEST_VERSION = 1
+
+
+def spec_hash(spec_dict: Optional[dict]) -> Optional[str]:
+    """Content hash of a spec's canonical JSON (sorted keys)."""
+    if spec_dict is None:
+        return None
+    blob = json.dumps(spec_dict, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode("utf-8")).hexdigest()[:16]
+
+
+def git_sha(cwd: Optional[str] = None) -> Optional[str]:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=cwd, capture_output=True,
+            text=True, timeout=5)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return None
+
+
+def _pkg_version(name: str) -> Optional[str]:
+    try:
+        from importlib import metadata
+        return metadata.version(name)
+    except Exception:
+        return None
+
+
+def package_versions() -> Dict[str, Optional[str]]:
+    return {
+        "python": platform.python_version(),
+        "numpy": _pkg_version("numpy"),
+        "jax": _pkg_version("jax"),
+    }
+
+
+def run_manifest(spec_dict: Optional[dict] = None,
+                 seed: Any = None,
+                 duration_s: Optional[float] = None,
+                 extra: Optional[dict] = None) -> dict:
+    """Assemble the manifest block attached to metrics/report JSON."""
+    m: Dict[str, Any] = {
+        "manifest_version": MANIFEST_VERSION,
+        "seed": seed,
+        "spec": spec_dict,
+        "spec_hash": spec_hash(spec_dict),
+        "git_sha": git_sha(),
+        "versions": package_versions(),
+        "platform": platform.platform(),
+        "argv": list(sys.argv),
+        "duration_s": (round(duration_s, 6)
+                       if duration_s is not None else None),
+    }
+    if extra:
+        m.update(extra)
+    return m

@@ -1,0 +1,107 @@
+"""Run manifests, ObsSpec validation/round-trip, and sweep manifest opt-in
+(the default report stays manifest-free so byte-determinism holds)."""
+import json
+
+import pytest
+
+from repro.api import (
+    ExperimentSpec,
+    ObsSpec,
+    PolicySpec,
+    RunSpec,
+    ScenarioSpec,
+    run_experiment,
+)
+from repro.obs import run_manifest, spec_hash
+
+UNTIL = 600.0
+
+
+# -- ObsSpec ------------------------------------------------------------------
+def test_obs_spec_roundtrip():
+    spec = ObsSpec(trace=True, profile=True, counters_every=300.0)
+    assert ObsSpec.from_dict(spec.to_dict()) == spec
+    run = RunSpec(scenario=ScenarioSpec(workload="synthetic"),
+                  policy=PolicySpec("first-fit"), obs=spec)
+    again = RunSpec.from_dict(json.loads(run.to_json()))
+    assert again.obs == spec and again == run
+    # absent obs survives the round-trip as absent
+    bare = RunSpec(scenario=ScenarioSpec(workload="synthetic"),
+                   policy=PolicySpec("first-fit"))
+    assert RunSpec.from_dict(bare.to_dict()).obs is None
+
+
+def test_obs_spec_enabled_and_validation():
+    assert not ObsSpec().enabled
+    assert ObsSpec(trace=True).enabled
+    assert ObsSpec(profile=True).enabled
+    assert ObsSpec(counters_every=60.0).enabled
+    with pytest.raises(ValueError):
+        ObsSpec(counters_every=0.0)
+    with pytest.raises(ValueError):
+        ObsSpec(counters_every=-1.0)
+    with pytest.raises(ValueError):
+        ObsSpec(counters_every="often")
+    # mapping coercion, as for every other sub-spec
+    run = RunSpec.from_dict({
+        "scenario": {"workload": "synthetic"},
+        "policy": {"name": "first-fit"},
+        "obs": {"trace": True}})
+    assert isinstance(run.obs, ObsSpec) and run.obs.trace
+
+
+# -- manifest block -----------------------------------------------------------
+def test_run_manifest_fields():
+    m = run_manifest(spec_dict={"a": 1}, seed=7, duration_s=1.23456789,
+                     extra={"resumed_cells": 2})
+    assert m["manifest_version"] == 1
+    assert m["seed"] == 7
+    assert m["spec"] == {"a": 1}
+    assert m["spec_hash"] == spec_hash({"a": 1})
+    assert m["duration_s"] == 1.234568
+    assert m["resumed_cells"] == 2
+    assert m["versions"]["python"]
+    # the repo is a git checkout, so the SHA resolves here
+    assert m["git_sha"] is None or len(m["git_sha"]) == 40
+
+
+def test_spec_hash_canonical():
+    # key order must not matter; content must
+    assert spec_hash({"a": 1, "b": 2}) == spec_hash({"b": 2, "a": 1})
+    assert spec_hash({"a": 1}) != spec_hash({"a": 2})
+    assert spec_hash(None) is None
+    assert len(spec_hash({})) == 16
+
+
+# -- sweep integration --------------------------------------------------------
+def _mini():
+    return ExperimentSpec(
+        name="obs-mini",
+        scenario=ScenarioSpec(workload="synthetic", horizon=UNTIL),
+        policies=(PolicySpec("first-fit"),),
+        seeds=(0, 1))
+
+
+def test_sweep_manifest_opt_in():
+    plain = run_experiment(_mini(), processes=0)
+    assert "manifest" not in plain          # default stays byte-deterministic
+    with_m = run_experiment(_mini(), processes=0, manifest=True)
+    man = with_m["manifest"]
+    assert man["spec"] == _mini().to_dict()
+    assert man["spec_hash"] == spec_hash(_mini().to_dict())
+    assert man["seed"] == [0, 1]
+    assert man["duration_s"] > 0
+    # the manifest is additive: cells are unchanged
+    assert with_m["cells"] == plain["cells"]
+
+
+def test_sweep_manifest_excluded_from_resume_matching(tmp_path):
+    path = str(tmp_path / "rep.json")
+    first = run_experiment(_mini(), processes=0, report_path=path,
+                           manifest=True)
+    # a resumed run must accept the manifest-bearing checkpoint and reuse
+    # every cell (manifest compares by experiment + horizon only)
+    second = run_experiment(_mini(), processes=0, report_path=path,
+                            manifest=True)
+    assert second["cells"] == first["cells"]
+    assert second["manifest"]["resumed_cells"] == len(first["cells"])
