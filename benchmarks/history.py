@@ -1,0 +1,151 @@
+"""Cross-PR benchmark trajectory: aggregate committed ``BENCH_*.json``
+artifacts into one per-metric history table.
+
+  python -m benchmarks.history                       # print markdown
+  python -m benchmarks.history --out results/bench/TRAJECTORY.md
+
+Every PR commits a ``results/bench/BENCH_<label>.json`` snapshot (see
+``benchmarks/run.py``); this module lines their ``us_per_call`` rows up
+side by side so a metric's drift across the PR sequence is one glance —
+the complement to ``check_regression``'s pairwise CI gate.  Labels are
+ordered ``seed`` first, then ``prN`` numerically, then anything else
+alphabetically; metrics appear in first-seen order grouped by their
+``<group>/`` prefix.  Cells are blank where an artifact predates the
+metric (benchmarks accrete with the subsystems they measure).
+
+The table is pure text derived from committed artifacts — regenerate
+after adding a snapshot:
+
+  python -m benchmarks.run --quick --label prN \\
+      --json results/bench/BENCH_prN.json
+  python -m benchmarks.history --out results/bench/TRAJECTORY.md
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+from typing import Dict, List, Optional, Tuple
+
+
+def _label_key(label: str) -> Tuple[int, float, str]:
+    """Sort key: seed < pr1 < pr2 < ... < pr10 < everything else."""
+    if label == "seed":
+        return (0, 0.0, "")
+    m = re.fullmatch(r"pr(\d+)", label)
+    if m:
+        return (1, float(m.group(1)), "")
+    return (2, 0.0, label)
+
+
+def load_snapshots(bench_dir: str) -> List[dict]:
+    """All ``BENCH_*.json`` artifacts under ``bench_dir`` in PR order.
+    Unreadable files are skipped with a stderr note (a half-written
+    artifact must not take the whole table down)."""
+    snaps = []
+    for path in glob.glob(os.path.join(bench_dir, "BENCH_*.json")):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"# skipping {path}: {e}", file=sys.stderr)
+            continue
+        label = data.get("label") or os.path.basename(path)[6:-5]
+        snaps.append({"label": str(label), "path": path,
+                      "results": data.get("results", [])})
+    snaps.sort(key=lambda s: _label_key(s["label"]))
+    return snaps
+
+
+def trajectory(snaps: List[dict]) -> Tuple[List[str], List[str],
+                                           Dict[str, Dict[str, float]]]:
+    """``(labels, metric_names, values[metric][label] -> us_per_call)``.
+    Metric order is first appearance across the ordered snapshots."""
+    labels = [s["label"] for s in snaps]
+    metrics: List[str] = []
+    values: Dict[str, Dict[str, float]] = {}
+    for s in snaps:
+        for r in s["results"]:
+            name = r.get("name")
+            if not name or "us_per_call" not in r:
+                continue
+            if name not in values:
+                metrics.append(name)
+                values[name] = {}
+            values[name][s["label"]] = float(r["us_per_call"])
+    return labels, metrics, values
+
+
+def _fmt(us: Optional[float]) -> str:
+    if us is None:
+        return ""
+    if us >= 1000.0:
+        return f"{us / 1000.0:.2f}ms"
+    return f"{us:.1f}us"
+
+
+def format_trajectory_md(bench_dir: str = "results/bench") -> str:
+    """The full markdown document: one table per metric group (the
+    ``<group>/`` prefix), one column per committed snapshot, plus a
+    last-vs-first drift column for rows present in both."""
+    snaps = load_snapshots(bench_dir)
+    if not snaps:
+        return ("# Benchmark trajectory\n\nNo BENCH_*.json artifacts "
+                f"found under `{bench_dir}`.\n")
+    labels, metrics, values = trajectory(snaps)
+    lines = [
+        "# Benchmark trajectory",
+        "",
+        "`us_per_call` of every benchmark row across the committed",
+        f"`BENCH_*.json` snapshots ({', '.join(labels)}).  Blank cells:",
+        "the metric did not exist yet.  *drift* compares the newest",
+        "snapshot against the oldest one carrying the row (wall-clock —",
+        "machine-dependent; the CI gate normalizes, this table does not).",
+        "",
+        "Regenerate: `python -m benchmarks.history --out "
+        "results/bench/TRAJECTORY.md`",
+    ]
+    groups: List[str] = []
+    for name in metrics:
+        g = name.split("/", 1)[0]
+        if g not in groups:
+            groups.append(g)
+    for g in groups:
+        rows = [m for m in metrics if m.split("/", 1)[0] == g]
+        lines += ["", f"## {g}", "",
+                  "| metric | " + " | ".join(labels) + " | drift |",
+                  "|---" * (len(labels) + 2) + "|"]
+        for m in rows:
+            vals = values[m]
+            cells = [_fmt(vals.get(lb)) for lb in labels]
+            present = [vals[lb] for lb in labels if lb in vals]
+            drift = ""
+            if len(present) >= 2 and present[0] > 0:
+                drift = f"{present[-1] / present[0]:.2f}x"
+            lines.append("| " + " | ".join([f"`{m}`"] + cells + [drift])
+                         + " |")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench-dir", default="results/bench",
+                    help="directory holding the BENCH_*.json snapshots")
+    ap.add_argument("--out", default="",
+                    help="write the markdown here instead of stdout")
+    args = ap.parse_args(argv)
+    md = format_trajectory_md(args.bench_dir)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(md)
+        print(f"# wrote {args.out}", file=sys.stderr)
+    else:
+        print(md, end="")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

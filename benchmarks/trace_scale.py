@@ -17,22 +17,25 @@ import time
 
 from repro.core import SimConfig, make_policy
 from repro.market import TraceConfig, generate_trace, simulate_trace
-from repro.obs import Tracer
+from repro.obs import EventLog, Tracer
 
 from .common import emit
 
 REPS = 3
 
 
-def _one(tr, cfg, flush_mode: str, traced: bool = False):
+def _one(tr, cfg, flush_mode: str, traced: bool = False,
+         events: bool = False):
     best, sim, metrics = float("inf"), None, None
     for _ in range(REPS):
         obs = (Tracer(keep_records=False, profile=True) if traced else None)
+        evl = EventLog() if events else None
         t0 = time.time()
         sim, metrics = simulate_trace(
             tr, policy=make_policy("hlem-vmp-adjusted"), cfg=cfg,
             sim_config=SimConfig(record_timeline=False,
-                                 flush_mode=flush_mode), obs=obs)
+                                 flush_mode=flush_mode), obs=obs,
+            events=evl)
         best = min(best, time.time() - t0)
     return best, sim, metrics
 
@@ -79,4 +82,16 @@ def run(quick: bool = True):
         wall_obs * 1e6 / max(metrics_obs.allocations, 1),
         f"overhead={wall_obs / max(wall, 1e-9):.3f}x;"
         f"metrics_match={s_obs == s and metrics_obs.allocations == metrics.allocations}"))
+    # PR 8: same workload with the event flight recorder attached.  Same
+    # normalization scheme as obs/tracing_overhead: CI gates this row
+    # against the same-run untraced headline, so the check measures
+    # recording overhead, not host speed.
+    wall_ev, sim_ev, metrics_ev = _one(tr, cfg, "batched", events=True)
+    s_ev = metrics_ev.spot_stats(sim_ev.vms)
+    rows.append(emit(
+        "obs/eventlog_overhead",
+        wall_ev * 1e6 / max(metrics_ev.allocations, 1),
+        f"overhead={wall_ev / max(wall, 1e-9):.3f}x;"
+        f"events={len(sim_ev.events)};"
+        f"metrics_match={s_ev == s and metrics_ev.allocations == metrics.allocations}"))
     return rows

@@ -25,6 +25,7 @@ from ..market.fleet import make_fleet_manager
 from ..market.migration import make_migration_planner
 from ..market.pools import make_market
 from ..market.pricing import realized_cost_stats
+from ..obs.eventlog import EventLog
 from ..obs.tracer import Tracer
 from .specs import ObsSpec, RunSpec, ScenarioSpec
 from .workloads import WORKLOAD_REGISTRY
@@ -32,14 +33,25 @@ from .workloads import WORKLOAD_REGISTRY
 
 def build_tracer(obs: Optional[ObsSpec]) -> Optional[Tracer]:
     """A fresh :class:`~repro.obs.tracer.Tracer` for an :class:`ObsSpec`,
-    or None when the spec is absent/fully off (the simulator then runs the
-    plain untraced loop).  ``keep_records`` follows ``trace`` — profile- or
-    counters-only modes still time spans but retain no per-span records, so
-    memory stays bounded at trace scale."""
-    if obs is None or not obs.enabled:
+    or None when none of the tracer switches are on (the simulator then
+    runs the plain untraced loop — an events-only spec records the flight
+    log without ever building a tracer).  ``keep_records`` follows
+    ``trace`` — profile- or counters-only modes still time spans but retain
+    no per-span records, so memory stays bounded at trace scale."""
+    if obs is None or not (obs.trace or obs.profile
+                           or obs.counters_every is not None):
         return None
     return Tracer(keep_records=obs.trace, profile=obs.profile,
                   counters_every=obs.counters_every)
+
+
+def build_event_log(obs: Optional[ObsSpec]) -> Optional[EventLog]:
+    """A fresh :class:`~repro.obs.eventlog.EventLog` flight recorder when
+    the spec asks for one (``obs.events``), else None — emit sites then
+    keep their inert ``NULL_RECORDER`` default."""
+    if obs is None or not obs.events:
+        return None
+    return EventLog()
 
 
 def build_engine(scenario: ScenarioSpec, seed: int) -> Optional[MarketEngine]:
@@ -86,11 +98,12 @@ def build(spec: RunSpec, seed: int) -> MarketSimulator:
             resolve_horizon(scenario), scenario.tick_interval, seed,
             **dict(spec.faults.params))
     obs = build_tracer(spec.obs)
+    events = build_event_log(spec.obs)
     sim = MarketSimulator(
         policy=make_policy(spec.policy.name, **dict(spec.policy.params)),
         config=SimConfig(record_timeline=False, **dict(scenario.sim_params)),
         engine=engine, migration=migration, rebid=rebid,
-        fleet=fleet, faults=faults, obs=obs)
+        fleet=fleet, faults=faults, obs=obs, events=events)
     if obs is not None:
         # one tracer per run, shared by every subsystem so spans nest and
         # counters land in a single registry; components are fresh per
@@ -102,6 +115,17 @@ def build(spec: RunSpec, seed: int) -> MarketSimulator:
             migration.tracer = obs
         if fleet is not None:
             fleet.tracer = obs
+    if events is not None:
+        # one flight recorder per run, shared by every emit site — the
+        # same attach pattern as the tracer (fresh components, no leaks)
+        if engine is not None:
+            engine.events = events
+        if migration is not None:
+            migration.events = events
+        if fleet is not None:
+            fleet.events = events
+        if faults is not None:
+            faults.events_log = events
     WORKLOAD_REGISTRY.get(scenario.workload)(sim, scenario, seed)
     return sim
 

@@ -298,16 +298,24 @@ class ObsSpec(_SpecBase):
     into the per-subsystem self/total table, and ``counters_every``
     snapshots the counter registry every N simulated seconds.  The default
     spec is fully off and builds no tracer at all — byte-identical metrics
-    to a pre-observability run."""
+    to a pre-observability run.
+
+    ``events`` is a fourth, independent switch: it attaches an
+    :class:`~repro.obs.eventlog.EventLog` flight recorder (structured
+    lifecycle/market event log) without building a tracer — an events-only
+    spec still runs the plain untraced event loop."""
 
     trace: bool = False
     profile: bool = False
     #: counter-snapshot cadence in simulated seconds; None = off
     counters_every: Optional[float] = None
+    #: record the structured event log (``repro.obs.eventlog``)
+    events: bool = False
 
     def __post_init__(self):
         _set(self, "trace", bool(self.trace))
         _set(self, "profile", bool(self.profile))
+        _set(self, "events", bool(self.events))
         if self.counters_every is not None:
             try:
                 _set(self, "counters_every", float(self.counters_every))
@@ -322,17 +330,20 @@ class ObsSpec(_SpecBase):
 
     @property
     def enabled(self) -> bool:
-        return self.trace or self.profile or self.counters_every is not None
+        return (self.trace or self.profile
+                or self.counters_every is not None or self.events)
 
     def to_dict(self) -> dict:
         return {"trace": self.trace, "profile": self.profile,
-                "counters_every": self.counters_every}
+                "counters_every": self.counters_every,
+                "events": self.events}
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "ObsSpec":
         return cls(trace=d.get("trace", False),
                    profile=d.get("profile", False),
-                   counters_every=d.get("counters_every"))
+                   counters_every=d.get("counters_every"),
+                   events=d.get("events", False))
 
 
 # ---------------------------------------------------------------------------

@@ -37,6 +37,7 @@ from .events import Event, EventKind, EventQueue
 from .hosts import HostPool
 from .metrics import (FaultRecord, InterruptionEvent, Metrics,
                       MigrationEvent, WaveEvent)
+from ..obs.eventlog import NULL_RECORDER
 from ..obs.tracer import NULL_TRACER
 from .types import (
     ExecutionInterval,
@@ -65,7 +66,7 @@ class MarketSimulator:
     def __init__(self, policy: Optional[AllocationPolicy] = None,
                  config: Optional[SimConfig] = None,
                  engine=None, migration=None, rebid=None,
-                 fleet=None, faults=None, obs=None):
+                 fleet=None, faults=None, obs=None, events=None):
         """``engine`` — optional :class:`repro.market.engine.MarketEngine`.
         When attached, the simulator runs periodic PRICE_TICK events: each
         tick re-clears every capacity pool's price from live utilization,
@@ -106,9 +107,16 @@ class MarketSimulator:
         snapshots; subsystem tick phases add nested spans.  The tracer is
         observation-only (no randomness, no state mutation), so metrics
         are identical with or without it; ``obs=None`` selects the plain
-        untraced loop with zero added per-event work."""
+        untraced loop with zero added per-event work.
+
+        ``events`` — optional :class:`repro.obs.eventlog.EventLog`: the
+        structured flight recorder.  Every lifecycle and market transition
+        emits one record (guarded by ``events.enabled`` — a single
+        attribute load when off); like the tracer it is observation-only,
+        so logged and unlogged runs produce byte-identical metrics."""
         self.policy = policy or FirstFit()
         self.obs = obs if obs is not None else NULL_TRACER
+        self.events = events if events is not None else NULL_RECORDER
         self.config = config or SimConfig()
         assert self.config.flush_mode in ("batched", "per_vm")
         self.pool = HostPool()
@@ -269,7 +277,14 @@ class MarketSimulator:
             inc("events/total")
             inc("events/" + kind_name)
             tr.begin("event-loop", "dispatch/" + kind_name)
-            self._dispatch(ev)
+            try:
+                self._dispatch(ev)
+            except BaseException:
+                # a handler (or a listener it called) raised mid-span:
+                # close every open span so the stack stays well-nested and
+                # the truncated trace still exports as valid Chrome JSON
+                tr.unwind(t)
+                raise
             tr.end(t, None)
             if tr.counters_due(t):
                 tr.snapshot(t, self._obs_gauges())
@@ -319,7 +334,10 @@ class MarketSimulator:
         elif kind is EventKind.MIGRATE_COMPLETE:
             self._on_migrate_complete(ev.payload, ev.generation)
         elif kind is EventKind.HOST_ADD:
-            self.pool.add_host(*ev.payload)
+            hid = self.pool.add_host(*ev.payload)
+            if self.events.enabled:
+                self.events.emit(self.now, "host-add", host=hid,
+                                 pool=int(ev.payload[1]))
             self._flush_pending()
         elif kind is EventKind.HOST_REMOVE:
             self._on_host_remove(ev.payload)
@@ -333,6 +351,10 @@ class MarketSimulator:
     def _on_submit(self, vm: Vm) -> None:
         self._set_state(vm, VmState.WAITING)
         vm.waiting_since = self.now
+        if self.events.enabled:
+            self.events.emit(self.now, "submit", vm=vm.id,
+                             a=float(vm.bid) if np.isfinite(vm.bid) else 0.0,
+                             aux=vm.vm_type.value)
         self._try_allocate(vm, fresh=True)
         self._record()
 
@@ -357,6 +379,9 @@ class MarketSimulator:
     def _enqueue_pending(self, vm: Vm, fresh: bool, tested: bool = False) -> None:
         if not vm.persistent:
             self._set_state(vm, VmState.FAILED)
+            if self.events.enabled:
+                self.events.emit(self.now, "fail", vm=vm.id,
+                                 aux="unplaceable")
             self._emit("vm_failed", vm=vm)
             return
         if tested:
@@ -393,6 +418,11 @@ class MarketSimulator:
         self.metrics.allocations += 1
         if resumed:
             self.metrics.resubmissions += 1
+        if self.events.enabled:
+            self.events.emit(
+                self.now, "resume" if resumed else "start", vm=vm.id,
+                pool=int(self.pool.pool_of[hid]), host=hid,
+                a=float(vm.bid) if np.isfinite(vm.bid) else 0.0)
         self._emit("vm_allocated", vm=vm, host=hid, resumed=resumed)
 
     # ----------------------------------------------------------- preemption
@@ -476,6 +506,12 @@ class MarketSimulator:
                               cause))
         if self.obs.enabled:
             self.obs.counters.inc("interruptions/" + cause)
+        if self.events.enabled:
+            hid = vm.history[-1].host
+            self.events.emit(self.now, "interrupt", vm=vm.id,
+                             pool=int(self.pool.pool_of[hid]), host=hid,
+                             a=float(vm.bid) if np.isfinite(vm.bid) else 0.0,
+                             aux=cause)
         self._emit("vm_interrupted", vm=vm, kind=kind)
         self._apply_interruption_behavior(vm, kind)
 
@@ -490,6 +526,8 @@ class MarketSimulator:
         else:
             self._set_state(vm, VmState.TERMINATED)
             vm.generation += 1
+            if self.events.enabled:
+                self.events.emit(self.now, "terminate", vm=vm.id)
             self._emit("vm_terminated", vm=vm)
 
     def _enter_hibernation(self, vm: Vm) -> None:
@@ -504,6 +542,10 @@ class MarketSimulator:
         vm.generation += 1
         self._hibernated[vm.id] = vm
         self._retry_pos.pop(vm.id, None)  # untested in hibernated form
+        if self.events.enabled:
+            # a carries the (possibly re-bid) price governing readmission
+            self.events.emit(self.now, "hibernate", vm=vm.id,
+                             a=float(vm.bid) if np.isfinite(vm.bid) else 0.0)
         if np.isfinite(vm.hibernation_timeout):
             self.queue.push(self.now + vm.hibernation_timeout,
                             EventKind.HIBERNATION_EXPIRE, vm.id,
@@ -545,10 +587,14 @@ class MarketSimulator:
         victims, vpools = self.pool.market_victims(prices, t)
         if victims.size:
             counts = np.bincount(vpools, minlength=eng.n_pools)
+            evl = self.events
             for pid in np.flatnonzero(counts):
                 m.wave_events.append(
                     WaveEvent(t, int(pid), float(prices[pid]),
                               int(counts[pid])))
+                if evl.enabled:
+                    evl.emit(t, "wave", pool=int(pid),
+                             a=float(prices[pid]), b=float(counts[pid]))
             if traced:
                 tr.counters.inc("waves")
                 tr.counters.inc("wave_victims", int(victims.size))
@@ -672,6 +718,13 @@ class MarketSimulator:
         self.metrics.migrations_started += 1
         if self.obs.enabled:
             self.obs.counters.inc("migrations/started")
+        if self.events.enabled:
+            # pool/host name the *source* (the departure side — occupancy
+            # analytics key on it); the destination pool rides in b and the
+            # arrival is its own migrate-complete event
+            self.events.emit(self.now, "migrate-start", vm=vid,
+                             pool=int(self.pool.pool_of[src]), host=src,
+                             a=float(predicted), b=float(dst_pool))
         self.queue.push(self.now + self.migration.config.downtime,
                         EventKind.MIGRATE_COMPLETE, (vid, hid),
                         vm.generation)
@@ -712,6 +765,10 @@ class MarketSimulator:
             self.metrics.migration_downtime += self.now - mev.t_start
             if self.obs.enabled:
                 self.obs.counters.inc("migrations/completed")
+            if self.events.enabled:
+                self.events.emit(self.now, "migrate-complete", vm=vm.id,
+                                 pool=int(mev.dst_pool), host=hid,
+                                 a=float(mev.predicted_saving), aux="ok")
             self._emit("vm_migrated", vm=vm, host=hid)
         else:
             mev.failed = True
@@ -731,6 +788,16 @@ class MarketSimulator:
                 self.obs.counters.inc(
                     "interruptions/" + InterruptionCause.MIGRATION_FAILED)
                 self.obs.counters.inc("migrations/failed")
+            if self.events.enabled:
+                self.events.emit(self.now, "migrate-complete", vm=vm.id,
+                                 pool=int(mev.dst_pool), host=hid,
+                                 aux="failed")
+                last = vm.history[-1].host
+                self.events.emit(
+                    self.now, "interrupt", vm=vm.id,
+                    pool=int(self.pool.pool_of[last]), host=last,
+                    a=float(vm.bid) if np.isfinite(vm.bid) else 0.0,
+                    aux=InterruptionCause.MIGRATION_FAILED)
             self._emit("vm_interrupted", vm=vm, kind=kind)
             self._apply_interruption_behavior(vm, kind)
         self._flush_pending()
@@ -747,18 +814,26 @@ class MarketSimulator:
     def _on_finish(self, vm: Vm) -> None:
         if vm.state not in (VmState.RUNNING, VmState.INTERRUPTING):
             return
+        hid = vm.history[-1].host
         self._account_progress(vm)
         self.pool.release(vm)
-        self._finish_now(vm)
+        self._finish_now(vm, host=hid)
         self._flush_pending()
         self._record()
 
-    def _finish_now(self, vm: Vm) -> None:
+    def _finish_now(self, vm: Vm, host: int = -1) -> None:
         self._set_state(vm, VmState.FINISHED)
         vm.finish_time = self.now
         vm.generation += 1
         self._hibernated.pop(vm.id, None)
         self._retry_pos.pop(vm.id, None)
+        if self.events.enabled:
+            # host/pool only for the ran-to-completion path — departure
+            # accounting in obs.analyze keys on pool >= 0 (finishes after
+            # an interruption already decremented via the interrupt event)
+            self.events.emit(
+                self.now, "finish", vm=vm.id, host=host,
+                pool=int(self.pool.pool_of[host]) if host >= 0 else -1)
         self._emit("vm_finished", vm=vm)
 
     def _on_wait_expire(self, vm: Vm) -> None:
@@ -767,6 +842,8 @@ class MarketSimulator:
         self._retry_pos.pop(vm.id, None)
         self._set_state(vm, VmState.FAILED)
         vm.generation += 1
+        if self.events.enabled:
+            self.events.emit(self.now, "fail", vm=vm.id, aux="wait-expire")
         self._emit("vm_failed", vm=vm)
         self._record()
 
@@ -775,6 +852,9 @@ class MarketSimulator:
         self._retry_pos.pop(vm.id, None)
         self._set_state(vm, VmState.TERMINATED)
         vm.generation += 1
+        if self.events.enabled:
+            self.events.emit(self.now, "terminate", vm=vm.id,
+                             aux="hibernation-expire")
         self._emit("vm_terminated", vm=vm)
         self._record()
 
@@ -790,6 +870,9 @@ class MarketSimulator:
         requeue).  Shared by trace machine-removal events (``cause``
         "capacity", the historical value) and transient pool outages from
         the fault injector ("fault-outage").  The caller flushes/records."""
+        if self.events.enabled:
+            self.events.emit(self.now, "host-remove", host=hid,
+                             pool=int(self.pool.pool_of[hid]), aux=cause)
         victims = self.pool.remove_host(hid)
         for v in victims:
             if v.vm_type is VmType.SPOT:
@@ -801,6 +884,12 @@ class MarketSimulator:
                                       InterruptionCause.HOST_REMOVED, cause))
                 if self.obs.enabled:
                     self.obs.counters.inc("interruptions/" + cause)
+                if self.events.enabled:
+                    self.events.emit(
+                        self.now, "interrupt", vm=v.id,
+                        pool=int(self.pool.pool_of[hid]), host=hid,
+                        a=float(v.bid) if np.isfinite(v.bid) else 0.0,
+                        aux=cause)
                 self._apply_interruption_behavior(v, v.behavior.value)
             else:
                 # on-demand VMs are resubmitted as persistent requests
@@ -858,21 +947,26 @@ class MarketSimulator:
     def _flush_pending(self) -> None:
         """Resubmission pass: try to place queued requests (§V-D)."""
         tr = self.obs
-        if tr.enabled:
-            mode = self.config.flush_mode
-            before = self.metrics.allocations
-            tr.begin("allocation", "flush/" + mode)
-            if mode == "per_vm":
+        evl = self.events
+        if not (tr.enabled or evl.enabled):
+            if self.config.flush_mode == "per_vm":
                 self._flush_pending_per_vm()
             else:
                 self._flush_pending_batched()
-            tr.end(self.now,
-                   {"placed": self.metrics.allocations - before})
             return
-        if self.config.flush_mode == "per_vm":
+        mode = self.config.flush_mode
+        before = self.metrics.allocations
+        if tr.enabled:
+            tr.begin("allocation", "flush/" + mode)
+        if mode == "per_vm":
             self._flush_pending_per_vm()
         else:
             self._flush_pending_batched()
+        placed = self.metrics.allocations - before
+        if tr.enabled:
+            tr.end(self.now, {"placed": placed})
+        if evl.enabled:
+            evl.emit(self.now, "alloc-flush", a=float(placed))
 
     def _queues(self) -> Dict[str, Dict[int, Vm]]:
         return {

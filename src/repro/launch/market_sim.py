@@ -50,6 +50,21 @@ the metrics rows are identical with and without it:
   python -m repro.launch.market_sim --market --regimes volatile \\
       --policy hlem-vmp-adjusted --trace-out results/profile/trace.json \\
       --profile --counters-every 600
+
+The event flight recorder (``--events-out``) writes a structured log of
+every lifecycle/market event (NDJSON or ``.npz`` by extension);
+``--report-html`` renders a self-contained HTML run report, and
+``--diff A B`` compares two recorded logs and reports the first
+divergence (exit 1 when the runs diverge):
+
+  python -m repro.launch.market_sim --market --regimes volatile \\
+      --policy hlem-vmp-adjusted --events-out run.ndjson \\
+      --report-html run.html
+  python -m repro.launch.market_sim --diff run_a.ndjson run_b.ndjson
+
+Live progress lines (counter snapshots, per-cell sweep progress) are
+suppressed when stderr is not a terminal (e.g. under CI or redirection);
+``--force-progress`` restores them.
 """
 from __future__ import annotations
 
@@ -79,6 +94,7 @@ from ..api import build as build_run
 from ..market import MIGRATION_POLICIES, REGIMES
 from ..obs import format_profile_table, run_manifest, write_chrome_trace
 from ..obs import write_profile
+from ..obs import first_divergence, format_divergence, write_html_report
 
 POLICY_SET = ["first-fit", "best-fit", "worst-fit", "hlem-vmp",
               "hlem-vmp-adjusted"]
@@ -107,6 +123,16 @@ def _market_scenario_spec(regime: str, n_pools: int = 4,
         bid=BidSpec(bid_strategy, bid_params), horizon=horizon)
 
 
+def _progress_enabled(args) -> bool:
+    """Live stderr progress (counter lines, per-cell sweep lines) is for
+    humans watching a terminal: suppressed under ``--json`` and whenever
+    stderr is not a TTY (CI logs, redirection), unless ``--force-progress``
+    overrides."""
+    if args.json:
+        return False
+    return bool(args.force_progress or sys.stderr.isatty())
+
+
 def _live_counter_line(sim_t: float, snap: dict) -> None:
     """The counter tracer's live progress line (stderr — stdout stays a
     pure document for --json consumers)."""
@@ -128,7 +154,8 @@ def _emit_obs_artifacts(sim, spec: RunSpec, seed: int, args,
     """Write/print the run's observability artifacts per the CLI flags;
     returns the extra blocks (counters) to merge into a JSON document."""
     tr = sim.obs
-    if not tr.enabled:
+    evl = sim.events
+    if not (tr.enabled or evl.enabled):
         return {}
     man = run_manifest(spec_dict=spec.to_dict(), seed=seed,
                        duration_s=duration_s)
@@ -138,10 +165,16 @@ def _emit_obs_artifacts(sim, spec: RunSpec, seed: int, args,
     if args.profile_out:
         write_profile(tr, args.profile_out, manifest=man)
         print(f"# wrote {args.profile_out}", file=sys.stderr)
-    if args.profile:
+    if args.profile and tr.enabled:
         print(format_profile_table(tr), file=sys.stderr)
+    if args.events_out and evl.enabled:
+        evl.save(args.events_out, manifest=man)
+        print(f"# wrote {args.events_out}", file=sys.stderr)
+    if args.report_html and evl.enabled:
+        write_html_report(evl, args.report_html, manifest=man)
+        print(f"# wrote {args.report_html}", file=sys.stderr)
     extra = {}
-    if args.counters_every:
+    if args.counters_every and tr.enabled:
         extra["counters"] = {
             "every": args.counters_every,
             "series": [{"t": round(t, 3), "values": snap}
@@ -157,7 +190,7 @@ def _run_one_obs(spec: RunSpec, seed: int, until, args, sink: dict) -> dict:
     artifacts.  The metrics row is identical to :func:`repro.api.run_one`
     (tracing is observation-only; regression-tested in ``tests/obs``)."""
     sim = build_run(spec, seed)
-    if args.counters_every and not args.json:
+    if args.counters_every and _progress_enabled(args):
         sim.obs.on_snapshot = _live_counter_line
     horizon = until if until is not None else resolve_horizon(spec.scenario)
     t0 = time.time()
@@ -256,17 +289,30 @@ def _sweep_and_report(exp: ExperimentSpec, args) -> int:
     # rename) and resumes from a matching partial report after a crash;
     # --fresh discards any checkpoint (e.g. after changing simulator code)
     report = run_experiment(exp, processes=args.workers,
-                            progress=not args.json,
+                            progress=_progress_enabled(args),
                             report_path=args.report or None,
                             resume=not args.fresh, manifest=True)
     if args.report:
         # stderr keeps --json stdout a pure JSON document
         print(f"# wrote {args.report}", file=sys.stderr)
+    if args.report_html:
+        write_html_report(report, args.report_html)
+        print(f"# wrote {args.report_html}", file=sys.stderr)
     if args.json:
         print(json.dumps(report, indent=1, sort_keys=True))
     else:
         print(format_report(report))
     return 0
+
+
+def _diff_logs(path_a: str, path_b: str) -> int:
+    """Standalone ``--diff A B`` mode: stream two recorded event logs,
+    report the first divergence (with context) or confirm zero divergence.
+    Exit status 1 when the runs diverge — scriptable as a bit-identity
+    gate."""
+    div = first_divergence(path_a, path_b)
+    print(format_divergence(div, label_a=path_a, label_b=path_b))
+    return 0 if div is None else 1
 
 
 def main(argv=None) -> int:
@@ -304,6 +350,22 @@ def main(argv=None) -> int:
                          "prints a progress line per snapshot to stderr "
                          "(suppressed under --json; the series lands in the "
                          "JSON document instead)")
+    ap.add_argument("--events-out", default="",
+                    help="record the structured event flight log and write "
+                         "it here (NDJSON, or compressed .npz by "
+                         "extension); single-run modes only")
+    ap.add_argument("--report-html", default="",
+                    help="write a self-contained HTML report here: per-run "
+                         "price/risk/occupancy charts (records the event "
+                         "log), or the aggregate comparison in sweep modes")
+    ap.add_argument("--diff", nargs=2, metavar=("A", "B"), default=None,
+                    help="standalone mode: diff two recorded event logs "
+                         "and report the first divergence (exit 1 when the "
+                         "runs diverge)")
+    ap.add_argument("--force-progress", action="store_true",
+                    help="emit live stderr progress lines even when stderr "
+                         "is not a terminal (they are suppressed by default "
+                         "under redirection/CI)")
     # market-engine mode
     ap.add_argument("--market", action="store_true",
                     help="run the dynamic market engine across price regimes")
@@ -356,6 +418,8 @@ def main(argv=None) -> int:
                          "0 = serial)")
     args = ap.parse_args(argv)
 
+    if args.diff is not None:
+        return _diff_logs(*args.diff)
     if args.sweep and not (args.market or args.spec):
         ap.error("--sweep requires --market (or use --spec FILE)")
     if (args.fleet or args.faults) and not args.market:
@@ -364,14 +428,23 @@ def main(argv=None) -> int:
         ap.error("--report only applies to sweep modes "
                  "(--sweep N or --spec FILE)")
     obs_spec = None
+    sweep_mode = bool(args.sweep or args.spec)
     if (args.trace_out or args.profile or args.profile_out
-            or args.counters_every is not None):
-        if args.sweep or args.spec:
-            ap.error("--trace-out/--profile/--profile-out/--counters-every "
-                     "apply to single runs only (not --sweep/--spec)")
+            or args.counters_every is not None or args.events_out):
+        if sweep_mode:
+            ap.error("--trace-out/--profile/--profile-out/--counters-every/"
+                     "--events-out apply to single runs only "
+                     "(not --sweep/--spec)")
+    # --report-html doubles as the sweep's aggregate report; in single-run
+    # modes it records the event log like --events-out
+    want_events = bool(args.events_out
+                       or (args.report_html and not sweep_mode))
+    if (args.trace_out or args.profile or args.profile_out
+            or args.counters_every is not None or want_events):
         obs_spec = ObsSpec(trace=bool(args.trace_out),
                            profile=bool(args.profile or args.profile_out),
-                           counters_every=args.counters_every)
+                           counters_every=args.counters_every,
+                           events=want_events)
     t_main = time.time()
 
     if args.spec:
@@ -484,7 +557,7 @@ def main(argv=None) -> int:
         obs=obs_spec)
     t0 = time.time()
     sim = build_run(spec, args.seed)
-    if args.counters_every is not None:
+    if args.counters_every is not None and _progress_enabled(args):
         sim.obs.on_snapshot = _live_counter_line
     metrics = sim.run(until=args.until)
     wall = time.time() - t0

@@ -55,6 +55,7 @@ from .price_process import (
     MarketState,
     ScalarProcessAdapter,
 )
+from ..obs.eventlog import NULL_RECORDER
 from ..obs.tracer import NULL_TRACER
 
 #: per-pool shock streams are drawn in blocks of this many ticks (one
@@ -82,9 +83,11 @@ class MarketEngine:
 
     def __init__(self, config: MarketConfig):
         self.config = config
-        #: telemetry hook (``repro.obs``); the build layer swaps in the
-        #: live tracer, instrumentation guards on ``tracer.enabled``
+        #: telemetry hooks (``repro.obs``); the build layer swaps in the
+        #: live tracer / event recorder, instrumentation guards on
+        #: ``tracer.enabled`` / ``events.enabled``
         self.tracer = NULL_TRACER
+        self.events = NULL_RECORDER
         self.n_pools = len(config.pools)
         assert self.n_pools >= 1, "market needs at least one pool"
         self.tick_interval = float(config.tick_interval)
@@ -252,6 +255,12 @@ class MarketEngine:
             tr.end(now, None)
         self._ph_buf[:, k] = self.prices
         self._n_ticks = k + 1
+        if self.events.enabled:
+            # one flight-recorder record per pool per tick — the price
+            # series the post-hoc risk analytics reconstruct from the log
+            for pid in range(self.n_pools):
+                self.events.emit(now, "price-tick", pool=pid,
+                                 a=float(self.prices[pid]))
         return self.prices
 
     def _grow_history(self, need: int) -> None:

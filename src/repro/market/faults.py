@@ -38,6 +38,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.causes import InterruptionCause
+from ..obs.eventlog import NULL_RECORDER
 from ..core.registry import Registry
 
 _EPS = 1e-9
@@ -100,6 +101,9 @@ class FaultInjector:
     simulator's per-tick queries.  Stateful across one run (fired/ended
     flags) — use a fresh injector per simulation, like the engine."""
 
+    #: event recorder — fault activations feed the flight log
+    events_log = NULL_RECORDER
+
     def __init__(self, events: Sequence[FaultEvent], n_pools: int):
         evs = []
         for ev in events:
@@ -136,6 +140,12 @@ class FaultInjector:
             if not self._started[i] and ev.t0 <= now + _EPS:
                 self._started[i] = True
                 started.append((i, ev))
+                if self.events_log.enabled:
+                    for p in self._pool_ids(ev):
+                        self.events_log.emit(
+                            now, "fault", pool=int(p),
+                            a=float(ev.magnitude), b=float(ev.t1),
+                            aux=ev.kind)
             if (self._started[i] and not self._ended[i]
                     and ev.kind == "pool-outage"
                     and now >= ev.t1 - _EPS and ev.t1 > ev.t0):

@@ -40,6 +40,7 @@ import numpy as np
 from ..core.registry import Registry
 from ..core.types import (InterruptionBehavior, VmState, make_on_demand,
                           make_spot, resources)
+from ..obs.eventlog import NULL_RECORDER
 from ..obs.tracer import NULL_TRACER
 
 _EPS = 1e-9
@@ -397,6 +398,8 @@ class FleetManager:
     #: telemetry hook (``repro.obs``); the build layer swaps in the live
     #: tracer — rung hits and launches feed the counter registry
     tracer = NULL_TRACER
+    #: event recorder — rung/launch/retire records for the flight log
+    events = NULL_RECORDER
 
     def __init__(self, config: FleetConfig, n_pools: int):
         validate_fleet_config(config, n_pools)
@@ -520,6 +523,9 @@ class FleetManager:
                     m.fallback_counts.get("launch", 0) + 1)
                 if self.tracer.enabled:
                     self.tracer.counters.inc("fleet/rung/launch")
+                if self.events.enabled:
+                    self.events.emit(now, "fleet-rung", pool=int(p),
+                                     a=float(s), aux="launch")
                 self._launch_spot(sim, s, p, now, bids, free_cpu)
         # -- episode slots: one ladder attempt each ------------------------
         for s in due:
@@ -531,7 +537,7 @@ class FleetManager:
                 self.slot_rung[s] += 1
                 self.slot_tries[s] = 0
             if self.slot_rung[s] >= len(self._ladder):
-                self._retire(sim, s)
+                self._retire(sim, s, now)
                 continue
             self._attempt(sim, s, now, prices, bids, free_cpu)
 
@@ -549,8 +555,10 @@ class FleetManager:
             self.tracer.counters.inc("fleet/rung/" + rung)
             self.tracer.instant("fleet", "rung/" + rung, now,
                                 {"slot": int(s)})
+        if self.events.enabled:
+            self.events.emit(now, "fleet-rung", a=float(s), aux=rung)
         if rung == "scale-down":
-            self._retire(sim, s)
+            self._retire(sim, s, now)
             return
         if rung != "queue":
             pinned = _rung_pool(rung)
@@ -618,6 +626,9 @@ class FleetManager:
         free_cpu[p] -= cfg.unit_cpu     # same-tick launches share the budget
         sim.metrics.fleet_launches += 1
         sim.metrics.fleet_spot_ids.append(vid)
+        if self.events.enabled:
+            self.events.emit(now, "fleet-launch", vm=vid, pool=int(p),
+                             a=float(bids[p]), b=float(s), aux="spot")
 
     def _launch_od(self, sim, s: int, p: int, now: float,
                    free_cpu) -> None:
@@ -635,13 +646,18 @@ class FleetManager:
         free_cpu[p] -= cfg.unit_cpu
         sim.metrics.od_spill_launches += 1
         sim.metrics.fleet_od_ids.append(vid)
+        if self.events.enabled:
+            self.events.emit(now, "fleet-launch", vm=vid, pool=int(p),
+                             b=float(s), aux="od")
 
-    def _retire(self, sim, s: int) -> None:
+    def _retire(self, sim, s: int, now: float) -> None:
         """Scale down: give the slot up for good and lower the effective
         target — graceful degradation instead of thrash."""
         self.slot_retired[s] = True
         self.slot_vid[s] = -1
         sim.metrics.fleet_slots_retired += 1
+        if self.events.enabled:
+            self.events.emit(now, "fleet-retire", a=float(s))
 
 
 def make_fleet_manager(n_pools: int, config: Optional[FleetConfig] = None,

@@ -55,6 +55,7 @@ import numpy as np
 
 from . import risk
 from ..core.registry import Registry
+from ..obs.eventlog import NULL_RECORDER
 from ..obs.tracer import NULL_TRACER
 from .price_process import supply_curve_slope
 
@@ -126,9 +127,11 @@ class MigrationPlan:
 class MigrationPlanner:
     """Scores the market registry each tick and emits batched plans."""
 
-    #: telemetry hook (``repro.obs``); the build layer swaps in the live
-    #: tracer — a class attribute so planner construction stays untouched
+    #: telemetry hooks (``repro.obs``); the build layer swaps in the live
+    #: tracer/recorder — class attributes so planner construction stays
+    #: untouched
     tracer = NULL_TRACER
+    events = NULL_RECORDER
 
     def __init__(self, config: MigrationConfig | None = None):
         self.config = config or MigrationConfig()
@@ -154,13 +157,19 @@ class MigrationPlanner:
         slope, so the planner's own herd prices itself out of a destination
         before it can spike it.  Fully deterministic, no RNG."""
         tr = self.tracer
-        if not tr.enabled:
+        if not (tr.enabled or self.events.enabled):
             return self._plan_impl(host_pool, engine, now, inflight_per_pool)
-        tr.begin("migration", "plan/" + self.config.policy)
+        if tr.enabled:
+            tr.begin("migration", "plan/" + self.config.policy)
         plans = self._plan_impl(host_pool, engine, now, inflight_per_pool)
-        if plans:
-            tr.counters.inc("migrations/planned", len(plans))
-        tr.end(now, {"plans": len(plans)})
+        if tr.enabled:
+            if plans:
+                tr.counters.inc("migrations/planned", len(plans))
+            tr.end(now, {"plans": len(plans)})
+        if self.events.enabled:
+            for p in plans:
+                self.events.emit(now, "migrate-plan", vm=p.vm_id,
+                                 pool=p.dst_pool, a=p.predicted_saving)
         return plans
 
     def _plan_impl(self, host_pool, engine, now: float,

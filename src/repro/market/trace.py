@@ -200,15 +200,18 @@ def simulate_trace(
     migration=None,
     rebid=None,
     obs=None,
+    events=None,
 ):
     """Run the market simulator on a trace. Returns (simulator, metrics).
-    ``engine`` / ``migration`` / ``rebid`` / ``obs`` pass through to
-    :class:`MarketSimulator` (all default off — the paper's §VII-D setup)."""
+    ``engine`` / ``migration`` / ``rebid`` / ``obs`` / ``events`` pass
+    through to :class:`MarketSimulator` (all default off — the paper's
+    §VII-D setup)."""
     cfg = cfg or TraceConfig()
     sim = MarketSimulator(
         policy=policy or FirstFit(),
         config=sim_config or SimConfig(record_timeline=False),
         engine=engine, migration=migration, rebid=rebid, obs=obs,
+        events=events,
     )
     if obs is not None and obs.enabled:
         sim.policy.tracer = obs
@@ -216,6 +219,11 @@ def simulate_trace(
             engine.tracer = obs
         if migration is not None:
             migration.tracer = obs
+    if events is not None and events.enabled:
+        if engine is not None:
+            engine.events = events
+        if migration is not None:
+            migration.events = events
     wire_trace(sim, tr, cfg)
     metrics = sim.run(until=until)
     return sim, metrics

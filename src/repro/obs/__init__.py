@@ -1,9 +1,20 @@
-"""Zero-dependency runtime telemetry: tracing, counters, profiles, manifests.
+"""Zero-dependency runtime telemetry: tracing, counters, profiles, manifests,
+and the event flight recorder.
 
 Public surface:
 
 * :class:`Tracer` / :data:`NULL_TRACER` — span/instant/counter recorder
   and its inert default (``repro.obs.tracer``).
+* :class:`EventLog` / :data:`NULL_RECORDER` — append-only structured log
+  of every lifecycle/market event and its inert default
+  (``repro.obs.eventlog``).
+* :func:`first_divergence` / :func:`bisect_divergence` — first-divergence
+  run diffing over two event logs (``repro.obs.diff``).
+* :func:`pool_risk_series` / :func:`storm_intervals` /
+  :func:`cohort_summary` — vectorized post-hoc market-risk analytics over
+  a recorded log (``repro.obs.analyze``).
+* :func:`write_html_report` — self-contained static HTML run/sweep report
+  (``repro.obs.report``).
 * :func:`write_chrome_trace` / :func:`validate_chrome_trace` — Chrome
   trace-event JSON export for Perfetto / chrome://tracing
   (``repro.obs.export``).
@@ -14,6 +25,16 @@ Public surface:
   blocks for committed artifacts (``repro.obs.manifest``).
 """
 from .tracer import NULL_TRACER, Counters, NullTracer, Tracer
+from .eventlog import (EVENT_KINDS, NULL_RECORDER, EventLog, NullRecorder,
+                       iter_event_records, load_event_log, read_manifest,
+                       validate_event_log, write_event_log)
+from .diff import (Divergence, bisect_divergence, first_divergence,
+                   format_divergence)
+from .analyze import (cohort_summary, interruption_intensity,
+                      pool_risk_series, storm_intervals, victim_rate,
+                      vm_lifecycle)
+from .report import (render_report, render_sweep_report, report_summary_json,
+                     write_html_report)
 from .export import chrome_trace, validate_chrome_trace, write_chrome_trace
 from .profile import (format_profile_table, profile_report, profile_table,
                       write_profile)
@@ -21,6 +42,15 @@ from .manifest import run_manifest, spec_hash
 
 __all__ = [
     "Tracer", "NullTracer", "NULL_TRACER", "Counters",
+    "EventLog", "NullRecorder", "NULL_RECORDER", "EVENT_KINDS",
+    "load_event_log", "iter_event_records", "read_manifest",
+    "validate_event_log", "write_event_log",
+    "Divergence", "first_divergence", "bisect_divergence",
+    "format_divergence",
+    "interruption_intensity", "storm_intervals", "pool_risk_series",
+    "victim_rate", "vm_lifecycle", "cohort_summary",
+    "render_report", "render_sweep_report", "write_html_report",
+    "report_summary_json",
     "chrome_trace", "write_chrome_trace", "validate_chrome_trace",
     "profile_table", "profile_report", "write_profile",
     "format_profile_table",

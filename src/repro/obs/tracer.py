@@ -100,6 +100,9 @@ class NullTracer:
                  gauges: Optional[Dict[str, float]] = None) -> dict:
         return {}
 
+    def unwind(self, sim_t: float, args: Optional[dict] = None) -> int:
+        return 0
+
 
 #: the default tracer everywhere a ``tracer`` attribute exists
 NULL_TRACER = NullTracer()
@@ -172,6 +175,22 @@ class Tracer:
         if self.keep_records:
             self.instants.append(
                 (cat, name, self.clock() - self.epoch, sim_t, args))
+
+    def unwind(self, sim_t: float, args: Optional[dict] = None) -> int:
+        """Close every open span (an exception propagated mid-span).
+
+        Each open frame is ended normally — durations stay exact, child
+        times still accumulate into parents — with ``args`` (default
+        ``{"aborted": True}``) marking the abnormal close, so the span
+        stack stays well-nested and a truncated trace still exports as
+        schema-valid Chrome JSON.  Returns the number of spans closed."""
+        if args is None:
+            args = {"aborted": True}
+        n = 0
+        while self._stack:
+            self.end(sim_t, args)
+            n += 1
+        return n
 
     # ----------------------------------------------------------- counters
     def counters_due(self, sim_t: float) -> bool:

@@ -1,0 +1,61 @@
+"""Live progress suppression (ISSUE 8 satellite): stderr counter/progress
+lines are for humans at a terminal — suppressed when stderr is not a TTY
+(CI, redirection) unless ``--force-progress`` overrides; always suppressed
+under ``--json``."""
+import argparse
+import sys
+
+import pytest
+
+from repro.launch.market_sim import _progress_enabled, main
+
+
+def _args(**kw):
+    ns = argparse.Namespace(json=False, force_progress=False)
+    for k, v in kw.items():
+        setattr(ns, k, v)
+    return ns
+
+
+def _set_tty(monkeypatch, value: bool):
+    monkeypatch.setattr(sys.stderr, "isatty", lambda: value, raising=False)
+
+
+def test_progress_follows_tty(monkeypatch):
+    _set_tty(monkeypatch, True)
+    assert _progress_enabled(_args()) is True
+    _set_tty(monkeypatch, False)
+    assert _progress_enabled(_args()) is False
+
+
+def test_force_progress_overrides_non_tty(monkeypatch):
+    _set_tty(monkeypatch, False)
+    assert _progress_enabled(_args(force_progress=True)) is True
+
+
+def test_json_always_suppresses(monkeypatch):
+    _set_tty(monkeypatch, True)
+    assert _progress_enabled(_args(json=True)) is False
+    assert _progress_enabled(_args(json=True, force_progress=True)) is False
+
+
+def _counter_lines(capsys):
+    return [ln for ln in capsys.readouterr().err.splitlines()
+            if ln.startswith("# t=")]
+
+
+COUNTER_ARGV = ["--market", "--regimes", "volatile", "--policy",
+                "hlem-vmp-adjusted", "--until", "1800",
+                "--counters-every", "600"]
+
+
+def test_counter_lines_suppressed_without_tty(monkeypatch, capsys):
+    _set_tty(monkeypatch, False)
+    assert main(COUNTER_ARGV) == 0
+    assert _counter_lines(capsys) == []
+
+
+def test_counter_lines_restored_by_force_progress(monkeypatch, capsys):
+    _set_tty(monkeypatch, False)
+    assert main(COUNTER_ARGV + ["--force-progress"]) == 0
+    assert len(_counter_lines(capsys)) > 0

@@ -1,0 +1,146 @@
+"""Market-risk analytics over the event log: storm detection, per-pool
+risk series, per-VM lifecycles, cohort rollups — hand-built logs with
+known answers, plus one real run for shape/consistency."""
+import numpy as np
+import pytest
+
+from repro.api import (
+    MigrationSpec,
+    ObsSpec,
+    PolicySpec,
+    RunSpec,
+    ScenarioSpec,
+    build,
+)
+from repro.obs import (
+    EventLog,
+    cohort_summary,
+    interruption_intensity,
+    pool_risk_series,
+    storm_intervals,
+    victim_rate,
+    vm_lifecycle,
+)
+
+
+def _burst_log():
+    """10 interrupts in [1000, 1090] (a storm), 2 sparse ones later."""
+    log = EventLog()
+    for i in range(10):
+        log.emit(1000.0 + 10.0 * i, "interrupt", vm=i, pool=0)
+    log.emit(5000.0, "interrupt", vm=100, pool=0)
+    log.emit(9000.0, "interrupt", vm=101, pool=0)
+    return log
+
+
+def test_interruption_intensity():
+    t, inten = interruption_intensity(_burst_log(), window=600.0)
+    assert t.size == 12
+    # the 10th burst event sees all 10 in its window
+    assert inten[9] == pytest.approx(10.0 / 600.0)
+    # the isolated events see only themselves
+    assert inten[-1] == pytest.approx(1.0 / 600.0)
+    # empty log
+    t0, i0 = interruption_intensity(EventLog())
+    assert t0.size == 0 and i0.size == 0
+
+
+def test_storm_intervals():
+    storms = storm_intervals(_burst_log(), window=600.0,
+                             threshold=5.0 / 600.0)
+    assert len(storms) == 1
+    s = storms[0]
+    assert s["t0"] >= 1000.0 and s["t1"] <= 1090.0
+    assert s["peak_intensity"] == pytest.approx(10.0 / 600.0)
+    # nothing clears an impossible threshold
+    assert storm_intervals(_burst_log(), threshold=1.0) == []
+
+
+def test_pool_risk_series_occupancy_and_margin():
+    log = EventLog()
+    # two ticks at t=0 and t=60 for pool 0; bids admitted in between
+    log.emit(0.0, "price-tick", pool=0, a=0.10)
+    log.emit(0.0, "start", vm=1, pool=0, host=0, a=0.30)
+    log.emit(10.0, "start", vm=2, pool=0, host=1, a=0.50)
+    log.emit(30.0, "interrupt", vm=1, pool=0, host=0, a=0.30, aux="price")
+    log.emit(60.0, "price-tick", pool=0, a=0.45)
+    log.emit(60.0, "wave", pool=0, a=0.45, b=1.0)
+    # pool 1 noise must not leak in
+    log.emit(60.0, "price-tick", pool=1, a=9.9)
+    rs = pool_risk_series(log, 0)
+    assert rs["t"].tolist() == [0.0, 60.0]
+    assert rs["price"].tolist() == [0.10, 0.45]
+    # at t=0: vm1 started (events at the tick time count); at t=60: vm2
+    # resident, vm1 interrupted
+    assert rs["occupancy"].tolist() == [1.0, 1.0]
+    assert rs["mean_bid"][0] == pytest.approx(0.30)
+    assert rs["mean_bid"][1] == pytest.approx(0.40)
+    assert rs["danger_margin"][1] == pytest.approx(0.40 - 0.45)
+    assert rs["victims"].sum() == pytest.approx(1.0)
+
+
+def test_migrations_move_occupancy_between_pools():
+    log = EventLog()
+    log.emit(0.0, "price-tick", pool=0, a=0.1)
+    log.emit(0.0, "price-tick", pool=1, a=0.1)
+    log.emit(0.0, "start", vm=1, pool=0, host=0, a=0.5)
+    log.emit(10.0, "migrate-start", vm=1, pool=0, host=0, b=1.0)
+    log.emit(40.0, "migrate-complete", vm=1, pool=1, host=5, aux="ok")
+    log.emit(60.0, "price-tick", pool=0, a=0.1)
+    log.emit(60.0, "price-tick", pool=1, a=0.1)
+    assert pool_risk_series(log, 0)["occupancy"].tolist() == [1.0, 0.0]
+    assert pool_risk_series(log, 1)["occupancy"].tolist() == [0.0, 1.0]
+
+
+def test_victim_rate():
+    log = EventLog()
+    for k in range(4):
+        log.emit(60.0 * k, "price-tick", pool=0, a=0.2)
+    log.emit(120.0, "wave", pool=0, a=0.2, b=6.0)
+    assert victim_rate(log) == pytest.approx(6.0 / 4.0)
+    assert victim_rate(log, pool=1) == 0.0
+
+
+def test_vm_lifecycle_and_cohort_summary():
+    log = EventLog()
+    log.emit(0.0, "submit", vm=1, a=0.4, aux="spot")
+    log.emit(0.0, "start", vm=1, pool=0, host=0, a=0.4)
+    log.emit(50.0, "interrupt", vm=1, pool=0, host=0, aux="price")
+    log.emit(50.0, "hibernate", vm=1, a=0.4)
+    log.emit(90.0, "resume", vm=1, pool=1, host=4, a=0.4)
+    log.emit(200.0, "finish", vm=1, pool=1, host=4)
+    log.emit(10.0, "submit", vm=2, aux="on-demand")   # noqa: emitted late
+    life = vm_lifecycle(log, 1)
+    assert [e["kind"] for e in life] == [
+        "submit", "start", "interrupt", "hibernate", "resume", "finish"]
+    assert life[2]["aux"] == "price"
+    cs = cohort_summary(log)
+    assert cs["n_vms"] == 2
+    assert cs["final_states"] == {"finish": 1, "submit": 1}
+    assert cs["interruptions"]["total"] == 1
+    assert cs["interruptions"]["max"] == 1
+    assert cs["migrations"]["total"] == 0
+    assert cohort_summary(EventLog())["n_vms"] == 0
+
+
+def test_real_run_consistency():
+    sim = build(RunSpec(
+        scenario=ScenarioSpec(workload="market", regime="volatile"),
+        policy=PolicySpec("hlem-vmp-adjusted", {"alpha": -0.5}),
+        migration=MigrationSpec("gradient-aware"),
+        obs=ObsSpec(events=True)), 5)
+    metrics = sim.run(until=3600.0)
+    log = sim.events
+    arr = log.to_arrays()
+    # the log's interrupt count equals the metrics' interruption count
+    n_interrupts = int((arr["kind"] == log.kind_id("interrupt")).sum())
+    s = metrics.spot_stats(sim.vms)
+    assert n_interrupts == s["interruptions"]
+    # per-pool series aligns to that pool's tick count
+    rs = pool_risk_series(log, 0)
+    n_ticks = int(((arr["kind"] == log.kind_id("price-tick"))
+                   & (arr["pool"] == 0)).sum())
+    assert rs["t"].size == n_ticks
+    assert np.isfinite(rs["price"]).all()
+    cs = cohort_summary(log)
+    assert cs["interruptions"]["total"] == s["interruptions"]

@@ -1,0 +1,89 @@
+"""Self-contained HTML reports: zero external dependencies, inline SVG
+charts, manifest header — for one recorded run and for a sweep report."""
+import json
+
+from repro.api import (
+    MigrationSpec,
+    ObsSpec,
+    PolicySpec,
+    RunSpec,
+    ScenarioSpec,
+    build,
+)
+from repro.obs import (
+    EventLog,
+    render_report,
+    render_sweep_report,
+    report_summary_json,
+    write_html_report,
+)
+
+
+def _run_log(seed=5, until=3600.0):
+    sim = build(RunSpec(
+        scenario=ScenarioSpec(workload="market", regime="volatile"),
+        policy=PolicySpec("hlem-vmp-adjusted", {"alpha": -0.5}),
+        migration=MigrationSpec("gradient-aware"),
+        obs=ObsSpec(events=True)), seed)
+    sim.run(until=until)
+    return sim.events
+
+
+def test_render_run_report_is_self_contained():
+    html = render_report(_run_log(), manifest={"seed": 5,
+                                               "spec_sha256": "abc123"})
+    assert html.lower().startswith("<!doctype html>")
+    assert "<svg" in html and "</svg>" in html
+    # no external fetches: self-contained means offline-viewable (the SVG
+    # xmlns URI is a namespace identifier, not a fetch)
+    assert "<script" not in html and "<link" not in html
+    assert "<img" not in html and "@import" not in html
+    # manifest header present
+    assert "abc123" in html
+    # the headline sections
+    assert "price" in html.lower()
+
+
+def test_render_report_empty_log():
+    html = render_report(EventLog(), title="Empty run")
+    assert html.lower().startswith("<!doctype html>")
+    assert "Empty run" in html
+
+
+def test_write_html_report_run_and_path(tmp_path):
+    log = _run_log()
+    path = str(tmp_path / "run.html")
+    out = write_html_report(log, path, manifest={"seed": 5})
+    assert out == path
+    text = open(path).read()
+    assert "<svg" in text
+
+
+def test_write_html_report_sweep_dict(tmp_path):
+    report = {
+        "name": "mini_sweep",
+        "cells": [
+            {"regime": "volatile", "policy": "hlem-vmp-adjusted",
+             "migration": "none",
+             "metrics": {"interruptions": {"mean": 120.0, "ci95": 8.0},
+                         "realized_spot_cost": {"mean": 42.5,
+                                                "ci95": 1.25}}},
+            {"regime": "calm", "policy": "hlem-vmp-adjusted",
+             "migration": "none",
+             "metrics": {"interruptions": {"mean": 30.0, "ci95": 2.0},
+                         "realized_spot_cost": {"mean": 21.0,
+                                                "ci95": 0.5}}},
+        ],
+    }
+    html = render_sweep_report(report)
+    assert "<svg" in html and "volatile" in html and "calm" in html
+    assert "120" in html
+    path = str(tmp_path / "sweep.html")
+    write_html_report(report, path)
+    assert "<svg" in open(path).read()
+
+
+def test_report_summary_json():
+    doc = json.loads(report_summary_json(_run_log()))
+    assert doc["events"] > 0
+    assert "storms" in doc

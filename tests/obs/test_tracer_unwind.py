@@ -1,0 +1,89 @@
+"""Tracer exception paths (ISSUE 8 satellite): when a handler raises
+mid-span, the span stack must unwind to well-nested closure — the aborted
+spans end normally (durations exact, child time still accumulated into
+parents) with ``aborted`` marker args — and the truncated trace must still
+export as schema-valid Chrome JSON."""
+import pytest
+
+from repro.api import (
+    MigrationSpec,
+    ObsSpec,
+    PolicySpec,
+    RunSpec,
+    ScenarioSpec,
+    build,
+)
+from repro.obs import (
+    NULL_TRACER,
+    Tracer,
+    chrome_trace,
+    validate_chrome_trace,
+)
+
+
+def test_unwind_closes_all_open_spans():
+    tr = Tracer(keep_records=True)
+    tr.begin("a", "outer")
+    tr.begin("a", "inner")
+    tr.begin("b", "leaf")
+    n = tr.unwind(42.0)
+    assert n == 3
+    assert tr._stack == []
+    assert len(tr.spans) == 3
+    # innermost closes first; every aborted span carries the marker args
+    assert [s[1] for s in tr.spans] == ["leaf", "inner", "outer"]
+    assert all(s[6] == {"aborted": True} for s in tr.spans)
+    assert all(s[4] == 42.0 for s in tr.spans)
+    # nesting stayed consistent: each parent's self time excludes children
+    for _cat, _name, _t0, dur, _sim, self_dur, _args in tr.spans:
+        assert 0.0 <= self_dur <= dur + 1e-12
+    # idempotent on an empty stack
+    assert tr.unwind(43.0) == 0
+
+
+def test_unwind_custom_args_and_profile():
+    tr = Tracer(keep_records=False, profile=True)
+    tr.begin("x", "s")
+    tr.unwind(1.0, args={"cause": "test"})
+    assert tr._stack == []
+    assert tr.profile()[("x", "s")][0] == 1
+
+
+def test_null_tracer_unwind_noop():
+    assert NULL_TRACER.unwind(0.0) == 0
+
+
+def test_exception_mid_run_leaves_wellnested_trace():
+    """A handler raising inside the traced event loop: the exception
+    propagates, every open span is closed, and the truncated trace is
+    schema-valid Chrome JSON."""
+    sim = build(RunSpec(
+        scenario=ScenarioSpec(workload="market", regime="volatile"),
+        policy=PolicySpec("hlem-vmp-adjusted", {"alpha": -0.5}),
+        migration=MigrationSpec("gradient-aware"),
+        obs=ObsSpec(trace=True, profile=True)), 0)
+
+    class Boom(RuntimeError):
+        pass
+
+    ticks = {"n": 0}
+    orig_tick = sim.engine.tick
+
+    def exploding_tick(*args, **kwargs):
+        ticks["n"] += 1
+        if ticks["n"] >= 5:
+            raise Boom("injected mid-span failure")
+        return orig_tick(*args, **kwargs)
+
+    sim.engine.tick = exploding_tick
+    with pytest.raises(Boom):
+        sim.run(until=7200.0)
+    # the stack unwound: nothing left open, spans recorded
+    assert sim.obs._stack == []
+    assert len(sim.obs.spans) > 0
+    # at least one span carries the aborted marker (the dispatch frame
+    # that was open when the handler blew up)
+    assert any(s[6] == {"aborted": True} for s in sim.obs.spans)
+    # truncated trace still exports schema-valid
+    doc = chrome_trace(sim.obs)
+    assert validate_chrome_trace(doc) == []
