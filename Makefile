@@ -1,0 +1,19 @@
+PY ?= python
+
+.PHONY: lint lint-json baseline test sanitize-smoke
+
+lint:
+	$(PY) -m tools.detlint src/
+
+lint-json:
+	$(PY) -m tools.detlint src/ --format=json
+
+baseline:
+	$(PY) -m tools.detlint src/ --write-baseline
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+sanitize-smoke:
+	PYTHONPATH=src $(PY) -m repro.launch.market_sim --market \
+	  --regimes volatile --policy first-fit --until 3600 --sanitize

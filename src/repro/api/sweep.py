@@ -186,7 +186,7 @@ def run_experiment(exp: ExperimentSpec, processes: Optional[int] = None,
     *default* report is byte-deterministic (two runs of the same spec are
     identical artifacts; the determinism tests rely on it).  The CLI turns
     it on for every report it writes.  Resume ignores the block."""
-    t_session = time.perf_counter()
+    t_session = time.perf_counter()  # detlint: disable=no-wallclock — stderr ETA only, never in the report
     cells = exp.cells()
     n_seeds = len(exp.seeds)
     horizon = until if until is not None else resolve_horizon(exp.scenario)
@@ -210,7 +210,7 @@ def run_experiment(exp: ExperimentSpec, processes: Optional[int] = None,
     pending: List[dict] = []
     done_jobs = n_done * n_seeds
     session_jobs = 0                      # jobs actually run this session
-    t_cell = time.perf_counter()          # start of the current cell
+    t_cell = time.perf_counter()          # detlint: disable=no-wallclock — stderr ETA only, never in the report
 
     def _collect(row: dict) -> None:
         nonlocal done_jobs, session_jobs, t_cell
@@ -220,7 +220,7 @@ def run_experiment(exp: ExperimentSpec, processes: Optional[int] = None,
         if progress:
             # ETA from this session's throughput only — resumed cells were
             # free and must not make the estimate optimistic
-            elapsed = time.perf_counter() - t_session
+            elapsed = time.perf_counter() - t_session  # detlint: disable=no-wallclock — stderr ETA only
             rate = elapsed / session_jobs
             eta = rate * (n_runs - done_jobs)
             print(f"# sweep {done_jobs}/{n_runs}  "
@@ -230,7 +230,7 @@ def run_experiment(exp: ExperimentSpec, processes: Optional[int] = None,
             report_cells.append(
                 _report_cell(exp, cells[len(report_cells)], pending[:]))
             pending.clear()
-            now = time.perf_counter()
+            now = time.perf_counter()  # detlint: disable=no-wallclock — stderr ETA only
             if progress:
                 print(f"# sweep cell {len(report_cells)}/{len(cells)} "
                       f"done in {now - t_cell:.2f}s",
@@ -266,7 +266,7 @@ def run_experiment(exp: ExperimentSpec, processes: Optional[int] = None,
     if manifest:
         report["manifest"] = run_manifest(
             spec_dict=exp.to_dict(), seed=list(exp.seeds),
-            duration_s=time.perf_counter() - t_session,
+            duration_s=time.perf_counter() - t_session,  # detlint: disable=no-wallclock — manifest is opt-in wall metadata
             extra={"resumed_cells": n_done})
     if report_path:
         _atomic_write(report, report_path)

@@ -27,7 +27,6 @@ class EventKind(enum.Enum):
     HOST_ADD = "host-add"
     HOST_REMOVE = "host-remove"
     HOST_UPDATE = "host-update"
-    END_OF_SIMULATION = "end-of-simulation"
 
 
 # lower = processed earlier at equal timestamps
@@ -49,7 +48,6 @@ PRIORITY = {
     # migrations are opportunistic: same-time fresh submissions claim
     # capacity first, the start handler re-validates its reservation target
     EventKind.MIGRATE_START: 7,
-    EventKind.END_OF_SIMULATION: 9,
 }
 
 

@@ -148,7 +148,7 @@ class HostPool:
         pad = new_cap - cap
 
         def vpad(a, fill=0.0):
-            return np.vstack([a, np.full((pad, N_DIMS), fill)])
+            return np.vstack([a, np.full((pad, N_DIMS), fill, dtype=np.float64)])
 
         self.total = vpad(self.total)
         self.used = vpad(self.used)
@@ -159,9 +159,9 @@ class HostPool:
         self._spot_frac = vpad(self._spot_frac)
         self._tot_clamped = vpad(self._tot_clamped, _EPS)
         self._rs_tot_cpu = np.concatenate(
-            [self._rs_tot_cpu, np.full(pad, _EPS_RS)])
+            [self._rs_tot_cpu, np.full(pad, _EPS_RS, dtype=np.float64)])
         self._rs_util_cpu = np.concatenate(
-            [self._rs_util_cpu, np.zeros(pad)])
+            [self._rs_util_cpu, np.zeros(pad, dtype=np.float64)])
         self._reclaim_ready = vpad(self._reclaim_ready)
         self._scratch_ge = np.zeros((new_cap, N_DIMS), dtype=bool)
         self._scratch_row = np.zeros(new_cap, dtype=bool)
@@ -170,7 +170,7 @@ class HostPool:
         self.pool_of = np.concatenate(
             [self.pool_of, np.zeros(pad, dtype=np.int64)])
         self._host_price = np.concatenate(
-            [self._host_price, np.zeros(pad)])
+            [self._host_price, np.zeros(pad, dtype=np.float64)])
         self._scratch_adm = np.zeros(new_cap, dtype=bool)
 
     def _refresh_static_row(self, hid: int) -> None:
@@ -280,7 +280,7 @@ class HostPool:
 
     def cpu_utilization(self) -> np.ndarray:
         tot = self.total[: self.n, 0]
-        return np.divide(self.used[: self.n, 0], tot, out=np.zeros(self.n), where=tot > 0)
+        return np.divide(self.used[: self.n, 0], tot, out=np.zeros(self.n, dtype=np.float64), where=tot > 0)
 
     def rsdiff_inputs(self) -> Tuple[np.ndarray, np.ndarray]:
         """Cached (clamped cpu totals, cpu utilization) for Eq. 1."""
@@ -525,7 +525,7 @@ class HostPool:
                            minlength=self.n_pools)
         tot = np.bincount(pools, weights=self.total[:n, 0][act],
                           minlength=self.n_pools)
-        return np.divide(used, tot, out=np.zeros(self.n_pools),
+        return np.divide(used, tot, out=np.zeros(self.n_pools, dtype=np.float64),
                          where=tot > 0)
 
     # -- market registry (vectorized wave selection) -------------------------
@@ -702,13 +702,13 @@ class HostPool:
     # -- invariant checks (used by property tests) ---------------------------
     def check_invariants(self, now: Optional[float] = None) -> None:
         n = self.n
-        reserved_sum = np.zeros((n, N_DIMS))
+        reserved_sum = np.zeros((n, N_DIMS), dtype=np.float64)
         for _vid, (rhid, dem) in self._reserved.items():
             reserved_sum[rhid] += dem
         for hid in range(n):
             res = sum(
                 (v.demand for v in self.residents[hid].values()),
-                np.zeros(N_DIMS),
+                np.zeros(N_DIMS, dtype=np.float64),
             ) + reserved_sum[hid]
             assert np.allclose(res, self.used[hid], atol=1e-6), (
                 f"host {hid}: used {self.used[hid]} != resident+reserved sum "
@@ -716,7 +716,7 @@ class HostPool:
             )
             spot = sum(
                 (v.demand for v in self.residents[hid].values() if v.is_spot),
-                np.zeros(N_DIMS),
+                np.zeros(N_DIMS, dtype=np.float64),
             )
             assert np.allclose(spot, self.spot_used[hid], atol=1e-6)
             assert np.all(self.used[hid] <= self.total[hid] + 1e-6), (
@@ -733,7 +733,7 @@ class HostPool:
         assert np.allclose(self.used[:n, 0] / tc, self._rs_util_cpu[:n])
         # reclaim index: every counted VM is a resident spot VM; per-host sums
         # match; every RUNNING resident spot VM is tracked exactly once
-        ready_sum = np.zeros((n, N_DIMS))
+        ready_sum = np.zeros((n, N_DIMS), dtype=np.float64)
         for vid, hid in self._reclaim_counted.items():
             vm = self.residents[hid].get(vid)
             assert vm is not None and vm.is_spot, (
@@ -753,7 +753,7 @@ class HostPool:
                 expect = sum(
                     (v.demand for v in self.residents[hid].values()
                      if v.interruptible(now)),
-                    np.zeros(N_DIMS),
+                    np.zeros(N_DIMS, dtype=np.float64),
                 )
                 assert np.allclose(expect, self._reclaim_ready[hid],
                                    atol=1e-6), (

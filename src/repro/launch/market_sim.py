@@ -252,6 +252,53 @@ def run_market(policy_name: str, regime: str, seed: int, until: float = 14400.0,
     return row
 
 
+def run_sanitized(args) -> int:
+    """One fixed-seed run inside :func:`repro.obs.sanitized` — wall-clock
+    and global-RNG calls raise anywhere on the sim path, verifying at
+    runtime what detlint's ``no-wallclock``/``no-global-rng`` rules claim
+    statically.  Spec construction and ``build_run`` happen *outside* the
+    scope (building draws from seeded Generators, which stay allowed);
+    only the event loop itself runs sanitized."""
+    from repro.obs.sanitize import sanitized
+    if args.market:
+        regime = args.regimes.split(",")[0]
+        policy = args.policy if args.policy != "all" else "hlem-vmp-adjusted"
+        migration = args.migration.split(",")[0]
+        spec = RunSpec(
+            scenario=_market_scenario_spec(regime, args.pools,
+                                           args.bid_strategy, args.tick,
+                                           not args.flat_volatility),
+            policy=_policy_spec(policy, args.alpha),
+            migration=MigrationSpec("none" if migration == "all"
+                                    else migration),
+            rebid=RebidSpec() if args.rebid else None,
+            fleet=(FleetSpec(strategy=args.fleet,
+                             params={"target_capacity": args.fleet_target})
+                   if args.fleet and args.fleet != "compare" else None),
+            faults=FaultSpec(scenario=args.faults) if args.faults else None)
+        until = args.until if args.until is not None else 14400.0
+    else:
+        policy = args.policy if args.policy != "all" else "first-fit"
+        spec = RunSpec(
+            scenario=ScenarioSpec(
+                workload="synthetic",
+                sim_params={"interruption_selector": args.selector}),
+            policy=_policy_spec(policy, args.alpha))
+        until = args.until if args.until is not None else 3000.0
+    sim = build_run(spec, args.seed)
+    with sanitized():
+        metrics = sim.run(until=until)
+    row = collect_row(sim, metrics, spec, args.seed)
+    row["sanitized"] = True
+    if args.json:
+        print(json.dumps({"rows": [row]}, indent=1))
+    else:
+        print(f"# sanitized run ok: seed={args.seed} until={until} "
+              f"policy={row.get('policy')} — no wall-clock or global-RNG "
+              "calls on the sim path")
+    return 0
+
+
 def _cli_manifest(args, t0: float) -> dict:
     """The provenance block for CLI-assembled (possibly multi-row) runs:
     the manifest's spec dict is the parsed CLI namespace, so the hash
@@ -362,6 +409,11 @@ def main(argv=None) -> int:
                     help="standalone mode: diff two recorded event logs "
                          "and report the first divergence (exit 1 when the "
                          "runs diverge)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run one fixed-seed run with the runtime determinism "
+                         "sanitizer armed: time.time/random.*/legacy "
+                         "np.random.* raise inside the sim scope (the dynamic "
+                         "twin of tools/detlint's no-wallclock/no-global-rng)")
     ap.add_argument("--force-progress", action="store_true",
                     help="emit live stderr progress lines even when stderr "
                          "is not a terminal (they are suppressed by default "
@@ -420,6 +472,11 @@ def main(argv=None) -> int:
 
     if args.diff is not None:
         return _diff_logs(*args.diff)
+    if args.sanitize:
+        if args.sweep or args.spec:
+            ap.error("--sanitize applies to a single fixed-seed run "
+                     "(not --sweep/--spec)")
+        return run_sanitized(args)
     if args.sweep and not (args.market or args.spec):
         ap.error("--sweep requires --market (or use --spec FILE)")
     if (args.fleet or args.faults) and not args.market:

@@ -92,13 +92,14 @@ class MarketEngine:
         assert self.n_pools >= 1, "market needs at least one pool"
         self.tick_interval = float(config.tick_interval)
         self.processes = [_build_process(p) for p in config.pools]
-        self.od_rates = np.array([p.on_demand_rate for p in config.pools])
+        self.od_rates = np.array([p.on_demand_rate for p in config.pools],
+                                 dtype=np.float64)
         self._rng = np.random.default_rng(config.seed)
         #: per-pool shock streams (identical seeds to the scalar processes,
         #: so oracle and vectorized paths consume the same randomness)
         self._pool_rngs = [np.random.default_rng(p.seed)
                            for p in config.pools]
-        self._shock_block = np.zeros((0, self.n_pools))
+        self._shock_block = np.zeros((0, self.n_pools), dtype=np.float64)
         self._shock_pos = 0
         #: fused family step (default) vs per-pool scalar oracle walk
         self.use_vectorized = bool(getattr(config, "vectorized", True))
@@ -109,17 +110,17 @@ class MarketEngine:
         #: market-wide squeezes build and decay over several ticks instead
         #: of redrawing independently each tick
         self._shared_shock = 0.0
-        self.prices = np.zeros(self.n_pools)
+        self.prices = np.zeros(self.n_pools, dtype=np.float64)
         #: last pool-utilization vector fed to the processes (risk fans
         #: project forward holding this demand signal)
-        self.last_util = np.zeros(self.n_pools)
+        self.last_util = np.zeros(self.n_pools, dtype=np.float64)
         # piecewise-constant price history, preallocated: at tick k (time
         # tick_times()[k]) pool i clears at price_history()[i, k];
         # _cum_buf[i, k] = ∫_0^{ts[k]} price_i dt
         self._hist_cap = 256
-        self._ts_buf = np.zeros(self._hist_cap)
-        self._ph_buf = np.zeros((self.n_pools, self._hist_cap))
-        self._cum_buf = np.zeros((self.n_pools, self._hist_cap))
+        self._ts_buf = np.zeros(self._hist_cap, dtype=np.float64)
+        self._ph_buf = np.zeros((self.n_pools, self._hist_cap), dtype=np.float64)
+        self._cum_buf = np.zeros((self.n_pools, self._hist_cap), dtype=np.float64)
         self._n_ticks = 0
 
     # -------------------------------------------------------- packed groups
@@ -182,7 +183,8 @@ class MarketEngine:
         if self._shock_pos >= self._shock_block.shape[0]:
             self._shock_block = np.stack(
                 [g.standard_normal(_SHOCK_BLOCK) for g in self._pool_rngs],
-                axis=1) if self.n_pools else np.zeros((_SHOCK_BLOCK, 0))
+                axis=1) if self.n_pools else np.zeros((_SHOCK_BLOCK, 0),
+                                                      dtype=np.float64)
             self._shock_pos = 0
         z = self._shock_block[self._shock_pos]
         self._shock_pos += 1
@@ -204,7 +206,7 @@ class MarketEngine:
         util = host_pool.pool_cpu_utilization()
         if util.size < self.n_pools:
             util = np.concatenate(
-                [util, np.zeros(self.n_pools - util.size)])
+                [util, np.zeros(self.n_pools - util.size, dtype=np.float64)])
         if self.config.correlation > 0.0:
             rho = self.config.shock_rho
             innov = float(self._rng.normal(
@@ -265,11 +267,11 @@ class MarketEngine:
 
     def _grow_history(self, need: int) -> None:
         cap = max(need, self._hist_cap * 2)
-        ts = np.zeros(cap)
+        ts = np.zeros(cap, dtype=np.float64)
         ts[: self._n_ticks] = self._ts_buf[: self._n_ticks]
-        ph = np.zeros((self.n_pools, cap))
+        ph = np.zeros((self.n_pools, cap), dtype=np.float64)
         ph[:, : self._n_ticks] = self._ph_buf[:, : self._n_ticks]
-        cum = np.zeros((self.n_pools, cap))
+        cum = np.zeros((self.n_pools, cap), dtype=np.float64)
         cum[:, : self._n_ticks] = self._cum_buf[:, : self._n_ticks]
         self._ts_buf, self._ph_buf, self._cum_buf = ts, ph, cum
         self._hist_cap = cap
@@ -311,11 +313,11 @@ class MarketEngine:
         if self.tracer.enabled:
             self.tracer.counters.inc("billing/calls")
             self.tracer.counters.inc("billing/spans", int(b))
-        out = np.zeros(b)
+        out = np.zeros(b, dtype=np.float64)
         k = self._n_ticks
         if b == 0 or k == 0:
             return out
-        caps = (np.full(b, np.inf) if caps is None
+        caps = (np.full(b, np.inf, dtype=np.float64) if caps is None
                 else np.asarray(caps, dtype=np.float64))
         ts = self._ts_buf[:k]
         finite = np.isfinite(caps)
@@ -325,7 +327,7 @@ class MarketEngine:
         if finite.any():
             sel = np.flatnonzero(finite)
             ph = self._ph_buf
-            ts_next = np.empty(k)
+            ts_next = np.empty(k, dtype=np.float64)
             ts_next[:-1] = ts[1:]
             ts_next[-1] = np.inf
             # each query only touches the segments its span overlaps
@@ -354,9 +356,10 @@ class MarketEngine:
                     continue
                 lens_c = lens[lo:hi]
                 base = starts[lo:hi] - starts[lo]
-                rows = np.repeat(np.arange(lo, hi), lens_c)
+                rows = np.repeat(np.arange(lo, hi, dtype=np.int64), lens_c)
                 col = (np.repeat(j0[lo:hi], lens_c)
-                       + np.arange(total) - np.repeat(base, lens_c))
+                       + np.arange(total, dtype=np.int64)
+                       - np.repeat(base, lens_c))
                 q = sel[rows]
                 p = np.minimum(ph[pids[q], col], caps[q])
                 over = (np.minimum(ts_next[col], t1s[q])
@@ -390,8 +393,10 @@ class MarketEngine:
         if t1 <= t0 or self._n_ticks == 0:
             return 0.0
         return float(self.price_integrals(
-            np.asarray([pid]), np.asarray([t0]), np.asarray([t1]),
-            np.asarray([cap]))[0])
+            np.asarray([pid], dtype=np.int64),
+            np.asarray([t0], dtype=np.float64),
+            np.asarray([t1], dtype=np.float64),
+            np.asarray([cap], dtype=np.float64))[0])
 
     def discount_integrals(self, pids, t0s, t1s, caps=None) -> np.ndarray:
         """Batched ∫ min(price, cap)/on_demand_rate dt — the fleet's

@@ -340,7 +340,8 @@ def draw_shock_table(seeds: Sequence[int], n_ticks: int) -> np.ndarray:
     from ``default_rng(seeds[i])`` — the exact per-pool streams the engine
     consumes tick by tick, so offline replays see identical randomness."""
     cols = [np.random.default_rng(s).standard_normal(n_ticks) for s in seeds]
-    return np.stack(cols, axis=1) if cols else np.zeros((n_ticks, 0))
+    return np.stack(cols, axis=1) if cols else np.zeros((n_ticks, 0),
+                                                        dtype=np.float64)
 
 
 def simulate_price_paths(family, state: MarketState, utils, shocks,
@@ -363,7 +364,7 @@ def simulate_price_paths(family, state: MarketState, utils, shocks,
         out = []
         for t in range(shocks.shape[0]):
             state, p = family.step(state, utils[t], shocks[t])
-            out.append(np.asarray(p))
+            out.append(np.asarray(p, dtype=np.float64))
         return (np.stack(out) if out
                 else np.zeros_like(shocks)), state
     if backend != "jax":
@@ -389,13 +390,15 @@ def simulate_price_paths(family, state: MarketState, utils, shocks,
                                        shocks.shape[1:])
                    for k, v in state.items()}
         final, prices = jax.lax.scan(
-            _step, state64, (jnp.asarray(utils), jnp.asarray(shocks)))
-        return (np.asarray(prices),
-                {k: np.asarray(v) for k, v in final.items()})
+            _step, state64, (jnp.asarray(utils, dtype=jnp.float64),
+                             jnp.asarray(shocks, dtype=jnp.float64)))
+        return (np.asarray(prices, dtype=np.float64),
+                {k: np.asarray(v, dtype=np.float64) for k, v in final.items()})
 
 
 def simulate_price_series(process, utilizations) -> np.ndarray:
-    return np.asarray([process.price(u) for u in utilizations])
+    return np.asarray([process.price(u) for u in utilizations],
+                      dtype=np.float64)
 
 
 def _mean_reverting_utilization(n: int, seed: int) -> List[float]:
@@ -420,7 +423,7 @@ def regime_comparison(n: int = 2000, seed: int = 0,
     to the scalar walk up to last-ULP exp/pow differences)."""
     us = _mean_reverting_utilization(n, seed)
     if use_scan:
-        utils = np.asarray(us)[:, None]                  # (T, 1)
+        utils = np.asarray(us, dtype=np.float64)[:, None]  # (T, 1)
         shocks = draw_shock_table([seed], n)             # auction's stream
         auction, _ = simulate_price_paths(
             AUCTION_FAMILY, AUCTION_FAMILY.init([{"seed": seed}]),

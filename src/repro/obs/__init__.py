@@ -25,9 +25,9 @@ Public surface:
   blocks for committed artifacts (``repro.obs.manifest``).
 """
 from .tracer import NULL_TRACER, Counters, NullTracer, Tracer
-from .eventlog import (EVENT_KINDS, NULL_RECORDER, EventLog, NullRecorder,
-                       iter_event_records, load_event_log, read_manifest,
-                       validate_event_log, write_event_log)
+from .eventlog import (EVENT_KINDS, NULL_RECORDER, EventLog, LogEventKind,
+                       NullRecorder, iter_event_records, load_event_log,
+                       read_manifest, validate_event_log, write_event_log)
 from .diff import (Divergence, bisect_divergence, first_divergence,
                    format_divergence)
 from .analyze import (cohort_summary, interruption_intensity,
@@ -39,10 +39,11 @@ from .export import chrome_trace, validate_chrome_trace, write_chrome_trace
 from .profile import (format_profile_table, profile_report, profile_table,
                       write_profile)
 from .manifest import run_manifest, spec_hash
+from .sanitize import SanitizerViolation, sanitized
 
 __all__ = [
     "Tracer", "NullTracer", "NULL_TRACER", "Counters",
-    "EventLog", "NullRecorder", "NULL_RECORDER", "EVENT_KINDS",
+    "EventLog", "NullRecorder", "NULL_RECORDER", "EVENT_KINDS", "LogEventKind",
     "load_event_log", "iter_event_records", "read_manifest",
     "validate_event_log", "write_event_log",
     "Divergence", "first_divergence", "bisect_divergence",
@@ -55,4 +56,5 @@ __all__ = [
     "profile_table", "profile_report", "write_profile",
     "format_profile_table",
     "run_manifest", "spec_hash",
+    "SanitizerViolation", "sanitized",
 ]

@@ -33,6 +33,7 @@ in ``tests/obs/test_eventlog.py``; perf half CI-gated via
 """
 from __future__ import annotations
 
+import enum
 import json
 import os
 from typing import Dict, Iterator, List, Optional, Tuple
@@ -42,15 +43,40 @@ import numpy as np
 SCHEMA = "repro.eventlog"
 SCHEMA_VERSION = 1
 
-#: the full event vocabulary — validation rejects logs naming anything else
-EVENT_KINDS = (
-    "submit", "start", "resume", "finish", "fail", "interrupt",
-    "hibernate", "terminate",
-    "migrate-plan", "migrate-start", "migrate-complete",
-    "price-tick", "wave", "fault",
-    "fleet-rung", "fleet-launch", "fleet-retire",
-    "alloc-flush", "host-add", "host-remove",
-)
+
+class LogEventKind(str, enum.Enum):
+    """The full event vocabulary — the single source of truth.
+
+    Validation (:func:`validate_event_log`), the detlint ``event-coverage``
+    pass, and the analytics layer all derive their known-kind sets from
+    this enum, so adding a kind here without wiring its emit site (or vice
+    versa) fails closed instead of silently passing.
+    """
+
+    SUBMIT = "submit"
+    START = "start"
+    RESUME = "resume"
+    FINISH = "finish"
+    FAIL = "fail"
+    INTERRUPT = "interrupt"
+    HIBERNATE = "hibernate"
+    TERMINATE = "terminate"
+    MIGRATE_PLAN = "migrate-plan"
+    MIGRATE_START = "migrate-start"
+    MIGRATE_COMPLETE = "migrate-complete"
+    PRICE_TICK = "price-tick"
+    WAVE = "wave"
+    FAULT = "fault"
+    FLEET_RUNG = "fleet-rung"
+    FLEET_LAUNCH = "fleet-launch"
+    FLEET_RETIRE = "fleet-retire"
+    ALLOC_FLUSH = "alloc-flush"
+    HOST_ADD = "host-add"
+    HOST_REMOVE = "host-remove"
+
+
+#: kept as a tuple for existing callers; derived from the enum above
+EVENT_KINDS = tuple(k.value for k in LogEventKind)
 
 #: one normalized record: (t, kind, vm, pool, host, a, b, aux)
 Record = Tuple[float, str, int, int, int, float, float, Optional[str]]
@@ -308,7 +334,7 @@ def validate_event_log(src) -> List[str]:
         records = iter_event_records(src)
     else:
         records = src.records()
-    known = set(EVENT_KINDS)
+    known = {k.value for k in LogEventKind}
     last_t = float("-inf")
     bad_kinds = set()
     for i, (t, kind, vm, pool, host, a, b, aux) in enumerate(records):

@@ -135,6 +135,11 @@ def test_builtin_scenarios_compile_and_random_storms_are_seeded():
         fi = make_fault_injector(name, 4, 14400.0, 60.0, 0)
         assert fi.events and all(e.kind in name or e.kind == "storm"
                                  for e in fi.events)
+    scripted = make_fault_injector(
+        "scripted", 4, 14400.0, 60.0, 0,
+        events=[{"kind": "storm", "t0": 120.0, "magnitude": 0.5},
+                FaultEvent("pool-outage", 60.0, 30.0, (1,))])
+    assert [e.kind for e in scripted.events] == ["pool-outage", "storm"]
     a = make_fault_injector("random-storms", 4, 14400.0, 60.0, seed=3)
     b = make_fault_injector("random-storms", 4, 14400.0, 60.0, seed=3)
     c = make_fault_injector("random-storms", 4, 14400.0, 60.0, seed=4)

@@ -1,0 +1,120 @@
+"""Runtime determinism sanitizer (the dynamic twin of tools/detlint) and
+the LogEventKind-derived validation vocabulary."""
+import random
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.api import MigrationSpec, PolicySpec, RunSpec, ScenarioSpec
+from repro.api.build import build, collect_row, run_one
+from repro.obs import EVENT_KINDS, LogEventKind, SanitizerViolation, sanitized
+from repro.obs import eventlog as eventlog_mod
+from repro.obs import EventLog, validate_event_log
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+
+
+def _market_spec():
+    return RunSpec(
+        scenario=ScenarioSpec(workload="market", regime="volatile"),
+        policy=PolicySpec("first-fit"),
+        migration=MigrationSpec("none"))
+
+
+# ---------------------------------------------------------------------------
+# sanitized() scope mechanics
+# ---------------------------------------------------------------------------
+def test_sanitized_blocks_wallclock_and_global_rng():
+    with sanitized():
+        with pytest.raises(SanitizerViolation, match="time.time"):
+            time.time()
+        with pytest.raises(SanitizerViolation, match="perf_counter"):
+            time.perf_counter()
+        with pytest.raises(SanitizerViolation, match="random.random"):
+            random.random()
+        with pytest.raises(SanitizerViolation, match="np.random.rand"):
+            np.random.rand(2)
+        with pytest.raises(SanitizerViolation, match="np.random.seed"):
+            np.random.seed(0)
+
+
+def test_sanitized_allows_seeded_generators():
+    with sanitized():
+        rng = np.random.default_rng(7)
+        assert rng.standard_normal(3).shape == (3,)
+        local = random.Random(7)
+        assert 0.0 <= local.random() < 1.0
+
+
+def test_sanitized_restores_on_exit_and_on_error():
+    t_before = time.time
+    with sanitized():
+        assert time.time is not t_before
+    assert time.time is t_before and isinstance(time.time(), float)
+    with pytest.raises(RuntimeError, match="boom"):
+        with sanitized():
+            raise RuntimeError("boom")
+    assert time.time is t_before
+    assert isinstance(random.random(), float)
+    assert np.random.rand(1).shape == (1,)
+
+
+# ---------------------------------------------------------------------------
+# the sim path really is clock/RNG free — and sanitizing changes nothing
+# ---------------------------------------------------------------------------
+def test_fixed_seed_market_run_survives_sanitizer():
+    spec = _market_spec()
+    plain = run_one(spec, seed=3, until=3600.0)
+    sim = build(spec, 3)
+    with sanitized():
+        metrics = sim.run(until=3600.0)
+    assert collect_row(sim, metrics, spec, 3) == plain
+
+
+def test_cli_sanitize_flag_smoke():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.market_sim", "--market",
+         "--regimes", "volatile", "--policy", "first-fit",
+         "--until", "1800", "--sanitize"],
+        cwd=REPO_ROOT, capture_output=True, text=True, timeout=300,
+        env={**__import__("os").environ, "PYTHONPATH": "src"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "sanitized run ok" in proc.stdout
+
+
+def test_sanitizer_catches_a_violation_in_sim_scope():
+    """A deliberately planted clock read inside the sim scope raises."""
+    sim = build(_market_spec(), 0)
+    original = sim.run
+
+    def tainted_run(until=None):
+        time.time()                    # the planted violation
+        return original(until=until)
+
+    sim.run = tainted_run
+    with pytest.raises(SanitizerViolation):
+        with sanitized():
+            sim.run(until=600.0)
+
+
+# ---------------------------------------------------------------------------
+# LogEventKind-derived validation (the runtime twin of event-coverage)
+# ---------------------------------------------------------------------------
+def test_event_kinds_tuple_is_derived_from_enum():
+    assert EVENT_KINDS == tuple(k.value for k in LogEventKind)
+    assert len(LogEventKind) == 20
+
+
+def test_validation_fails_closed_on_dummy_kind(monkeypatch):
+    """Validation keys on the enum itself: smuggling a dummy kind into the
+    legacy EVENT_KINDS tuple does NOT make it validate."""
+    monkeypatch.setattr(eventlog_mod, "EVENT_KINDS",
+                        eventlog_mod.EVENT_KINDS + ("dummy-kind",))
+    log = EventLog()
+    log.emit(1.0, "dummy-kind", vm=1)
+    problems = validate_event_log(log)
+    assert any("unknown event kind 'dummy-kind'" in p for p in problems)

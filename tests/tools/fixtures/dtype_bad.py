@@ -1,0 +1,9 @@
+"""Bad: dtype-less constructors at the packed-array boundary."""
+import numpy as np
+
+
+def pack(n):
+    prices = np.zeros(n)               # line 6: dtype-discipline
+    caps = np.full(n, np.inf)          # line 7: dtype-discipline
+    cols = np.asarray([1.0, 2.0])      # line 8: dtype-discipline
+    return prices, caps, cols

@@ -1,0 +1,10 @@
+"""Good: every constructor pins its dtype."""
+import numpy as np
+
+
+def pack(n):
+    prices = np.zeros(n, dtype=np.float64)
+    caps = np.full(n, np.inf, dtype=np.float64)
+    cols = np.asarray([1.0, 2.0], dtype=np.float64)
+    like = np.zeros_like(prices)       # inherits dtype: fine
+    return prices, caps, cols, like

@@ -1,0 +1,14 @@
+"""Event-coverage fixture: one fully wired kind, two half-wired ones."""
+import enum
+
+
+class EventKind(enum.Enum):
+    ALPHA = "alpha"
+    BETA = "beta"     # line 7: no PRIORITY entry, no dispatch branch, no push
+    GAMMA = "gamma"   # line 8: dispatched but never pushed
+
+
+PRIORITY = {
+    EventKind.ALPHA: 0,
+    EventKind.GAMMA: 1,
+}

@@ -1,0 +1,16 @@
+"""Event-coverage fixture simulator: handles ALPHA and GAMMA only."""
+from .events import EventKind
+
+
+class Sim:
+    def _dispatch(self, ev):
+        kind = ev.kind
+        if kind is EventKind.ALPHA:
+            self.queue.push(1.0, EventKind.ALPHA)
+            self.events.emit(1.0, "alpha")
+        elif kind is EventKind.GAMMA:
+            self.events.emit(1.0, "mystery")   # line 12: undeclared log kind
+
+    def _run_traced(self, ev):
+        with self.tracer.span("dispatch/" + ev.kind.name):
+            self._dispatch(ev)

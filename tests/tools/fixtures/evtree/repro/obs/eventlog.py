@@ -1,0 +1,7 @@
+"""Event-coverage fixture log vocabulary: one live kind, one orphan."""
+import enum
+
+
+class LogEventKind(str, enum.Enum):
+    ALPHA = "alpha"
+    ORPHAN = "orphan"   # line 7: declared but never emitted

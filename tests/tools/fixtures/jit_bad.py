@@ -1,0 +1,29 @@
+"""Bad: impure functions handed to jax tracing."""
+import jax
+
+TRACE_LOG = []
+_cache = {}
+
+
+@jax.jit
+def leaky_step(x):
+    TRACE_LOG.append(x)        # line 10: jit-purity (mutates closed-over list)
+    print("stepping", x)       # line 11: jit-purity (I/O)
+    return x * 2
+
+
+def scan_body(carry, x):
+    _cache[x] = carry          # line 16: jit-purity (writes closed-over dict)
+    return carry + x, carry
+
+
+def run(xs):
+    return jax.lax.scan(scan_body, 0.0, xs)
+
+
+class BadFamily:
+    vectorized = True
+
+    def step(self, state, util, shock):
+        self.last_state = state    # line 28: jit-purity (writes through self)
+        return state, state["p"]

@@ -1,0 +1,27 @@
+"""Good: pure traced functions — fresh state out, nothing mutated."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def pure_step(x):
+    y = x * 2
+    out = []                  # local list: fine
+    out.append(y)             # mutating a local: fine
+    return out[0]
+
+
+def scan_body(carry, x):
+    return carry + x, carry
+
+
+def run(xs):
+    return jax.lax.scan(scan_body, jnp.float64(0.0), xs)
+
+
+class GoodFamily:
+    vectorized = True
+
+    def step(self, state, util, shock):
+        nxt = {**state, "p": state["p"] * 0.5 + util}
+        return nxt, nxt["p"]

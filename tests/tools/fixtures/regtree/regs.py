@@ -1,0 +1,28 @@
+"""Registry-coverage fixture: duplicate, untested, and loop registrations."""
+from repro.api.registry import POLICY_REGISTRY, register_policy
+
+LOOP_NAMES = ("loop-a", "loop-b")
+
+
+@register_policy("fixture-dup")
+def one():
+    return 1
+
+
+@register_policy("fixture-dup")          # line 12: duplicate registration
+def two():
+    return 2
+
+
+@register_policy("fixture-untested")     # line 17: no test references it
+def three():
+    return 3
+
+
+for _n in LOOP_NAMES:
+    POLICY_REGISTRY.register(_n, object())
+
+
+def register_dynamic(name):
+    # helper plumbing: name is a parameter, not a registration site
+    POLICY_REGISTRY.register(name, object())

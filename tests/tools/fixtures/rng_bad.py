@@ -1,0 +1,13 @@
+"""Bad: global / legacy RNG entry points."""
+import random
+
+import numpy as np
+from random import randint
+
+
+def draw():
+    a = random.random()        # line 9: no-global-rng
+    b = np.random.rand(3)      # line 10: no-global-rng (legacy numpy)
+    np.random.seed(0)          # line 11: no-global-rng (global seeding)
+    c = randint(0, 10)         # line 12: no-global-rng (from-import)
+    return a, b, c

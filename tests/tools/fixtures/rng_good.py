@@ -1,0 +1,11 @@
+"""Good: explicitly seeded Generators, threaded through."""
+import random
+
+import numpy as np
+
+
+def draw(seed: int):
+    rng = np.random.default_rng(seed)
+    ss = np.random.SeedSequence(seed)
+    local = random.Random(seed)
+    return rng.standard_normal(3), ss.spawn(2), local.random()

@@ -1,0 +1,15 @@
+"""Bad: a *Spec dataclass whose round-trip drops a field."""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class BrokenSpec:
+    alpha: float = 0.5
+    beta: float = 1.0          # line 8: spec-roundtrip-fields (missing below)
+
+    def to_dict(self):
+        return {"alpha": self.alpha}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(alpha=d["alpha"])

@@ -1,0 +1,10 @@
+"""Bad: float accumulation over unordered set iteration."""
+
+
+def total_cost(costs, extra):
+    t = sum({round(c, 2) for c in costs})        # line 5: set comprehension
+    u = sum(c * 2.0 for c in set(costs))         # line 6: genexp over set()
+    acc = 0.0
+    for c in set(costs) | set(extra):            # line 8: loop over set union
+        acc += c
+    return t + u + acc

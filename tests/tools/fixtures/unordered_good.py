@@ -1,0 +1,11 @@
+"""Good: accumulation order pinned by sorting (or ordered sequences)."""
+
+
+def total_cost(costs, extra):
+    t = sum(sorted({round(c, 2) for c in costs}))
+    u = sum(c * 2.0 for c in sorted(set(costs)))
+    acc = 0.0
+    for c in sorted(set(costs) | set(extra)):
+        acc += c
+    seen = {k: v for k, v in enumerate(costs)}   # dicts are insertion-ordered
+    return t + u + acc + sum(seen.values())

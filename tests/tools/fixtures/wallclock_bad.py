@@ -1,0 +1,11 @@
+"""Bad: wall-clock reads on the sim path (every flagged line is exact)."""
+import time
+from datetime import datetime
+from time import perf_counter as pc
+
+
+def stamp():
+    t0 = time.time()          # line 8: no-wallclock
+    t1 = pc()                 # line 9: no-wallclock (aliased from-import)
+    t2 = datetime.now()       # line 10: no-wallclock
+    return t0, t1, t2

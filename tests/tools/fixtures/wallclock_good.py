@@ -1,0 +1,9 @@
+"""Good: sim time comes from the event queue, not the wall."""
+
+
+def advance(now: float, dt: float) -> float:
+    return now + dt
+
+
+def strftime_like(t: float) -> str:
+    return f"{t:.3f}"

@@ -1,0 +1,144 @@
+"""detlint engine mechanics: baseline workflow, CLI, JSON output, self-lint."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools.detlint import default_passes, default_rules, run_lint  # noqa: E402
+from tools.detlint.baseline import (baseline_counts, load_baseline,  # noqa: E402
+                                    write_baseline)
+from tools.detlint.cli import main as cli_main  # noqa: E402
+
+
+def _violating_file(tmp_path):
+    p = tmp_path / "x.py"
+    p.write_text("import time\n\n\ndef f():\n    return time.time()\n")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+def test_baseline_grandfathers_then_catches_new(tmp_path):
+    p = _violating_file(tmp_path)
+    rules = default_rules(ignore_scope=True)
+
+    first = run_lint(paths=[p], root=tmp_path, rules=rules, passes=[])
+    assert first.exit_code == 1 and len(first.new_findings) == 1
+
+    bl = tmp_path / "baseline.json"
+    write_baseline(bl, first.findings)
+    counts = baseline_counts(load_baseline(bl))
+
+    # same tree: the finding is baselined, gate passes
+    second = run_lint(paths=[p], root=tmp_path, rules=rules, passes=[],
+                      baseline_counts=counts)
+    assert second.exit_code == 0
+    assert [f.status for f in second.findings] == ["baselined"]
+
+    # a NEW violation on top of the baselined one still fails
+    p.write_text(p.read_text() + "\n\ndef g():\n    return time.monotonic()\n")
+    third = run_lint(paths=[p], root=tmp_path, rules=rules, passes=[],
+                     baseline_counts=counts)
+    assert third.exit_code == 1
+    assert len(third.new_findings) == 1
+    assert "monotonic" in third.new_findings[0].message
+
+
+def test_baseline_survives_line_shifts(tmp_path):
+    """Fingerprints key on line text, not line numbers."""
+    p = _violating_file(tmp_path)
+    rules = default_rules(ignore_scope=True)
+    first = run_lint(paths=[p], root=tmp_path, rules=rules, passes=[])
+    bl = tmp_path / "baseline.json"
+    write_baseline(bl, first.findings)
+    # insert lines above the finding
+    p.write_text("# a comment\n# another\n" + p.read_text())
+    again = run_lint(paths=[p], root=tmp_path, rules=rules, passes=[],
+                     baseline_counts=baseline_counts(load_baseline(bl)))
+    assert again.exit_code == 0
+
+
+def test_committed_baseline_is_empty():
+    entries = load_baseline(REPO_ROOT / "tools" / "detlint" / "baseline.json")
+    assert entries == []
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def test_cli_json_output_and_exit_codes(tmp_path, capsys):
+    p = _violating_file(tmp_path)
+    rc = cli_main([str(p), "--root", str(tmp_path), "--format", "json",
+                   "--no-baseline", "--no-scope"])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert out["tool"] == "detlint" and out["new"] == 1
+    f = out["findings"][0]
+    assert f["rule"] == "no-wallclock" and f["line"] == 5
+    assert f["path"] == "x.py" and f["fingerprint"]
+
+
+def test_cli_write_baseline_roundtrip(tmp_path, capsys):
+    p = _violating_file(tmp_path)
+    bl = tmp_path / "bl.json"
+    rc = cli_main([str(p), "--root", str(tmp_path), "--baseline", str(bl),
+                   "--write-baseline", "--no-scope"])
+    assert rc == 0 and bl.is_file()
+    rc = cli_main([str(p), "--root", str(tmp_path), "--baseline", str(bl),
+                   "--no-scope"])
+    capsys.readouterr()
+    assert rc == 0
+
+
+def test_cli_rules_filter(tmp_path, capsys):
+    p = _violating_file(tmp_path)
+    rc = cli_main([str(p), "--root", str(tmp_path), "--no-baseline",
+                   "--no-scope", "--rules", "no-global-rng"])
+    capsys.readouterr()
+    assert rc == 0          # wallclock rule not selected
+
+
+def test_cli_list_rules(capsys):
+    rc = cli_main(["--list-rules"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    for rule_id in ("no-wallclock", "no-global-rng",
+                    "no-unordered-float-accumulation", "jit-purity",
+                    "dtype-discipline", "event-coverage",
+                    "registry-coverage", "spec-roundtrip-fields"):
+        assert rule_id in out
+
+
+def test_module_entry_point_runs():
+    """`python -m tools.detlint src/` is the CI gate invocation."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.detlint", "src/", "--format=json"],
+        cwd=REPO_ROOT, capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    doc = json.loads(proc.stdout)
+    assert doc["new"] == 0
+
+
+# ---------------------------------------------------------------------------
+# self-lint: the repo's own source is clean
+# ---------------------------------------------------------------------------
+def test_self_lint_src_zero_non_baselined_findings():
+    report = run_lint(
+        paths=[REPO_ROOT / "src"],
+        root=REPO_ROOT,
+        rules=default_rules(),
+        passes=default_passes(),
+        baseline_counts=baseline_counts(
+            load_baseline(REPO_ROOT / "tools" / "detlint" / "baseline.json")),
+        tests_dir=REPO_ROOT / "tests",
+    )
+    assert report.new_findings == [], "\n".join(
+        f.render() for f in report.new_findings)
+    # the sweep ETA clock reads are justified inline suppressions
+    suppressed = [f for f in report.findings if f.status == "suppressed"]
+    assert all(f.justification for f in suppressed)

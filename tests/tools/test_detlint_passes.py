@@ -1,0 +1,141 @@
+"""Cross-module detlint passes on seeded fixture trees."""
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+FIXTURES = Path(__file__).resolve().parent / "fixtures"
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools.detlint import run_lint  # noqa: E402
+from tools.detlint.passes import (EventCoveragePass,  # noqa: E402
+                                  RegistryCoveragePass,
+                                  SpecRoundtripFieldsPass)
+
+
+def run_pass(paths, pazz, tests_dir=None, root=REPO_ROOT):
+    report = run_lint(paths=paths, root=root, rules=[], passes=[pazz],
+                      tests_dir=tests_dir)
+    return [f for f in report.findings if f.status == "new"]
+
+
+# ---------------------------------------------------------------------------
+# event-coverage
+# ---------------------------------------------------------------------------
+def test_event_coverage_flags_half_wired_kinds():
+    found = run_pass([FIXTURES / "evtree"], EventCoveragePass())
+    msgs = {(f.line, f.message.split(" — ")[0]) for f in found}
+    assert (7, "EventKind.BETA has no PRIORITY entry") in msgs
+    assert (7, "EventKind.BETA has no handler branch in simulator._dispatch") \
+        in msgs
+    assert any(m.startswith("EventKind.BETA is never pushed")
+               for _, m in msgs)
+    assert any(m.startswith("EventKind.GAMMA is never pushed")
+               for _, m in msgs)
+    # emit of a kind the LogEventKind enum does not declare
+    mystery = [f for f in found if "mystery" in f.message]
+    assert len(mystery) == 1 and mystery[0].line == 12
+    assert mystery[0].path.endswith("repro/core/simulator.py")
+    # declared log kind with no emit site
+    orphan = [f for f in found if "'orphan'" in f.message]
+    assert len(orphan) == 1 and orphan[0].line == 7
+    assert orphan[0].path.endswith("repro/obs/eventlog.py")
+    # ALPHA is fully wired: nothing about it
+    assert not any("ALPHA" in f.message or "'alpha'" in f.message
+                   for f in found)
+
+
+def test_event_coverage_flags_missing_dispatch_trace_label(tmp_path):
+    sim = FIXTURES / "evtree" / "repro" / "core" / "simulator.py"
+    tree = tmp_path / "repro"
+    (tree / "core").mkdir(parents=True)
+    (tree / "core" / "events.py").write_text(
+        (FIXTURES / "evtree" / "repro" / "core" / "events.py").read_text())
+    (tree / "core" / "simulator.py").write_text(
+        sim.read_text().replace('"dispatch/"', '"served/"'))
+    found = run_pass([tmp_path], EventCoveragePass(), root=tmp_path)
+    assert any("traced per-kind dispatch label" in f.message for f in found)
+
+
+def test_event_coverage_real_tree_is_fully_wired():
+    """All 20 LogEventKinds + 11 EventKinds in src/ are fully wired."""
+    from repro.obs import LogEventKind
+    from repro.core.events import EventKind, PRIORITY
+
+    assert len(LogEventKind) == 20
+    assert len(EventKind) == 11 and len(PRIORITY) == 11
+    found = run_pass([REPO_ROOT / "src"], EventCoveragePass(),
+                     tests_dir=REPO_ROOT / "tests")
+    assert found == []
+
+
+# ---------------------------------------------------------------------------
+# registry-coverage
+# ---------------------------------------------------------------------------
+def _reg_findings(tmp_path, test_text):
+    tests_dir = tmp_path / "tests"
+    tests_dir.mkdir()
+    (tests_dir / "test_ref.py").write_text(test_text)
+    return run_pass([FIXTURES / "regtree"], RegistryCoveragePass(),
+                    tests_dir=tests_dir)
+
+
+def test_registry_coverage_duplicates_untested_and_loops(tmp_path):
+    found = _reg_findings(
+        tmp_path, 'NAMES = ["fixture-dup", "loop-a"]\n')
+    dup = [f for f in found if "registered more than once" in f.message]
+    assert len(dup) == 1 and "'fixture-dup'" in dup[0].message
+    assert dup[0].line == 7                       # first site; second at 12
+    assert ":12" in dup[0].message
+    untested = sorted(f.message.split("'")[1] for f in found
+                      if "not referenced by any test" in f.message)
+    assert untested == ["fixture-untested", "loop-b"]
+    # helper plumbing (name parameter) is not flagged as non-literal
+    assert not any("non-literal" in f.message for f in found)
+
+
+def test_registry_coverage_all_referenced(tmp_path):
+    found = _reg_findings(
+        tmp_path,
+        'NAMES = ["fixture-dup", "fixture-untested", "loop-a", "loop-b"]\n')
+    assert [f for f in found if "not referenced" in f.message] == []
+
+
+def test_registry_coverage_real_tree_clean():
+    found = run_pass([REPO_ROOT / "src"], RegistryCoveragePass(),
+                     tests_dir=REPO_ROOT / "tests")
+    assert found == []
+
+
+def test_registry_coverage_flags_unwired_spec_anchor(tmp_path):
+    """A spec anchor that stops referencing its registry is flagged."""
+    tree = tmp_path / "repro"
+    (tree / "api").mkdir(parents=True)
+    (tree / "api" / "specs.py").write_text("# no registry imports here\n")
+    (tree / "api" / "plugins.py").write_text(
+        "from repro.api.registry import register_policy\n\n"
+        "@register_policy('tmp-pol')\n"
+        "def p():\n    return 0\n")
+    tests_dir = tmp_path / "tests"
+    tests_dir.mkdir()
+    (tests_dir / "test_ref.py").write_text("USE = 'tmp-pol'\n")
+    found = run_pass([tmp_path], RegistryCoveragePass(),
+                     tests_dir=tests_dir, root=tmp_path)
+    assert any("not constructible from a spec" in f.message for f in found)
+
+
+# ---------------------------------------------------------------------------
+# spec-roundtrip-fields
+# ---------------------------------------------------------------------------
+def test_spec_roundtrip_flags_dropped_field():
+    found = run_pass([FIXTURES / "spec_bad.py"], SpecRoundtripFieldsPass())
+    assert len(found) == 1
+    f = found[0]
+    assert f.line == 8
+    assert "BrokenSpec.beta" in f.message
+    assert "to_dict" in f.message and "from_dict" in f.message
+
+
+def test_spec_roundtrip_real_tree_clean():
+    found = run_pass([REPO_ROOT / "src"], SpecRoundtripFieldsPass())
+    assert found == []

@@ -1,0 +1,178 @@
+"""Per-file detlint rules: paired good/bad fixtures with exact rule IDs,
+line numbers, and suppression behavior."""
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+FIXTURES = Path(__file__).resolve().parent / "fixtures"
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools.detlint import default_passes, default_rules, run_lint  # noqa: E402
+
+
+def lint(*names, rules=None, tests_dir=None):
+    """Lint fixture files with scoping off (fixtures sit outside src/)."""
+    report = run_lint(
+        paths=[FIXTURES / n for n in names],
+        root=REPO_ROOT,
+        rules=rules if rules is not None else default_rules(ignore_scope=True),
+        passes=[],
+        tests_dir=tests_dir,
+    )
+    return report
+
+
+def new_findings(report, rule=None):
+    out = [f for f in report.findings if f.status == "new"]
+    if rule is not None:
+        out = [f for f in out if f.rule == rule]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# no-wallclock
+# ---------------------------------------------------------------------------
+def test_wallclock_bad_exact_lines():
+    report = lint("wallclock_bad.py")
+    found = new_findings(report, "no-wallclock")
+    assert [(f.line, f.rule) for f in found] == [
+        (8, "no-wallclock"), (9, "no-wallclock"), (10, "no-wallclock")]
+    assert report.exit_code == 1
+    assert "time.time" in found[0].message
+    assert "time.perf_counter" in found[1].message     # alias resolved
+    assert "datetime.datetime.now" in found[2].message
+
+
+def test_wallclock_good_clean():
+    report = lint("wallclock_good.py")
+    assert new_findings(report) == []
+    assert report.exit_code == 0
+
+
+def test_wallclock_scoping_only_sim_paths(tmp_path):
+    """Default scoping: obs/ and launch/ may read clocks, core/ may not."""
+    code = "import time\n\ndef f():\n    return time.time()\n"
+    for rel in ("src/repro/obs/clocky.py", "src/repro/launch/clocky.py",
+                "src/repro/core/clocky.py"):
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(code)
+    report = run_lint(paths=[tmp_path / "src"], root=tmp_path,
+                      rules=default_rules(), passes=[])
+    flagged = {f.path for f in new_findings(report, "no-wallclock")}
+    assert flagged == {"src/repro/core/clocky.py"}
+
+
+# ---------------------------------------------------------------------------
+# no-global-rng
+# ---------------------------------------------------------------------------
+def test_rng_bad_exact_lines():
+    found = new_findings(lint("rng_bad.py"), "no-global-rng")
+    assert [f.line for f in found] == [9, 10, 11, 12]
+    assert "random.random" in found[0].message
+    assert "np.random.rand" in found[1].message
+    assert "np.random.seed" in found[2].message
+
+
+def test_rng_good_clean():
+    assert new_findings(lint("rng_good.py")) == []
+
+
+# ---------------------------------------------------------------------------
+# no-unordered-float-accumulation
+# ---------------------------------------------------------------------------
+def test_unordered_bad_exact_lines():
+    found = new_findings(lint("unordered_bad.py"),
+                         "no-unordered-float-accumulation")
+    assert [f.line for f in found] == [5, 6, 8]
+
+
+def test_unordered_good_clean():
+    assert new_findings(lint("unordered_good.py")) == []
+
+
+# ---------------------------------------------------------------------------
+# jit-purity
+# ---------------------------------------------------------------------------
+def test_jit_bad_exact_lines():
+    found = new_findings(lint("jit_bad.py"), "jit-purity")
+    assert [f.line for f in found] == [10, 11, 16, 28]
+    assert "TRACE_LOG" in found[0].message
+    assert "print" in found[1].message
+    assert "_cache" in found[2].message
+    assert "self" in found[3].message
+
+
+def test_jit_good_clean():
+    assert new_findings(lint("jit_good.py")) == []
+
+
+# ---------------------------------------------------------------------------
+# dtype-discipline
+# ---------------------------------------------------------------------------
+def test_dtype_bad_exact_lines():
+    found = new_findings(lint("dtype_bad.py"), "dtype-discipline")
+    assert [f.line for f in found] == [6, 7, 8]
+
+
+def test_dtype_good_clean():
+    assert new_findings(lint("dtype_good.py")) == []
+
+
+def test_dtype_scoped_to_boundary_files(tmp_path):
+    """Without --no-scope the rule only applies to the boundary modules."""
+    p = tmp_path / "src" / "repro" / "api" / "free.py"
+    p.parent.mkdir(parents=True)
+    p.write_text("import numpy as np\nx = np.zeros(3)\n")
+    report = run_lint(paths=[tmp_path / "src"], root=tmp_path,
+                      rules=default_rules(), passes=[])
+    assert new_findings(report, "dtype-discipline") == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+def test_inline_suppressions_silence_with_justification():
+    report = lint("suppressed.py")
+    assert new_findings(report) == []
+    sup = [f for f in report.findings if f.status == "suppressed"]
+    assert {f.line for f in sup} == {6, 10}
+    by_line = {f.line: f for f in sup}
+    assert "progress display only" in by_line[6].justification
+    assert by_line[10].rule == "no-wallclock"      # disable=all catches it
+
+
+def test_unrelated_suppression_does_not_silence(tmp_path):
+    p = tmp_path / "x.py"
+    p.write_text("import time\n"
+                 "t = time.time()  # detlint: disable=no-global-rng\n")
+    report = run_lint(paths=[p], root=tmp_path,
+                      rules=default_rules(ignore_scope=True), passes=[])
+    assert [f.rule for f in new_findings(report)] == ["no-wallclock"]
+
+
+def test_disable_file_suppresses_everywhere(tmp_path):
+    p = tmp_path / "x.py"
+    p.write_text("# detlint: disable-file=no-wallclock\n"
+                 "import time\n"
+                 "a = time.time()\n"
+                 "b = time.monotonic()\n")
+    report = run_lint(paths=[p], root=tmp_path,
+                      rules=default_rules(ignore_scope=True), passes=[])
+    assert new_findings(report) == []
+    assert len([f for f in report.findings if f.status == "suppressed"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# parse errors fail closed
+# ---------------------------------------------------------------------------
+def test_syntax_error_is_a_finding(tmp_path):
+    p = tmp_path / "broken.py"
+    p.write_text("def f(:\n")
+    report = run_lint(paths=[p], root=tmp_path,
+                      rules=default_rules(), passes=default_passes())
+    assert [f.rule for f in new_findings(report)] == ["parse-error"]
+    assert report.exit_code == 1

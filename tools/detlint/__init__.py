@@ -1,0 +1,19 @@
+"""detlint: determinism & purity static analysis for this repository.
+
+See tools/detlint/core.py for the engine and README "Static analysis"
+for the rule table, suppression syntax, and baseline workflow.
+"""
+
+from .cli import default_passes, default_rules, main
+from .core import Finding, Pass, Report, Rule, run_lint
+
+__all__ = [
+    "Finding",
+    "Pass",
+    "Report",
+    "Rule",
+    "default_passes",
+    "default_rules",
+    "main",
+    "run_lint",
+]

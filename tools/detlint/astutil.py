@@ -1,0 +1,177 @@
+"""Shared AST helpers for detlint rules and passes."""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+__all__ = [
+    "dotted_name",
+    "ImportMap",
+    "const_strings",
+    "call_name_node",
+    "iter_string_constants",
+    "assigned_names",
+    "name_root",
+    "module_string_sequences",
+]
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """Render a Name/Attribute chain as ``a.b.c``; None for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def name_root(node: ast.AST) -> Optional[str]:
+    """Leftmost Name id of a Name/Attribute/Subscript chain, else None."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+class ImportMap:
+    """Resolve local aliases to fully-qualified dotted names.
+
+    Handles ``import numpy as np`` (np -> numpy), ``from time import
+    perf_counter as pc`` (pc -> time.perf_counter), and plain imports.
+    ``resolve(node)`` expands the leading alias of a Name/Attribute chain,
+    so ``np.random.seed`` resolves to ``numpy.random.seed``.
+    """
+
+    def __init__(self, tree: ast.AST):
+        self.aliases: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    local = alias.asname or alias.name.split(".")[0]
+                    full = alias.name if alias.asname else alias.name.split(".")[0]
+                    self.aliases[local] = full
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:  # relative import — module identity unknown
+                    continue
+                mod = node.module or ""
+                for alias in node.names:
+                    if alias.name == "*":
+                        continue
+                    local = alias.asname or alias.name
+                    self.aliases[local] = f"{mod}.{alias.name}" if mod else alias.name
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        dotted = dotted_name(node)
+        if dotted is None:
+            return None
+        head, _, rest = dotted.partition(".")
+        base = self.aliases.get(head, head)
+        return f"{base}.{rest}" if rest else base
+
+
+def const_strings(node: ast.AST) -> Set[str]:
+    """All string constants anywhere inside *node*."""
+    out: Set[str] = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+            out.add(sub.value)
+    return out
+
+
+def iter_string_constants(node: ast.AST) -> Iterable[ast.Constant]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+            yield sub
+
+
+def call_name_node(call: ast.Call) -> Optional[str]:
+    return dotted_name(call.func)
+
+
+def assigned_names(node: ast.AST) -> Set[str]:
+    """Every Name bound by assignment/for/with/comprehension/walrus in *node*.
+
+    Nested function/class defs are included (their names bind locally); the
+    bodies of nested defs are still walked, which over-approximates locals —
+    acceptable for purity checks (it can only reduce false positives).
+    """
+    out: Set[str] = set()
+
+    def bind_target(t: ast.AST) -> None:
+        # Only actual name bindings: ``x = ...``, ``x, y = ...``, ``*x, = ...``.
+        # ``obj.attr = ...`` / ``obj[k] = ...`` mutate an existing object and
+        # must NOT mark the root name as locally bound.
+        if isinstance(t, ast.Name):
+            out.add(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for elt in t.elts:
+                bind_target(elt)
+        elif isinstance(t, ast.Starred):
+            bind_target(t.value)
+
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Assign):
+            for t in sub.targets:
+                bind_target(t)
+        elif isinstance(sub, (ast.AugAssign, ast.AnnAssign)):
+            bind_target(sub.target)
+        elif isinstance(sub, ast.For):
+            bind_target(sub.target)
+        elif isinstance(sub, ast.withitem) and sub.optional_vars is not None:
+            bind_target(sub.optional_vars)
+        elif isinstance(sub, ast.comprehension):
+            bind_target(sub.target)
+        elif isinstance(sub, ast.NamedExpr):
+            bind_target(sub.target)
+        elif isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            out.add(sub.name)
+        elif isinstance(sub, ast.ExceptHandler) and sub.name:
+            out.add(sub.name)
+    return out
+
+
+def module_string_sequences(tree: ast.AST) -> Dict[str, List[str]]:
+    """Module-level ``NAME = ("a", "b", ...)`` tuple/list-of-str bindings."""
+    out: Dict[str, List[str]] = {}
+    body = getattr(tree, "body", [])
+    for node in body:
+        if not isinstance(node, ast.Assign):
+            continue
+        value = node.value
+        if not isinstance(value, (ast.Tuple, ast.List)):
+            continue
+        items: List[str] = []
+        ok = True
+        for elt in value.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                items.append(elt.value)
+            else:
+                ok = False
+                break
+        if not ok:
+            continue
+        for target in node.targets:
+            if isinstance(target, ast.Name):
+                out[target.id] = items
+    return out
+
+
+def function_params(fn: ast.AST) -> Set[str]:
+    """Parameter names of a FunctionDef/AsyncFunctionDef/Lambda."""
+    args = getattr(fn, "args", None)
+    if args is None:
+        return set()
+    names: Set[str] = set()
+    for group in (args.posonlyargs, args.args, args.kwonlyargs):
+        for a in group:
+            names.add(a.arg)
+    if args.vararg:
+        names.add(args.vararg.arg)
+    if args.kwarg:
+        names.add(args.kwarg.arg)
+    return names

@@ -1,0 +1,49 @@
+"""Baseline persistence: grandfathered findings by fingerprint.
+
+The baseline is a committed JSON file mapping finding fingerprints
+(rule + path + normalized line text) to allowed multiplicities.  The
+lint gate only fails on findings *not* covered by the baseline, so
+pre-existing debt can be burned down incrementally without blocking CI.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, Iterable, List
+
+from .core import Finding
+
+
+def load_baseline(path: Path) -> List[Dict[str, object]]:
+    if not path.is_file():
+        return []
+    data = json.loads(path.read_text(encoding="utf-8"))
+    entries = data.get("findings", []) if isinstance(data, dict) else data
+    return [e for e in entries if isinstance(e, dict)]
+
+
+def baseline_counts(entries: Iterable[Dict[str, object]]) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    for entry in entries:
+        fp = entry.get("fingerprint")
+        if isinstance(fp, str):
+            counts[fp] = counts.get(fp, 0) + 1
+    return counts
+
+
+def write_baseline(path: Path, findings: Iterable[Finding]) -> None:
+    entries = [
+        {
+            "fingerprint": f.fingerprint(),
+            "rule": f.rule,
+            "path": f.path,
+            "line": f.line,
+            "message": f.message,
+        }
+        for f in findings
+        if f.status != "suppressed"
+    ]
+    payload = {"schema": "detlint.baseline", "version": 1, "findings": entries}
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n",
+                    encoding="utf-8")

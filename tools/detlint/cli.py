@@ -1,0 +1,149 @@
+"""detlint command-line interface.
+
+Usage::
+
+    python -m tools.detlint src/                 # text report, exit 1 on new findings
+    python -m tools.detlint src/ --format=json   # machine-readable report
+    python -m tools.detlint src/ --write-baseline  # grandfather current findings
+    python -m tools.detlint --list-rules
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from .baseline import baseline_counts, load_baseline, write_baseline
+from .core import Pass, Report, Rule, run_lint
+from .passes.event_coverage import EventCoveragePass
+from .passes.registry_coverage import RegistryCoveragePass
+from .passes.spec_roundtrip import SpecRoundtripFieldsPass
+from .rules.dtypes import DtypeDisciplineRule
+from .rules.jit_purity import JitPurityRule
+from .rules.rng import NoGlobalRngRule
+from .rules.unordered import NoUnorderedFloatAccumulationRule
+from .rules.wallclock import NoWallclockRule
+
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+
+def default_rules(ignore_scope: bool = False) -> List[Rule]:
+    return [
+        NoWallclockRule(ignore_scope=ignore_scope),
+        NoGlobalRngRule(),
+        NoUnorderedFloatAccumulationRule(),
+        JitPurityRule(),
+        DtypeDisciplineRule(ignore_scope=ignore_scope),
+    ]
+
+
+def default_passes() -> List[Pass]:
+    return [
+        EventCoveragePass(),
+        RegistryCoveragePass(),
+        SpecRoundtripFieldsPass(),
+    ]
+
+
+def build_parser() -> argparse.ArgumentParser:
+    parser = argparse.ArgumentParser(
+        prog="detlint",
+        description="determinism & purity static analysis for this repo",
+    )
+    parser.add_argument("paths", nargs="*", default=["src"],
+                        help="files or directories to lint (default: src)")
+    parser.add_argument("--root", default=".",
+                        help="repository root for relative paths (default: cwd)")
+    parser.add_argument("--format", choices=("text", "json"), default="text")
+    parser.add_argument("--baseline", default=None,
+                        help="baseline JSON path (default: tools/detlint/baseline.json)")
+    parser.add_argument("--no-baseline", action="store_true",
+                        help="ignore the baseline file entirely")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="write all current findings to the baseline and exit 0")
+    parser.add_argument("--rules", default=None,
+                        help="comma-separated rule/pass ids to run (default: all)")
+    parser.add_argument("--tests-dir", default=None,
+                        help="tests directory for registry-coverage (default: <root>/tests)")
+    parser.add_argument("--no-scope", action="store_true",
+                        help="treat every file as in scope for every rule "
+                             "(fixture/test use)")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="list rule ids and descriptions, then exit")
+    parser.add_argument("--show-all", action="store_true",
+                        help="also print suppressed/baselined findings in text mode")
+    return parser
+
+
+def _render_text(report: Report, show_all: bool) -> str:
+    lines: List[str] = []
+    for f in report.findings:
+        if f.status == "new":
+            lines.append(f.render())
+        elif show_all:
+            note = f" ({f.justification})" if f.justification else ""
+            lines.append(f"{f.render()} [{f.status}]{note}")
+    counts = {}
+    for f in report.findings:
+        counts[f.status] = counts.get(f.status, 0) + 1
+    summary = ", ".join(f"{v} {k}" for k, v in sorted(counts.items())) or "0 findings"
+    lines.append(
+        f"detlint: {report.files_scanned} files scanned, {summary}"
+    )
+    return "\n".join(lines)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = build_parser()
+    args = parser.parse_args(argv)
+
+    rules = default_rules(ignore_scope=args.no_scope)
+    passes = default_passes()
+
+    if args.list_rules:
+        for item in [*rules, *passes]:
+            kind = "pass" if isinstance(item, Pass) else "rule"
+            print(f"{item.id:36s} [{kind}] {item.description}")
+        return 0
+
+    root = Path(args.root)
+    baseline_path = Path(args.baseline) if args.baseline else DEFAULT_BASELINE
+    only = None
+    if args.rules:
+        only = {r.strip() for r in args.rules.split(",") if r.strip()}
+        known = {item.id for item in [*rules, *passes]}
+        unknown = only - known
+        if unknown:
+            parser.error(f"unknown rules: {', '.join(sorted(unknown))}")
+
+    counts = {}
+    if not args.no_baseline and not args.write_baseline:
+        counts = baseline_counts(load_baseline(baseline_path))
+
+    report = run_lint(
+        paths=[Path(p) for p in args.paths],
+        root=root,
+        rules=rules,
+        passes=passes,
+        baseline_counts=counts,
+        tests_dir=Path(args.tests_dir) if args.tests_dir else None,
+        only=only,
+    )
+
+    if args.write_baseline:
+        write_baseline(baseline_path, report.findings)
+        print(f"detlint: wrote {len(report.new_findings)} findings to {baseline_path}")
+        return 0
+
+    if args.format == "json":
+        print(json.dumps(report.to_dict(), indent=2, sort_keys=True))
+    else:
+        print(_render_text(report, show_all=args.show_all))
+    return report.exit_code
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

@@ -1,0 +1,380 @@
+"""detlint core: findings, rule/pass protocol, file contexts, engine.
+
+detlint is an AST-based static-analysis suite purpose-built for this
+repository's determinism and reproducibility contracts.  It has two rule
+tiers:
+
+* **per-file rules** — walk one module's AST at a time (wall-clock reads,
+  global RNG, unordered float accumulation, jit purity, dtype discipline);
+* **cross-module passes** — see the whole scanned tree at once and check
+  consistency properties a single file cannot express (event coverage,
+  registry coverage, spec round-trip fields).
+
+Findings flow through two filters before they fail a run:
+
+1. inline suppressions — ``# detlint: disable=<rule>[,<rule>...]`` on the
+   flagged line (or ``# detlint: disable-file=<rule>`` anywhere in the
+   file) silence a finding at the source, with the rest of the comment
+   acting as the justification;
+2. a committed JSON baseline (``tools/detlint/baseline.json``) grandfathers
+   known findings by (rule, path, fingerprint) so the gate only trips on
+   *new* violations.
+"""
+
+from __future__ import annotations
+
+import ast
+import hashlib
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = [
+    "Finding",
+    "FileContext",
+    "Project",
+    "Rule",
+    "Pass",
+    "Report",
+    "collect_files",
+    "load_file_context",
+    "run_lint",
+]
+
+
+# --------------------------------------------------------------------------
+# Findings
+# --------------------------------------------------------------------------
+
+STATUS_NEW = "new"
+STATUS_SUPPRESSED = "suppressed"
+STATUS_BASELINED = "baselined"
+
+
+@dataclass
+class Finding:
+    """One violation at a (rule, file, line) location."""
+
+    rule: str
+    path: str  # repo-root-relative, posix separators
+    line: int
+    col: int
+    message: str
+    status: str = STATUS_NEW
+    justification: str = ""
+    line_text: str = ""
+
+    def fingerprint(self) -> str:
+        """Stable identity for baseline matching.
+
+        Deliberately excludes the line *number* so unrelated edits above a
+        grandfathered finding do not un-baseline it; uses the stripped
+        source line instead.
+        """
+        payload = "\0".join([self.rule, self.path, self.line_text.strip()])
+        return hashlib.sha1(payload.encode("utf-8")).hexdigest()[:16]
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "message": self.message,
+            "status": self.status,
+            "justification": self.justification,
+            "fingerprint": self.fingerprint(),
+        }
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+
+# --------------------------------------------------------------------------
+# Suppressions
+# --------------------------------------------------------------------------
+
+_SUPPRESS_RE = re.compile(r"detlint:\s*disable=([A-Za-z0-9_,\- ]+)")
+_SUPPRESS_FILE_RE = re.compile(r"detlint:\s*disable-file=([A-Za-z0-9_,\- ]+)")
+
+
+def _parse_rule_list(raw: str) -> Set[str]:
+    return {part.strip() for part in raw.split(",") if part.strip()}
+
+
+def parse_suppressions(source: str) -> Tuple[Dict[int, Set[str]], Set[str], Dict[int, str]]:
+    """Extract inline suppressions from comments.
+
+    Returns ``(line -> rules, file_rules, line -> justification)``.  Rule
+    name ``all`` disables every rule.  Only real comment tokens count —
+    string literals that merely contain the marker are ignored.
+    """
+    by_line: Dict[int, Set[str]] = {}
+    file_wide: Set[str] = set()
+    notes: Dict[int, str] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            text = tok.string
+            m = _SUPPRESS_FILE_RE.search(text)
+            if m:
+                file_wide |= _parse_rule_list(m.group(1))
+                continue
+            m = _SUPPRESS_RE.search(text)
+            if m:
+                lineno = tok.start[0]
+                by_line.setdefault(lineno, set()).update(_parse_rule_list(m.group(1)))
+                tail = text[m.end():].strip(" -#\t")
+                if tail:
+                    notes[lineno] = tail
+    except tokenize.TokenError:
+        pass  # unterminated source; the parse-error finding covers it
+    return by_line, file_wide, notes
+
+
+# --------------------------------------------------------------------------
+# File contexts
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class FileContext:
+    """Parsed view of one source file handed to rules and passes."""
+
+    path: Path
+    rel: str
+    source: str
+    lines: List[str]
+    tree: Optional[ast.AST]
+    parse_error: Optional[str]
+    suppress_line: Dict[int, Set[str]] = field(default_factory=dict)
+    suppress_file: Set[str] = field(default_factory=set)
+    suppress_notes: Dict[int, str] = field(default_factory=dict)
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+    def is_suppressed(self, rule: str, lineno: int) -> Tuple[bool, str]:
+        if rule in self.suppress_file or "all" in self.suppress_file:
+            return True, "file-wide suppression"
+        rules = self.suppress_line.get(lineno, set())
+        if rule in rules or "all" in rules:
+            return True, self.suppress_notes.get(lineno, "")
+        return False, ""
+
+
+@dataclass
+class Project:
+    """Whole-scan view handed to cross-module passes."""
+
+    root: Path
+    files: List[FileContext]
+    tests_dir: Path
+
+    def find(self, suffix: str) -> Optional[FileContext]:
+        """Locate a scanned file whose repo-relative path ends with *suffix*."""
+        for ctx in self.files:
+            if ctx.rel.endswith(suffix):
+                return ctx
+        return None
+
+    def test_sources(self) -> List[Tuple[Path, str]]:
+        """Read every test file (path, source) under the tests directory."""
+        out: List[Tuple[Path, str]] = []
+        if not self.tests_dir.is_dir():
+            return out
+        for path in sorted(self.tests_dir.rglob("*.py")):
+            if "__pycache__" in path.parts:
+                continue
+            try:
+                out.append((path, path.read_text(encoding="utf-8")))
+            except OSError:
+                continue
+        return out
+
+
+class Rule:
+    """Base class for per-file rules."""
+
+    id: str = ""
+    description: str = ""
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+class Pass:
+    """Base class for whole-repo cross-module passes."""
+
+    id: str = ""
+    description: str = ""
+
+    def check(self, project: Project) -> Iterable[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+# --------------------------------------------------------------------------
+# Engine
+# --------------------------------------------------------------------------
+
+
+def collect_files(paths: Sequence[Path], root: Path) -> List[Path]:
+    """Expand target paths into a sorted list of .py files."""
+    seen: Set[Path] = set()
+    out: List[Path] = []
+    for target in paths:
+        target = (root / target) if not target.is_absolute() else target
+        if target.is_dir():
+            candidates = sorted(target.rglob("*.py"))
+        elif target.is_file():
+            candidates = [target]
+        else:
+            continue
+        for cand in candidates:
+            if "__pycache__" in cand.parts or cand.name.startswith("."):
+                continue
+            resolved = cand.resolve()
+            if resolved not in seen:
+                seen.add(resolved)
+                out.append(cand)
+    return out
+
+
+def load_file_context(path: Path, root: Path) -> FileContext:
+    source = path.read_text(encoding="utf-8")
+    try:
+        rel = path.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        rel = path.as_posix()
+    tree: Optional[ast.AST] = None
+    parse_error: Optional[str] = None
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as exc:
+        parse_error = f"syntax error: {exc.msg} (line {exc.lineno})"
+    by_line, file_wide, notes = parse_suppressions(source)
+    return FileContext(
+        path=path,
+        rel=rel,
+        source=source,
+        lines=source.splitlines(),
+        tree=tree,
+        parse_error=parse_error,
+        suppress_line=by_line,
+        suppress_file=file_wide,
+        suppress_notes=notes,
+    )
+
+
+@dataclass
+class Report:
+    findings: List[Finding]
+    files_scanned: int
+    rules_run: List[str]
+
+    @property
+    def new_findings(self) -> List[Finding]:
+        return [f for f in self.findings if f.status == STATUS_NEW]
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.new_findings else 0
+
+    def to_dict(self) -> Dict[str, object]:
+        by_status: Dict[str, int] = {}
+        for f in self.findings:
+            by_status[f.status] = by_status.get(f.status, 0) + 1
+        return {
+            "tool": "detlint",
+            "files_scanned": self.files_scanned,
+            "rules": self.rules_run,
+            "counts": by_status,
+            "new": len(self.new_findings),
+            "findings": [f.to_dict() for f in self.findings],
+        }
+
+
+def _apply_filters(
+    findings: List[Finding],
+    contexts: Dict[str, FileContext],
+    baseline_counts: Dict[str, int],
+) -> None:
+    """Mark findings suppressed/baselined in place (order: suppressions win)."""
+    remaining = dict(baseline_counts)
+    for f in findings:
+        ctx = contexts.get(f.path)
+        if ctx is not None:
+            suppressed, note = ctx.is_suppressed(f.rule, f.line)
+            if suppressed:
+                f.status = STATUS_SUPPRESSED
+                f.justification = note
+                continue
+        fp = f.fingerprint()
+        if remaining.get(fp, 0) > 0:
+            remaining[fp] -= 1
+            f.status = STATUS_BASELINED
+
+
+def run_lint(
+    paths: Sequence[Path],
+    root: Path,
+    rules: Sequence[Rule],
+    passes: Sequence[Pass],
+    baseline_counts: Optional[Dict[str, int]] = None,
+    tests_dir: Optional[Path] = None,
+    only: Optional[Set[str]] = None,
+) -> Report:
+    """Run the configured rules and passes over *paths*.
+
+    ``only`` restricts execution to the named rule/pass ids.  The baseline
+    maps fingerprint -> allowed count (multiplicity-aware).
+    """
+    root = root.resolve()
+    files = collect_files(paths, root)
+    contexts = [load_file_context(p, root) for p in files]
+    by_rel = {ctx.rel: ctx for ctx in contexts}
+    project = Project(
+        root=root,
+        files=contexts,
+        tests_dir=(tests_dir if tests_dir is not None else root / "tests"),
+    )
+
+    active_rules = [r for r in rules if only is None or r.id in only]
+    active_passes = [p for p in passes if only is None or p.id in only]
+
+    findings: List[Finding] = []
+    for ctx in contexts:
+        if ctx.parse_error is not None:
+            findings.append(
+                Finding(
+                    rule="parse-error",
+                    path=ctx.rel,
+                    line=1,
+                    col=0,
+                    message=ctx.parse_error,
+                    line_text=ctx.line_text(1),
+                )
+            )
+            continue
+        for rule in active_rules:
+            for f in rule.check(ctx):
+                f.line_text = f.line_text or ctx.line_text(f.line)
+                findings.append(f)
+    for pazz in active_passes:
+        for f in pazz.check(project):
+            ctx = by_rel.get(f.path)
+            if ctx is not None:
+                f.line_text = f.line_text or ctx.line_text(f.line)
+            findings.append(f)
+
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    _apply_filters(findings, by_rel, dict(baseline_counts or {}))
+    rule_ids = [r.id for r in active_rules] + [p.id for p in active_passes]
+    return Report(findings=findings, files_scanned=len(contexts), rules_run=rule_ids)

@@ -1,0 +1,9 @@
+from .event_coverage import EventCoveragePass
+from .registry_coverage import RegistryCoveragePass
+from .spec_roundtrip import SpecRoundtripFieldsPass
+
+__all__ = [
+    "EventCoveragePass",
+    "RegistryCoveragePass",
+    "SpecRoundtripFieldsPass",
+]

@@ -1,0 +1,218 @@
+"""event-coverage: every event kind is fully wired, end to end.
+
+Two vocabularies must stay consistent:
+
+* ``EventKind`` (core/events.py) — the simulator's heap-event enum.  Every
+  member needs a PRIORITY entry, a ``_dispatch`` handler branch in
+  core/simulator.py, and at least one push site.
+* ``LogEventKind`` (obs/eventlog.py) — the flight-recorder vocabulary.
+  Every enum value must be emitted somewhere in src/ and every emitted
+  string literal must be a declared enum value (no half-wired kinds).
+
+The pass also asserts the traced dispatch label ("dispatch/<kind>") is
+still constructed in the simulator, so tracer coverage cannot silently
+rot.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from ..astutil import dotted_name
+from ..core import Finding, Pass, Project
+
+EVENTS_SUFFIX = "repro/core/events.py"
+SIMULATOR_SUFFIX = "repro/core/simulator.py"
+EVENTLOG_SUFFIX = "repro/obs/eventlog.py"
+
+
+def _enum_members(tree: ast.AST, class_name: str) -> Dict[str, Tuple[str, int]]:
+    """``member -> (string value, lineno)`` for a str-valued enum class."""
+    out: Dict[str, Tuple[str, int]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == class_name:
+            for stmt in node.body:
+                if (
+                    isinstance(stmt, ast.Assign)
+                    and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Name)
+                    and isinstance(stmt.value, ast.Constant)
+                    and isinstance(stmt.value.value, str)
+                ):
+                    out[stmt.targets[0].id] = (stmt.value.value, stmt.lineno)
+            return out
+    return out
+
+
+def _priority_keys(tree: ast.AST) -> Set[str]:
+    """EventKind members keyed in the module-level PRIORITY dict."""
+    keys: Set[str] = set()
+    for node in getattr(tree, "body", []):
+        if (
+            isinstance(node, ast.Assign)
+            and len(node.targets) == 1
+            and isinstance(node.targets[0], ast.Name)
+            and node.targets[0].id == "PRIORITY"
+            and isinstance(node.value, ast.Dict)
+        ):
+            for key in node.value.keys:
+                name = dotted_name(key) if key is not None else None
+                if name and name.startswith("EventKind."):
+                    keys.add(name.split(".", 1)[1])
+    return keys
+
+
+def _eventkind_refs(node: ast.AST) -> Set[str]:
+    """All ``EventKind.X`` member references inside *node*."""
+    refs: Set[str] = set()
+    for sub in ast.walk(node):
+        name = dotted_name(sub)
+        if name and name.startswith("EventKind."):
+            refs.add(name.split(".", 1)[1])
+    return refs
+
+
+def _find_function(tree: ast.AST, name: str) -> Optional[ast.FunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def _emit_kind_literals(tree: ast.AST) -> List[Tuple[str, int]]:
+    """String literals used as the kind argument of ``*.emit(t, kind, ...)``.
+
+    Handles conditional kinds (``"resume" if resumed else "start"``) by
+    collecting every string constant reachable in the kind expression.
+    """
+    out: List[Tuple[str, int]] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        if not (isinstance(func, ast.Attribute) and func.attr == "emit"):
+            continue
+        kind_expr: Optional[ast.AST] = None
+        if len(node.args) >= 2:
+            kind_expr = node.args[1]
+        else:
+            for kw in node.keywords:
+                if kw.arg == "kind":
+                    kind_expr = kw.value
+        if kind_expr is None:
+            continue
+        for sub in ast.walk(kind_expr):
+            if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                out.append((sub.value, node.lineno))
+    return out
+
+
+class EventCoveragePass(Pass):
+    id = "event-coverage"
+    description = (
+        "every EventKind has a PRIORITY entry and a simulator dispatch "
+        "handler; every LogEventKind is emitted and every emit uses a "
+        "declared kind; the traced dispatch label survives"
+    )
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        findings: List[Finding] = []
+
+        events = project.find(EVENTS_SUFFIX)
+        simulator = project.find(SIMULATOR_SUFFIX)
+        eventlog = project.find(EVENTLOG_SUFFIX)
+        if events is None or events.tree is None:
+            return findings  # not scanning the sim tree (e.g. fixture run)
+
+        members = _enum_members(events.tree, "EventKind")
+        class_line = next(iter(members.values()), ("", 1))[1]
+
+        # --- EventKind <-> PRIORITY bijection -------------------------------
+        priority = _priority_keys(events.tree)
+        for member, (_, lineno) in sorted(members.items()):
+            if member not in priority:
+                findings.append(Finding(
+                    rule=self.id, path=events.rel, line=lineno, col=0,
+                    message=f"EventKind.{member} has no PRIORITY entry — "
+                            "same-timestamp ordering is undefined for it",
+                ))
+        for member in sorted(priority - set(members)):
+            findings.append(Finding(
+                rule=self.id, path=events.rel, line=class_line, col=0,
+                message=f"PRIORITY keys unknown member EventKind.{member}",
+            ))
+
+        # --- every member dispatched and pushed -----------------------------
+        if simulator is not None and simulator.tree is not None:
+            dispatch = _find_function(simulator.tree, "_dispatch")
+            handled = _eventkind_refs(dispatch) if dispatch is not None else set()
+            pushed: Set[str] = set()
+            for ctx in project.files:
+                if ctx.tree is None:
+                    continue
+                for node in ast.walk(ctx.tree):
+                    if isinstance(node, ast.Call):
+                        func = node.func
+                        if isinstance(func, ast.Attribute) and func.attr in {
+                            "push", "push_event", "schedule"
+                        }:
+                            pushed |= _eventkind_refs(node)
+            for member, (_, lineno) in sorted(members.items()):
+                if member not in handled:
+                    findings.append(Finding(
+                        rule=self.id, path=events.rel, line=lineno, col=0,
+                        message=f"EventKind.{member} has no handler branch in "
+                                "simulator._dispatch — the kind is declared but "
+                                "never serviced",
+                    ))
+                if member not in pushed:
+                    findings.append(Finding(
+                        rule=self.id, path=events.rel, line=lineno, col=0,
+                        message=f"EventKind.{member} is never pushed onto the "
+                                "event heap anywhere in the scanned tree — "
+                                "dead event kind",
+                    ))
+            if "dispatch/" not in simulator.source:
+                findings.append(Finding(
+                    rule=self.id, path=simulator.rel, line=1, col=0,
+                    message="traced per-kind dispatch label ('dispatch/<kind>') "
+                            "is gone from the simulator — tracer coverage of "
+                            "event dispatch lost",
+                ))
+
+        # --- LogEventKind <-> emit-site vocabulary --------------------------
+        if eventlog is not None and eventlog.tree is not None:
+            log_members = _enum_members(eventlog.tree, "LogEventKind")
+            log_values = {v for v, _ in log_members.values()}
+            if not log_values:
+                findings.append(Finding(
+                    rule=self.id, path=eventlog.rel, line=1, col=0,
+                    message="LogEventKind enum not found in obs/eventlog.py — "
+                            "the log-kind vocabulary is undeclared",
+                ))
+            else:
+                emitted: Dict[str, Tuple[str, int]] = {}
+                for ctx in project.files:
+                    if ctx.tree is None or ctx.rel.endswith(EVENTLOG_SUFFIX):
+                        continue
+                    for value, lineno in _emit_kind_literals(ctx.tree):
+                        emitted.setdefault(value, (ctx.rel, lineno))
+                for value in sorted(set(emitted) - log_values):
+                    rel, lineno = emitted[value]
+                    findings.append(Finding(
+                        rule=self.id, path=rel, line=lineno, col=0,
+                        message=f"emit of undeclared log kind '{value}' — add it "
+                                "to LogEventKind so validation and analytics "
+                                "know about it",
+                    ))
+                for value in sorted(log_values - set(emitted)):
+                    member_line = next(
+                        (ln for v, ln in log_members.values() if v == value), 1
+                    )
+                    findings.append(Finding(
+                        rule=self.id, path=eventlog.rel, line=member_line, col=0,
+                        message=f"LogEventKind '{value}' has no emit site in the "
+                                "scanned tree — half-wired log kind",
+                    ))
+        return findings

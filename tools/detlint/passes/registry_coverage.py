@@ -1,0 +1,229 @@
+"""registry-coverage: every registered plugin name is reachable and tested.
+
+The spec layer (PR 4) resolves policies, bid strategies, migration
+planners, price processes, workloads, fleet strategies, and fault
+scenarios by string name through plugin registries.  A name registered
+but never referenced by a test is dead weight that can silently rot; a
+registry not wired into the spec layer is unreachable from a declarative
+run.  This pass:
+
+* collects every registration site (decorator or ``REGISTRY.register``
+  call), resolving loop-variable names through module-level string
+  tuples (the migration planners register in a loop);
+* requires each registered name to appear as a quoted literal in at
+  least one test file;
+* flags duplicate registrations of the same name in a registry;
+* requires each registry symbol to be referenced from its spec-layer
+  anchor module, so every plugin stays constructible from a spec.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from ..astutil import module_string_sequences
+from ..core import FileContext, Finding, Pass, Project
+
+# decorator/function name -> registry label
+REGISTER_HELPERS = {
+    "register_policy": "POLICY",
+    "register_bid_strategy": "BID",
+    "register_migration_policy": "MIGRATION",
+    "register_price_process": "PRICE_PROCESS",
+    "register_workload": "WORKLOAD",
+    "register_fleet_strategy": "FLEET_STRATEGY",
+    "register_fault_scenario": "FAULT",
+}
+
+# registry variable name -> registry label (for REGISTRY.register(...) calls)
+REGISTRY_VARS = {
+    "POLICY_REGISTRY": "POLICY",
+    "BID_REGISTRY": "BID",
+    "MIGRATION_REGISTRY": "MIGRATION",
+    "PRICE_PROCESS_REGISTRY": "PRICE_PROCESS",
+    "WORKLOAD_REGISTRY": "WORKLOAD",
+    "FLEET_STRATEGY_REGISTRY": "FLEET_STRATEGY",
+    "FAULT_REGISTRY": "FAULT",
+}
+
+# Where each registry must surface to be constructible from a spec: the
+# spec layer itself for most, the market engine for price processes
+# (PoolConfig.process names resolve there).
+SPEC_ANCHORS = {
+    "POLICY": ("repro/api/specs.py", "POLICY_REGISTRY"),
+    "BID": ("repro/api/specs.py", "BID_REGISTRY"),
+    "MIGRATION": ("repro/api/specs.py", "MIGRATION_REGISTRY"),
+    "WORKLOAD": ("repro/api/specs.py", "WORKLOAD_REGISTRY"),
+    "FLEET_STRATEGY": ("repro/api/specs.py", "FLEET_STRATEGY_REGISTRY"),
+    "FAULT": ("repro/api/specs.py", "FAULT_REGISTRY"),
+    "PRICE_PROCESS": ("repro/market/engine.py", "PRICE_PROCESS_REGISTRY"),
+}
+
+
+def _helper_label(func: ast.AST) -> Optional[str]:
+    """Registry label for a decorator/call target, or None."""
+    name = None
+    if isinstance(func, ast.Name):
+        name = func.id
+    elif isinstance(func, ast.Attribute):
+        name = func.attr
+    if name in REGISTER_HELPERS:
+        return REGISTER_HELPERS[name]
+    return None
+
+
+def _registry_var_label(func: ast.AST) -> Optional[str]:
+    """Label for ``<REGISTRY_VAR>.register`` call targets."""
+    if isinstance(func, ast.Attribute) and func.attr == "register":
+        base = func.value
+        if isinstance(base, ast.Name) and base.id in REGISTRY_VARS:
+            return REGISTRY_VARS[base.id]
+        if isinstance(base, ast.Attribute) and base.attr in REGISTRY_VARS:
+            return REGISTRY_VARS[base.attr]
+    return None
+
+
+def _loop_var_values(ctx: FileContext, var: str) -> List[str]:
+    """Resolve a name used inside a for-loop over a module string tuple.
+
+    Handles the migration-planner idiom::
+
+        MIGRATION_POLICIES = ("none", "greedy-cheapest", ...)
+        for _policy in MIGRATION_POLICIES:
+            MIGRATION_REGISTRY.register(_policy, _builtin_planner(_policy))
+    """
+    if ctx.tree is None:
+        return []
+    sequences = module_string_sequences(ctx.tree)
+    values: List[str] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.For):
+            continue
+        target = node.target
+        if isinstance(target, ast.Name) and target.id == var:
+            it = node.iter
+            if isinstance(it, ast.Name) and it.id in sequences:
+                values.extend(sequences[it.id])
+            elif isinstance(it, (ast.Tuple, ast.List)):
+                for elt in it.elts:
+                    if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                        values.append(elt.value)
+    return values
+
+
+class RegistryCoveragePass(Pass):
+    id = "registry-coverage"
+    description = (
+        "every registered plugin name is test-referenced and unique; every "
+        "registry is wired into the spec layer"
+    )
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        # (label, name) -> list of (rel, line)
+        registrations: Dict[Tuple[str, str], List[Tuple[str, int]]] = {}
+        seen_registries: Set[str] = set()
+
+        for ctx in project.files:
+            if ctx.tree is None:
+                continue
+            # Registration helpers are themselves implemented as
+            # ``def register_x(name): REGISTRY.register(name, ...)`` — a call
+            # whose name argument is a parameter of an enclosing function is
+            # the helper's plumbing, not a registration site.
+            enclosing_params: Dict[int, Set[str]] = {}
+
+            def _index_params(fn: ast.AST, inherited: Set[str]) -> None:
+                from ..astutil import function_params
+
+                params = inherited | function_params(fn)
+                for sub in ast.walk(fn):
+                    if isinstance(sub, ast.Call):
+                        enclosing_params.setdefault(id(sub), set()).update(params)
+
+            for node in ast.walk(ctx.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    _index_params(node, set())
+
+            # Decorator calls are reached twice by ast.walk (once via the
+            # FunctionDef's decorator_list, once as plain Call nodes) — a
+            # single sweep over Call nodes sees each site exactly once.
+            for node in ast.walk(ctx.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                label = _helper_label(node.func) or _registry_var_label(node.func)
+                if label is None:
+                    continue
+                seen_registries.add(label)
+                if not node.args:
+                    continue
+                arg = node.args[0]
+                names: List[str] = []
+                if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+                    names = [arg.value]
+                elif isinstance(arg, ast.Name):
+                    if arg.id in enclosing_params.get(id(node), set()):
+                        continue  # helper plumbing, not a registration
+                    names = _loop_var_values(ctx, arg.id)
+                    if not names:
+                        findings.append(Finding(
+                            rule=self.id, path=ctx.rel,
+                            line=node.lineno, col=node.col_offset,
+                            message=(
+                                f"{label} registration with non-literal name "
+                                f"'{arg.id}' that does not resolve to a "
+                                "module-level string tuple — name cannot be "
+                                "statically audited"
+                            ),
+                        ))
+                for name in names:
+                    registrations.setdefault((label, name), []).append(
+                        (ctx.rel, node.lineno)
+                    )
+
+        if not registrations:
+            return findings  # not scanning the src tree (fixture run)
+
+        # --- duplicates -----------------------------------------------------
+        for (label, name), sites in sorted(registrations.items()):
+            if len(sites) > 1:
+                first_rel, first_line = sites[0]
+                others = ", ".join(f"{r}:{ln}" for r, ln in sites[1:])
+                findings.append(Finding(
+                    rule=self.id, path=first_rel, line=first_line, col=0,
+                    message=f"{label} name '{name}' registered more than once "
+                            f"(also at {others}) — later registration silently "
+                            "shadows this one",
+                ))
+
+        # --- test references ------------------------------------------------
+        test_blobs = [src for _, src in project.test_sources()]
+        for (label, name), sites in sorted(registrations.items()):
+            quoted = (f'"{name}"', f"'{name}'")
+            if not any(q in blob for blob in test_blobs for q in quoted):
+                rel, line = sites[0]
+                findings.append(Finding(
+                    rule=self.id, path=rel, line=line, col=0,
+                    message=f"{label} name '{name}' is not referenced by any "
+                            "test — registered plugins must be exercised by at "
+                            "least one test",
+                ))
+
+        # --- spec-layer wiring ----------------------------------------------
+        for label in sorted(seen_registries):
+            anchor = SPEC_ANCHORS.get(label)
+            if anchor is None:
+                continue
+            suffix, symbol = anchor
+            anchor_ctx = project.find(suffix)
+            if anchor_ctx is None:
+                continue  # anchor outside scan scope
+            if symbol not in anchor_ctx.source:
+                findings.append(Finding(
+                    rule=self.id, path=anchor_ctx.rel, line=1, col=0,
+                    message=f"{label} registry ({symbol}) is not referenced from "
+                            f"{suffix} — registered names are not constructible "
+                            "from a spec",
+                ))
+        return findings

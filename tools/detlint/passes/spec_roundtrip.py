@@ -1,0 +1,90 @@
+"""spec-roundtrip-fields: every *Spec dataclass field round-trips.
+
+The declarative run layer (PR 4) serializes every ``*Spec`` dataclass
+through hand-written ``to_dict``/``from_dict`` pairs.  A field added to
+the dataclass but missed in either method silently drops configuration
+on save/load — sweeps resume with different parameters than they started
+with.  This pass requires every dataclass field name to appear as a
+string literal in both methods.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional
+
+from ..astutil import const_strings, dotted_name
+from ..core import Finding, Pass, Project
+
+
+def _is_dataclass(node: ast.ClassDef) -> bool:
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = dotted_name(target)
+        if name and name.split(".")[-1] == "dataclass":
+            return True
+    return False
+
+
+def _method(node: ast.ClassDef, name: str) -> Optional[ast.FunctionDef]:
+    for stmt in node.body:
+        if isinstance(stmt, ast.FunctionDef) and stmt.name == name:
+            return stmt
+    return None
+
+
+def _annotation_is_classvar(ann: ast.AST) -> bool:
+    text = ast.dump(ann)
+    return "ClassVar" in text
+
+
+class SpecRoundtripFieldsPass(Pass):
+    id = "spec-roundtrip-fields"
+    description = (
+        "every field of a *Spec dataclass appears as a string literal in "
+        "both its to_dict and from_dict"
+    )
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        for ctx in project.files:
+            if ctx.tree is None:
+                continue
+            for node in ast.walk(ctx.tree):
+                if not isinstance(node, ast.ClassDef):
+                    continue
+                if not node.name.endswith("Spec") or not _is_dataclass(node):
+                    continue
+                to_dict = _method(node, "to_dict")
+                from_dict = _method(node, "from_dict")
+                if to_dict is None or from_dict is None:
+                    # Specs inheriting shared round-trip machinery are out of
+                    # scope for a per-class literal check.
+                    continue
+                to_strings = const_strings(to_dict)
+                from_strings = const_strings(from_dict)
+                for stmt in node.body:
+                    if not isinstance(stmt, ast.AnnAssign):
+                        continue
+                    target = stmt.target
+                    if not isinstance(target, ast.Name):
+                        continue
+                    field = target.id
+                    if field.startswith("_") or _annotation_is_classvar(stmt.annotation):
+                        continue
+                    missing = []
+                    if field not in to_strings:
+                        missing.append("to_dict")
+                    if field not in from_strings:
+                        missing.append("from_dict")
+                    if missing:
+                        findings.append(Finding(
+                            rule=self.id, path=ctx.rel,
+                            line=stmt.lineno, col=stmt.col_offset,
+                            message=(
+                                f"{node.name}.{field} does not appear in "
+                                f"{' or '.join(missing)} — the field will be "
+                                "dropped on spec round-trip"
+                            ),
+                        ))
+        return findings

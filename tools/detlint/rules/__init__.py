@@ -1,0 +1,13 @@
+from .dtypes import DtypeDisciplineRule
+from .jit_purity import JitPurityRule
+from .rng import NoGlobalRngRule
+from .unordered import NoUnorderedFloatAccumulationRule
+from .wallclock import NoWallclockRule
+
+__all__ = [
+    "DtypeDisciplineRule",
+    "JitPurityRule",
+    "NoGlobalRngRule",
+    "NoUnorderedFloatAccumulationRule",
+    "NoWallclockRule",
+]

@@ -1,0 +1,94 @@
+"""dtype-discipline: explicit dtypes at the packed-array boundary.
+
+The packed ``MarketState`` pytree, the engine's registry columns, and the
+host-accounting arrays cross the numpy<->jax boundary.  numpy defaults to
+float64 while jax defaults to float32 (unless x64 is enabled), so a bare
+``np.zeros(n)`` seeds an implicit f32/f64 mix the moment the array crosses
+over — every constructor at this boundary must pass an explicit ``dtype=``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from ..astutil import ImportMap
+from ..core import FileContext, Finding, Rule
+
+# numpy/jnp constructors whose dtype defaults are backend-dependent.
+CONSTRUCTORS = {
+    "numpy.zeros", "numpy.ones", "numpy.empty", "numpy.full",
+    "numpy.array", "numpy.asarray", "numpy.arange", "numpy.linspace",
+    "numpy.zeros_like", "numpy.ones_like", "numpy.empty_like", "numpy.full_like",
+    "jax.numpy.zeros", "jax.numpy.ones", "jax.numpy.empty", "jax.numpy.full",
+    "jax.numpy.array", "jax.numpy.asarray", "jax.numpy.arange", "jax.numpy.linspace",
+}
+
+# *_like constructors inherit their prototype's dtype — that IS explicit.
+LIKE_CONSTRUCTORS = {c for c in CONSTRUCTORS if c.endswith("_like")}
+
+# Positional dtype slots: np.array(obj, dtype), np.asarray(a, dtype),
+# np.full(shape, fill, dtype), np.zeros(shape, dtype), ...
+POSITIONAL_DTYPE_INDEX = {
+    "numpy.zeros": 1, "numpy.ones": 1, "numpy.empty": 1,
+    "numpy.array": 1, "numpy.asarray": 1, "numpy.full": 2,
+    "jax.numpy.zeros": 1, "jax.numpy.ones": 1, "jax.numpy.empty": 1,
+    "jax.numpy.array": 1, "jax.numpy.asarray": 1, "jax.numpy.full": 2,
+}
+
+# The boundary files: packed MarketState construction (price_process),
+# registry columns + history (engine), and host accounting arrays (hosts).
+SCOPED_FILES = (
+    "src/repro/market/price_process.py",
+    "src/repro/market/engine.py",
+    "src/repro/core/hosts.py",
+)
+
+
+class DtypeDisciplineRule(Rule):
+    id = "dtype-discipline"
+    description = (
+        "array constructors at the packed MarketState / registry-column "
+        "boundary must pass an explicit dtype (numpy f64 vs jax f32 defaults "
+        "silently mix precisions)"
+    )
+
+    def __init__(self, ignore_scope: bool = False):
+        self.ignore_scope = ignore_scope
+
+    def in_scope(self, rel: str) -> bool:
+        if self.ignore_scope:
+            return True
+        return rel in SCOPED_FILES
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if ctx.tree is None or not self.in_scope(ctx.rel):
+            return []
+        imports = ImportMap(ctx.tree)
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            resolved = imports.resolve(node.func)
+            if resolved not in CONSTRUCTORS or resolved in LIKE_CONSTRUCTORS:
+                continue
+            has_dtype = any(kw.arg == "dtype" for kw in node.keywords)
+            pos = POSITIONAL_DTYPE_INDEX.get(resolved)
+            if pos is not None and len(node.args) > pos:
+                has_dtype = True
+            if not has_dtype:
+                short = resolved.replace("numpy", "np").replace("jax.np", "jnp")
+                findings.append(
+                    Finding(
+                        rule=self.id,
+                        path=ctx.rel,
+                        line=node.lineno,
+                        col=node.col_offset,
+                        message=(
+                            f"{short}(...) without an explicit dtype at the "
+                            "packed-array boundary — numpy defaults to float64, "
+                            "jax to float32; pass dtype= explicitly"
+                        ),
+                    )
+                )
+        return findings

@@ -1,0 +1,211 @@
+"""jit-purity: functions handed to jax tracing must be pure.
+
+A function passed to ``jax.jit`` / ``jax.vmap`` / ``jax.lax.scan`` (or a
+price-process family ``step`` on a ``vectorized = True`` class) executes
+once at trace time; any side effect — mutating closed-over state,
+appending to a list, writing through ``self``, I/O — silently happens
+once instead of per call and corrupts replay determinism.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Union
+
+from ..astutil import ImportMap, assigned_names, function_params, name_root
+from ..core import FileContext, Finding, Rule
+
+FunctionLike = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+JIT_WRAPPERS = {"jax.jit", "jax.vmap", "jax.pmap"}
+SCAN_WRAPPERS = {
+    "jax.lax.scan",
+    "jax.lax.fori_loop",
+    "jax.lax.while_loop",
+    "jax.lax.cond",
+    "jax.lax.map",
+}
+
+MUTATING_METHODS = {
+    "append", "extend", "insert", "remove", "pop", "clear",
+    "add", "update", "setdefault", "discard",
+    "write", "writelines", "sort",
+}
+IO_BUILTINS = {"print", "open", "input"}
+
+
+def _resolve_wrapper(resolved: Optional[str]) -> Optional[str]:
+    """Map a resolved dotted call name onto a known tracing wrapper."""
+    if resolved is None:
+        return None
+    if resolved in JIT_WRAPPERS or resolved in SCAN_WRAPPERS:
+        return resolved
+    # `from jax import jit` / `from jax.lax import scan` resolve fully via
+    # the import map, but tolerate bare jit/vmap/scan names too (fixtures).
+    tail = resolved.rsplit(".", 1)[-1]
+    if tail in {"jit", "vmap", "pmap"} and (resolved == tail or "jax" in resolved):
+        return f"jax.{tail}"
+    if tail in {"scan", "fori_loop", "while_loop", "cond"} and (
+        resolved == tail or "lax" in resolved or "jax" in resolved
+    ):
+        return f"jax.lax.{tail}"
+    return None
+
+
+class _PurityChecker:
+    """Inspect one traced function body for side effects."""
+
+    def __init__(self, fn: FunctionLike, is_method: bool = False):
+        self.fn = fn
+        self.params = function_params(fn)
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        self.locals: Set[str] = set()
+        for stmt in body:
+            self.locals |= assigned_names(stmt)
+        self.locals |= self.params
+        # For a vectorized-family step *method*, `self` is the family object:
+        # writing through it leaks state across traced steps.
+        self.self_is_foreign = is_method and "self" in self.params
+
+    def _root_is_foreign(self, node: ast.AST) -> bool:
+        root = name_root(node)
+        if root is None:
+            return False
+        if root == "self":
+            return self.self_is_foreign
+        return root not in self.locals
+
+    def violations(self) -> List[tuple]:
+        out: List[tuple] = []
+        body = self.fn.body if isinstance(self.fn.body, list) else [self.fn.body]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.Global, ast.Nonlocal)):
+                    out.append((node.lineno, node.col_offset,
+                                "rebinds global/nonlocal state"))
+                elif isinstance(node, ast.Call):
+                    func = node.func
+                    if isinstance(func, ast.Name) and func.id in IO_BUILTINS \
+                            and func.id not in self.locals:
+                        out.append((node.lineno, node.col_offset,
+                                    f"calls {func.id}() (I/O inside traced code)"))
+                    elif isinstance(func, ast.Attribute) \
+                            and func.attr in MUTATING_METHODS \
+                            and self._root_is_foreign(func.value):
+                        root = name_root(func.value) or "<expr>"
+                        out.append((node.lineno, node.col_offset,
+                                    f"mutates closed-over '{root}' via .{func.attr}()"))
+                elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                    targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+                    for target in targets:
+                        if isinstance(target, (ast.Attribute, ast.Subscript)) \
+                                and self._root_is_foreign(target):
+                            root = name_root(target) or "<expr>"
+                            out.append((target.lineno, target.col_offset,
+                                        f"writes through closed-over '{root}'"))
+        return out
+
+
+class JitPurityRule(Rule):
+    id = "jit-purity"
+    description = (
+        "functions passed to jax.jit/lax.scan/vmap (and vectorized "
+        "price-process family step fns) must not mutate closed-over state, "
+        "append to lists, or perform I/O"
+    )
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if ctx.tree is None:
+            return []
+        imports = ImportMap(ctx.tree)
+
+        # Index every function definition in the module by name (scoped
+        # resolution is overkill here; last definition wins).
+        defs: Dict[str, FunctionLike] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs[node.name] = node
+
+        traced: List[tuple] = []  # (fn, reason, is_method)
+        seen: Set[int] = set()
+
+        def mark(fn: Optional[ast.AST], reason: str, is_method: bool = False) -> None:
+            if fn is None or not isinstance(
+                fn, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+            ):
+                return
+            if id(fn) in seen:
+                return
+            seen.add(id(fn))
+            traced.append((fn, reason, is_method))
+
+        def resolve_arg(arg: ast.AST) -> Optional[ast.AST]:
+            if isinstance(arg, ast.Lambda):
+                return arg
+            if isinstance(arg, ast.Name):
+                return defs.get(arg.id)
+            return None
+
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                wrapper = _resolve_wrapper(imports.resolve(node.func))
+                if wrapper is not None and node.args:
+                    mark(resolve_arg(node.args[0]), wrapper)
+                    continue
+                # functools.partial(jax.jit, ...) — treat like a decorator use
+                resolved = imports.resolve(node.func)
+                if resolved == "functools.partial" and node.args:
+                    inner = _resolve_wrapper(imports.resolve(node.args[0]))
+                    if inner is not None and len(node.args) > 1:
+                        mark(resolve_arg(node.args[1]), inner)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    target = dec.func if isinstance(dec, ast.Call) else dec
+                    wrapper = _resolve_wrapper(imports.resolve(target))
+                    if wrapper is None and isinstance(dec, ast.Call):
+                        # @partial(jax.jit, static_argnums=...)
+                        resolved = imports.resolve(dec.func)
+                        if resolved == "functools.partial" and dec.args:
+                            wrapper = _resolve_wrapper(imports.resolve(dec.args[0]))
+                    if wrapper is not None:
+                        mark(node, wrapper)
+                        break
+            elif isinstance(node, ast.ClassDef):
+                # Price-process families: classes with `vectorized = True`
+                # have their step() traced inside jitted/scan code.
+                is_vectorized = any(
+                    isinstance(stmt, ast.Assign)
+                    and any(
+                        isinstance(t, ast.Name) and t.id == "vectorized"
+                        for t in stmt.targets
+                    )
+                    and isinstance(stmt.value, ast.Constant)
+                    and stmt.value.value is True
+                    for stmt in node.body
+                )
+                if is_vectorized:
+                    for stmt in node.body:
+                        if isinstance(stmt, ast.FunctionDef) and stmt.name in {
+                            "step", "init", "pack"
+                        }:
+                            mark(stmt, f"vectorized family {node.name}.{stmt.name}",
+                                 is_method=True)
+
+        findings: List[Finding] = []
+        for fn, reason, is_method in traced:
+            for lineno, col, what in _PurityChecker(fn, is_method).violations():
+                name = getattr(fn, "name", "<lambda>")
+                findings.append(
+                    Finding(
+                        rule=self.id,
+                        path=ctx.rel,
+                        line=lineno,
+                        col=col,
+                        message=(
+                            f"impure traced function '{name}' ({reason}): {what} — "
+                            "traced code runs once at trace time, so side effects "
+                            "do not replay"
+                        ),
+                    )
+                )
+        return findings

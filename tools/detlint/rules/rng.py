@@ -1,0 +1,78 @@
+"""no-global-rng: forbid global / legacy RNG entry points.
+
+All randomness must flow from explicitly threaded, seeded
+``np.random.default_rng(...)`` Generators (or functional ``jax.random``
+keys) so that every run is a pure function of its seed.  The stdlib
+``random`` module and the legacy ``np.random.*`` module-level functions
+share hidden global state and break the serial==parallel sweep contract.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from ..astutil import ImportMap
+from ..core import FileContext, Finding, Rule
+
+# Constructors of explicitly seeded generator objects are the approved API.
+NUMPY_ALLOWED = {
+    "default_rng",
+    "Generator",
+    "SeedSequence",
+    "BitGenerator",
+    "PCG64",
+    "PCG64DXSM",
+    "Philox",
+    "SFC64",
+    "MT19937",
+}
+
+# random.Random(seed) is an explicitly seeded instance; everything else on
+# the stdlib module (including SystemRandom — os-entropy) is forbidden.
+STDLIB_ALLOWED = {"random.Random"}
+
+
+class NoGlobalRngRule(Rule):
+    id = "no-global-rng"
+    description = (
+        "no stdlib random.* or legacy np.random.* module-level calls; "
+        "thread seeded np.random.default_rng Generators explicitly"
+    )
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if ctx.tree is None:
+            return []
+        imports = ImportMap(ctx.tree)
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            resolved = imports.resolve(node.func)
+            if resolved is None:
+                continue
+            bad = None
+            if resolved.startswith("random.") and resolved not in STDLIB_ALLOWED:
+                bad = (
+                    f"stdlib {resolved}() uses hidden global RNG state — "
+                    "thread a seeded np.random.default_rng(...) Generator instead"
+                )
+            elif resolved.startswith("numpy.random."):
+                attr = resolved[len("numpy.random."):]
+                if attr.split(".")[0] not in NUMPY_ALLOWED:
+                    bad = (
+                        f"legacy np.random.{attr}() touches module-global RNG "
+                        "state — use an explicitly threaded "
+                        "np.random.default_rng(...) Generator"
+                    )
+            if bad is not None:
+                findings.append(
+                    Finding(
+                        rule=self.id,
+                        path=ctx.rel,
+                        line=node.lineno,
+                        col=node.col_offset,
+                        message=bad,
+                    )
+                )
+        return findings

@@ -1,0 +1,99 @@
+"""no-unordered-float-accumulation: set-iteration into float sums.
+
+Float addition is not associative; summing over a container whose
+iteration order is unspecified (sets, frozensets, set-algebra results)
+produces run-to-run different low bits and breaks bit-identity.  Dicts
+are insertion-ordered in CPython >= 3.7 and are deliberately *not*
+flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional
+
+from ..core import FileContext, Finding, Rule
+
+_SET_METHODS = {"union", "intersection", "difference", "symmetric_difference"}
+
+
+def _is_setish(node: ast.AST) -> bool:
+    """Conservatively: does this expression evaluate to a set?"""
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        func = node.func
+        if isinstance(func, ast.Name) and func.id in {"set", "frozenset"}:
+            return True
+        if isinstance(func, ast.Attribute) and func.attr in _SET_METHODS:
+            return True
+    if isinstance(node, ast.BinOp) and isinstance(node.op, (ast.BitAnd, ast.BitOr, ast.Sub)):
+        # set algebra via operators: a & b, a | b, a - b on set operands
+        return _is_setish(node.left) or _is_setish(node.right)
+    return False
+
+
+def _setish_iter_of(node: ast.AST) -> Optional[ast.AST]:
+    """If *node* is a comprehension/genexp over a set-ish iterable, return it."""
+    if isinstance(node, (ast.GeneratorExp, ast.ListComp)):
+        for gen in node.generators:
+            if _is_setish(gen.iter):
+                return gen.iter
+    return None
+
+
+class NoUnorderedFloatAccumulationRule(Rule):
+    id = "no-unordered-float-accumulation"
+    description = (
+        "no iterating a set into a float sum or accumulation loop "
+        "(unordered iteration makes float addition order unstable)"
+    )
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if ctx.tree is None:
+            return []
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                func = node.func
+                # math.fsum is correctly rounded regardless of order, and
+                # max/min are order-independent — only builtin sum() is an
+                # order-sensitive float accumulator.
+                is_sum = isinstance(func, ast.Name) and func.id == "sum"
+                if is_sum and node.args:
+                    arg = node.args[0]
+                    if _is_setish(arg) or _setish_iter_of(arg) is not None:
+                        findings.append(
+                            Finding(
+                                rule=self.id,
+                                path=ctx.rel,
+                                line=node.lineno,
+                                col=node.col_offset,
+                                message=(
+                                    "float sum over an unordered set iteration — "
+                                    "sort the elements (or accumulate over an "
+                                    "ordered sequence) to keep bit-identity"
+                                ),
+                            )
+                        )
+            elif isinstance(node, ast.For) and _is_setish(node.iter):
+                has_augadd = any(
+                    isinstance(sub, ast.AugAssign) and isinstance(sub.op, ast.Add)
+                    for stmt in node.body
+                    for sub in ast.walk(stmt)
+                )
+                if has_augadd:
+                    findings.append(
+                        Finding(
+                            rule=self.id,
+                            path=ctx.rel,
+                            line=node.lineno,
+                            col=node.col_offset,
+                            message=(
+                                "accumulation loop over an unordered set — "
+                                "iterate sorted(...) to keep float accumulation "
+                                "order stable"
+                            ),
+                        )
+                    )
+        return findings

@@ -1,0 +1,80 @@
+"""no-wallclock: sim paths must not read wall clocks.
+
+Bit-identity contracts (vectorized == scalar oracle, serial == parallel
+sweeps, log-on == log-off) require that nothing inside the simulation
+core depends on real time.  Only observability (`obs/`), launch-layer
+progress reporting, and benchmarks may read clocks.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from ..astutil import ImportMap
+from ..core import FileContext, Finding, Rule
+
+FORBIDDEN_CALLS = {
+    "time.time",
+    "time.time_ns",
+    "time.perf_counter",
+    "time.perf_counter_ns",
+    "time.monotonic",
+    "time.monotonic_ns",
+    "time.process_time",
+    "time.process_time_ns",
+    "datetime.datetime.now",
+    "datetime.datetime.today",
+    "datetime.datetime.utcnow",
+    "datetime.date.today",
+}
+
+# Clock reads are a hazard only inside the deterministic sim core.  obs/,
+# launch/, elastic/ (checkpoint wall stamps), serve/ and benchmarks are
+# wall-time consumers by design.
+SCOPED_PREFIXES = (
+    "src/repro/core/",
+    "src/repro/market/",
+    "src/repro/api/",
+)
+
+
+class NoWallclockRule(Rule):
+    id = "no-wallclock"
+    description = (
+        "no time.time/perf_counter/datetime.now in src/repro/{core,market,api} "
+        "sim paths (only obs/ and benchmarks/ may read clocks)"
+    )
+
+    def __init__(self, ignore_scope: bool = False):
+        self.ignore_scope = ignore_scope
+
+    def in_scope(self, rel: str) -> bool:
+        if self.ignore_scope:
+            return True
+        return rel.startswith(SCOPED_PREFIXES)
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if ctx.tree is None or not self.in_scope(ctx.rel):
+            return []
+        imports = ImportMap(ctx.tree)
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            resolved = imports.resolve(node.func)
+            if resolved in FORBIDDEN_CALLS:
+                findings.append(
+                    Finding(
+                        rule=self.id,
+                        path=ctx.rel,
+                        line=node.lineno,
+                        col=node.col_offset,
+                        message=(
+                            f"wall-clock read {resolved}() in a sim path — "
+                            "sim code must be a pure function of (spec, seed); "
+                            "only obs/ and benchmarks/ may read clocks"
+                        ),
+                    )
+                )
+        return findings
