@@ -28,6 +28,7 @@ MODULES = [
     "market_engine",            # PR 2: wave selection + engine end-to-end
     "price_layer",              # PR 5: fused price ticks + batched billing
     "fleet",                    # PR 6: fleet replenish planner + liveness scan
+    "serve",                    # PR 10: autoscale tick + request throughput
     "migration",                # PR 3: migration-planner throughput
     "victim_selection",         # beyond-paper: §IX victim selectors
     "cost_analysis",            # beyond-paper: $ cost / waste per policy

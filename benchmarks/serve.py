@@ -1,0 +1,74 @@
+"""Serving-scenario benchmarks (PR 10).
+
+* ``serve/autoscale_tick`` — one autoscaler control decision (signal
+  assembly excluded): the target-tracking policy plus
+  hysteresis/cooldown damping over a batch of synthetic demand signals.
+* ``serve/request_throughput`` — end-to-end serving closed loop: a
+  diurnal-demand run through the spec/build stack (demand integration,
+  per-VM request schedulers, autoscaler cadence), reported as wall
+  microseconds per served request.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.api import (
+    AutoscaleSpec,
+    FleetSpec,
+    PolicySpec,
+    RunSpec,
+    ScenarioSpec,
+    ServeSpec,
+    build,
+)
+from repro.serve.autoscale import Autoscaler, AutoscaleConfig, DemandSignals
+
+from .common import emit, timeit
+
+
+def bench_autoscale_tick(n_signals: int):
+    sigs = [
+        DemandSignals(t=300.0 * i, rate_ewma=0.1 + 0.01 * (i % 40),
+                      queue_depth=i % 23, p95_latency=30.0 + (i % 7),
+                      live_units=4 + i % 9, target_units=4 + i % 9,
+                      unit_throughput=0.0333, rate_ahead=0.12)
+        for i in range(n_signals)
+    ]
+
+    def decide_all():
+        a = Autoscaler("target-tracking",
+                       AutoscaleConfig(cooldown=0.0, hysteresis=0.1))
+        for s in sigs:
+            a.decide(s)
+
+    t = timeit(decide_all, n=9) / n_signals
+    return [emit("serve/autoscale_tick", t,
+                 f"signals={n_signals};policy=target-tracking")]
+
+
+def bench_request_throughput(horizon: float):
+    spec = RunSpec(
+        scenario=ScenarioSpec(workload="serve-diurnal", regime="volatile",
+                              n_pools=4, horizon=horizon,
+                              workload_params={"base_rate": 0.3,
+                                               "amplitude": 0.1}),
+        policy=PolicySpec("first-fit"),
+        fleet=FleetSpec(params={"target_capacity": 24.0}),
+        serve=ServeSpec(),
+        autoscale=AutoscaleSpec("target-tracking",
+                                params={"cadence": 300.0, "max_units": 24}))
+    sim = build(spec, seed=0)
+    t0 = time.time()
+    metrics = sim.run(until=horizon)
+    wall = time.time() - t0
+    done = max(metrics.requests_done, 1)
+    return [emit("serve/request_throughput", wall * 1e6 / done,
+                 f"horizon={horizon:.0f};done={metrics.requests_done};"
+                 f"wall_s={wall:.2f}")]
+
+
+def run(quick: bool = True):
+    rows = []
+    rows += bench_autoscale_tick(2000 if quick else 20000)
+    rows += bench_request_throughput(7200.0 if quick else 43200.0)
+    return rows

@@ -29,6 +29,7 @@ Specs JSON round-trip losslessly (``to_dict``/``from_dict``/``to_json``/
 ``examples/specs/``.
 """
 from .registry import (
+    AUTOSCALE_REGISTRY,
     BID_REGISTRY,
     MIGRATION_REGISTRY,
     POLICY_REGISTRY,
@@ -36,6 +37,7 @@ from .registry import (
     Registry,
     WORKLOAD_REGISTRY,
     WorkloadDef,
+    register_autoscale_policy,
     register_bid_strategy,
     register_migration_policy,
     register_policy,
@@ -43,6 +45,7 @@ from .registry import (
     register_workload,
 )
 from .specs import (
+    AutoscaleSpec,
     BidSpec,
     ExperimentSpec,
     FaultSpec,
@@ -53,6 +56,7 @@ from .specs import (
     RebidSpec,
     RunSpec,
     ScenarioSpec,
+    ServeSpec,
 )
 from .build import (build, build_engine, build_tracer, collect_row,
                     resolve_horizon, run_one)

@@ -27,6 +27,9 @@ from ..market.pools import make_market
 from ..market.pricing import realized_cost_stats
 from ..obs.eventlog import EventLog
 from ..obs.tracer import Tracer
+from ..serve.autoscale import make_autoscaler
+from ..serve.service import make_serve_manager
+from ..serve.slo import serve_stats
 from .specs import ObsSpec, RunSpec, ScenarioSpec
 from .workloads import WORKLOAD_REGISTRY
 
@@ -97,13 +100,23 @@ def build(spec: RunSpec, seed: int) -> MarketSimulator:
             spec.faults.scenario, scenario.n_pools,
             resolve_horizon(scenario), scenario.tick_interval, seed,
             **dict(spec.faults.params))
+    # serve managers carry the request queue + per-VM scheduler map (and
+    # the autoscaler its cooldown clock) — always fresh per build
+    serve = None
+    if spec.serve is not None:
+        autoscaler = None
+        if spec.autoscale is not None:
+            autoscaler = make_autoscaler(spec.autoscale.policy,
+                                         spec.autoscale.config())
+        serve = make_serve_manager(spec.serve.config(),
+                                   autoscaler=autoscaler, seed=seed)
     obs = build_tracer(spec.obs)
     events = build_event_log(spec.obs)
     sim = MarketSimulator(
         policy=make_policy(spec.policy.name, **dict(spec.policy.params)),
         config=SimConfig(record_timeline=False, **dict(scenario.sim_params)),
         engine=engine, migration=migration, rebid=rebid,
-        fleet=fleet, faults=faults, obs=obs, events=events)
+        fleet=fleet, faults=faults, serve=serve, obs=obs, events=events)
     if obs is not None:
         # one tracer per run, shared by every subsystem so spans nest and
         # counters land in a single registry; components are fresh per
@@ -115,6 +128,8 @@ def build(spec: RunSpec, seed: int) -> MarketSimulator:
             migration.tracer = obs
         if fleet is not None:
             fleet.tracer = obs
+        if serve is not None:
+            serve.tracer = obs
     if events is not None:
         # one flight recorder per run, shared by every emit site — the
         # same attach pattern as the tracer (fresh components, no leaks)
@@ -126,6 +141,8 @@ def build(spec: RunSpec, seed: int) -> MarketSimulator:
             fleet.events = events
         if faults is not None:
             faults.events_log = events
+        if serve is not None:
+            serve.events = events
     WORKLOAD_REGISTRY.get(scenario.workload)(sim, scenario, seed)
     return sim
 
@@ -188,6 +205,7 @@ def collect_row(sim: MarketSimulator, metrics, spec: RunSpec,
         "wasted_cost": round(cost["wasted_cost"], 4),
         "allocations": metrics.allocations,
     })
+    rs = None
     if sim.fleet is not None:
         rs = metrics.resilience_stats(sim.vms, sim.engine, sim.pool)
         row.update({
@@ -203,4 +221,16 @@ def collect_row(sim: MarketSimulator, metrics, spec: RunSpec,
             "fleet_spot_cost": round(rs["fleet_spot_cost"], 4),
             "od_spill_cost": round(rs["od_spill_cost"], 4),
         })
+    if sim.serve is not None:
+        scfg = sim.serve.config
+        horizon = resolve_horizon(spec.scenario)
+        cost = (rs["fleet_spot_cost"] + rs["od_spill_cost"]
+                if rs is not None else None)
+        ss = serve_stats(metrics, slo_latency=scfg.slo_latency_s,
+                         slo_objective=scfg.slo_objective,
+                         window=scfg.window_s,
+                         horizon=horizon if horizon is not None else sim.now,
+                         cost=cost)
+        row.update({k: (round(v, 4) if isinstance(v, float) else v)
+                    for k, v in ss.items()})
     return row

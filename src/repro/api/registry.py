@@ -12,6 +12,8 @@ the registration decorators:
 * :data:`PRICE_PROCESS_REGISTRY` / ``register_price_process`` — pool price
   processes.
 * :data:`WORKLOAD_REGISTRY` / ``register_workload`` — workload generators.
+* :data:`AUTOSCALE_REGISTRY` / ``register_autoscale_policy`` — autoscaler
+  policies.
 """
 from ..core.registry import Registry
 from ..core.allocation import POLICY_REGISTRY, register_policy
@@ -21,6 +23,7 @@ from ..market.price_process import (
     PRICE_PROCESS_REGISTRY,
     register_price_process,
 )
+from ..serve.autoscale import AUTOSCALE_REGISTRY, register_autoscale_policy
 from .workloads import WORKLOAD_REGISTRY, WorkloadDef, register_workload
 
 __all__ = [
@@ -30,4 +33,5 @@ __all__ = [
     "MIGRATION_REGISTRY", "register_migration_policy",
     "PRICE_PROCESS_REGISTRY", "register_price_process",
     "WORKLOAD_REGISTRY", "WorkloadDef", "register_workload",
+    "AUTOSCALE_REGISTRY", "register_autoscale_policy",
 ]

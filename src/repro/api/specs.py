@@ -53,6 +53,12 @@ from ..market.fleet import (
     validate_fleet_config,
 )
 from ..market.pools import REGIMES
+from ..serve.autoscale import (
+    AUTOSCALE_REGISTRY,
+    AutoscaleConfig,
+    validate_autoscale_config,
+)
+from ..serve.service import ServeConfig, validate_serve_config
 from .workloads import WORKLOAD_REGISTRY
 
 
@@ -290,6 +296,76 @@ class FaultSpec(_SpecBase):
 
 
 @dataclass(frozen=True)
+class ServeSpec(_SpecBase):
+    """Traffic-driven serving layer:
+    :class:`~repro.serve.service.ServeConfig` parameters (tick cadence,
+    per-VM slots, decode throughput, SLO latency/objective).  The demand
+    curve itself comes from the scenario's workload (``serve-diurnal`` /
+    ``serve-bursty``), so the same ServeSpec composes with any demand
+    shape."""
+
+    params: Mapping[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        _set(self, "params", dict(self.params))
+        allowed = {f.name for f in dataclasses.fields(ServeConfig)}
+        _check_param_keys(self.params, allowed, "serve")
+        try:
+            self.config()
+        except ValueError as e:
+            raise _spec_error(str(e)) from None
+
+    def config(self) -> ServeConfig:
+        cfg = ServeConfig(**dict(self.params))
+        validate_serve_config(cfg)
+        return cfg
+
+    def to_dict(self) -> dict:
+        return {"params": dict(self.params)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ServeSpec":
+        return cls(params=d.get("params", {}))
+
+
+@dataclass(frozen=True)
+class AutoscaleSpec(_SpecBase):
+    """Closed-loop autoscaler: policy by registry name
+    (:data:`~repro.serve.autoscale.AUTOSCALE_REGISTRY`) +
+    :class:`~repro.serve.autoscale.AutoscaleConfig` parameters (cadence,
+    unit bounds, hysteresis, cooldown).  Drives
+    ``FleetManager.set_target_units`` — requires both a serve spec (the
+    signals) and a fleet spec (the lever)."""
+
+    policy: str = "target-tracking"
+    params: Mapping[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        AUTOSCALE_REGISTRY.get(self.policy)  # raises on unknown name
+        _set(self, "params", dict(self.params))
+        allowed = {f.name for f in dataclasses.fields(AutoscaleConfig)}
+        _check_param_keys(self.params, allowed,
+                          f"autoscale policy {self.policy!r}")
+        try:
+            self.config()
+        except ValueError as e:
+            raise _spec_error(str(e)) from None
+
+    def config(self) -> AutoscaleConfig:
+        cfg = AutoscaleConfig(**dict(self.params))
+        validate_autoscale_config(cfg)
+        return cfg
+
+    def to_dict(self) -> dict:
+        return {"policy": self.policy, "params": dict(self.params)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "AutoscaleSpec":
+        return cls(policy=d.get("policy", "target-tracking"),
+                   params=d.get("params", {}))
+
+
+@dataclass(frozen=True)
 class ObsSpec(_SpecBase):
     """Observability: tracing / profiling / counter snapshots
     (``repro.obs``).  All three are independent switches on one
@@ -461,6 +537,10 @@ class RunSpec(_SpecBase):
     rebid: Optional[RebidSpec] = None
     fleet: Optional[FleetSpec] = None
     faults: Optional[FaultSpec] = None
+    #: traffic-driven serving layer; None = no request traffic
+    serve: Optional[ServeSpec] = None
+    #: closed-loop autoscaler (needs serve + fleet); None = fixed capacity
+    autoscale: Optional[AutoscaleSpec] = None
     #: observability (tracing/profiling/counters); None = fully off
     obs: Optional[ObsSpec] = None
 
@@ -473,7 +553,8 @@ class RunSpec(_SpecBase):
             elif not isinstance(getattr(self, name), typ):
                 raise _spec_error(f"{name} must be a {typ.__name__}")
         for name, typ in (("rebid", RebidSpec), ("fleet", FleetSpec),
-                          ("faults", FaultSpec), ("obs", ObsSpec)):
+                          ("faults", FaultSpec), ("serve", ServeSpec),
+                          ("autoscale", AutoscaleSpec), ("obs", ObsSpec)):
             val = getattr(self, name)
             if isinstance(val, Mapping):
                 _set(self, name, typ.from_dict(val))
@@ -506,6 +587,26 @@ class RunSpec(_SpecBase):
             self.faults.validate_events(self.scenario.n_pools,
                                         self.scenario.horizon,
                                         self.scenario.tick_interval)
+        wl = WORKLOAD_REGISTRY.get(self.scenario.workload)
+        if self.serve is not None:
+            if not getattr(wl, "provides_demand", False):
+                raise _spec_error(
+                    f"a serve spec needs a demand-providing workload "
+                    f"(workload {self.scenario.workload!r} installs no "
+                    f"request-rate curve — use serve-diurnal/serve-bursty)")
+        elif getattr(wl, "provides_demand", False):
+            raise _spec_error(
+                f"workload {self.scenario.workload!r} generates request "
+                f"demand — add a serve spec to consume it")
+        if self.autoscale is not None:
+            if self.serve is None:
+                raise _spec_error(
+                    "an autoscaler needs a serve spec — its signals are the "
+                    "serving layer's demand/queue/latency estimates")
+            if self.fleet is None:
+                raise _spec_error(
+                    "an autoscaler needs a fleet spec — "
+                    "FleetManager.set_target_units is its actuation lever")
 
     def to_dict(self) -> dict:
         return {
@@ -516,6 +617,10 @@ class RunSpec(_SpecBase):
             "fleet": self.fleet.to_dict() if self.fleet is not None else None,
             "faults": (self.faults.to_dict()
                        if self.faults is not None else None),
+            "serve": (self.serve.to_dict()
+                      if self.serve is not None else None),
+            "autoscale": (self.autoscale.to_dict()
+                          if self.autoscale is not None else None),
             "obs": self.obs.to_dict() if self.obs is not None else None,
         }
 
@@ -524,6 +629,8 @@ class RunSpec(_SpecBase):
         rebid = d.get("rebid")
         fleet = d.get("fleet")
         faults = d.get("faults")
+        serve = d.get("serve")
+        autoscale = d.get("autoscale")
         obs = d.get("obs")
         return cls(
             scenario=ScenarioSpec.from_dict(d["scenario"]),
@@ -533,6 +640,10 @@ class RunSpec(_SpecBase):
             fleet=FleetSpec.from_dict(fleet) if fleet is not None else None,
             faults=(FaultSpec.from_dict(faults)
                     if faults is not None else None),
+            serve=(ServeSpec.from_dict(serve)
+                   if serve is not None else None),
+            autoscale=(AutoscaleSpec.from_dict(autoscale)
+                       if autoscale is not None else None),
             obs=ObsSpec.from_dict(obs) if obs is not None else None,
         )
 
@@ -569,6 +680,12 @@ class ExperimentSpec(_SpecBase):
     #: fault injection applied to *every* cell (same seeded schedule per
     #: seed, so cells stay comparable); None = no faults
     faults: Optional[FaultSpec] = None
+    #: serving layer applied to *every* cell (the demand curve comes from
+    #: the scenario's workload); None = no request traffic
+    serve: Optional["ServeSpec"] = None
+    #: fan the grid over autoscalers; entries may be None (the fixed-
+    #: capacity baseline cell).  None (the default) = no autoscale axis
+    autoscales: Optional[Tuple[Optional["AutoscaleSpec"], ...]] = None
     name: str = "experiment"
 
     def __post_init__(self):
@@ -587,6 +704,22 @@ class ExperimentSpec(_SpecBase):
             _set(self, "faults", FaultSpec.from_dict(self.faults))
         if self.faults is not None and not isinstance(self.faults, FaultSpec):
             raise _spec_error("faults must be a FaultSpec or None")
+        if isinstance(self.serve, Mapping):
+            _set(self, "serve", ServeSpec.from_dict(self.serve))
+        if self.serve is not None and not isinstance(self.serve, ServeSpec):
+            raise _spec_error("serve must be a ServeSpec or None")
+        if self.autoscales is not None:
+            _set(self, "autoscales", tuple(
+                AutoscaleSpec.from_dict(a) if isinstance(a, Mapping) else a
+                for a in self.autoscales))
+            if not self.autoscales:
+                raise _spec_error("autoscales cannot be empty — use None "
+                                  "for no autoscale axis, or include a None "
+                                  "entry for the fixed-capacity baseline")
+            if not all(a is None or isinstance(a, AutoscaleSpec)
+                       for a in self.autoscales):
+                raise _spec_error(
+                    "autoscales must all be AutoscaleSpec or None")
         if self.fleets is not None:
             _set(self, "fleets", tuple(
                 FleetSpec.from_dict(f) if isinstance(f, Mapping) else f
@@ -682,6 +815,8 @@ class ExperimentSpec(_SpecBase):
                    else (self.scenario.regime,))
         bid_axis = self.bids if self.bids is not None else (None,)
         fleet_axis = self.fleets if self.fleets is not None else (None,)
+        autoscale_axis = (self.autoscales if self.autoscales is not None
+                          else (None,))
         combos = self.workload_combos()
         out = []
         for regime in regimes:
@@ -696,10 +831,14 @@ class ExperimentSpec(_SpecBase):
                                 workload_params={**s_bid.workload_params,
                                                  **combo}))
                             for fleet in fleet_axis:
-                                out.append(RunSpec(
-                                    scenario=scenario, policy=policy,
-                                    migration=migration, rebid=self.rebid,
-                                    fleet=fleet, faults=self.faults))
+                                for autoscale in autoscale_axis:
+                                    out.append(RunSpec(
+                                        scenario=scenario, policy=policy,
+                                        migration=migration,
+                                        rebid=self.rebid, fleet=fleet,
+                                        faults=self.faults,
+                                        serve=self.serve,
+                                        autoscale=autoscale))
         return tuple(out)
 
     def runs(self):
@@ -728,6 +867,11 @@ class ExperimentSpec(_SpecBase):
                        if self.fleets is not None else None),
             "faults": (self.faults.to_dict()
                        if self.faults is not None else None),
+            "serve": (self.serve.to_dict()
+                      if self.serve is not None else None),
+            "autoscales": ([a.to_dict() if a is not None else None
+                            for a in self.autoscales]
+                           if self.autoscales is not None else None),
         }
 
     @classmethod
@@ -737,6 +881,8 @@ class ExperimentSpec(_SpecBase):
         bids = d.get("bids")
         fleets = d.get("fleets")
         faults = d.get("faults")
+        serve = d.get("serve")
+        autoscales = d.get("autoscales")
         return cls(
             name=d.get("name", "experiment"),
             scenario=ScenarioSpec.from_dict(d["scenario"]),
@@ -754,6 +900,12 @@ class ExperimentSpec(_SpecBase):
                     if fleets is not None else None),
             faults=(FaultSpec.from_dict(faults)
                     if faults is not None else None),
+            serve=(ServeSpec.from_dict(serve)
+                   if serve is not None else None),
+            autoscales=(tuple(AutoscaleSpec.from_dict(a)
+                              if a is not None else None
+                              for a in autoscales)
+                        if autoscales is not None else None),
         )
 
     @classmethod

@@ -112,6 +112,11 @@ def _report_cell(exp: ExperimentSpec, cell: RunSpec,
         # share a strategy and differ only in ladder/weights params
         out["fleet"] = (cell.fleet.to_dict()
                         if cell.fleet is not None else None)
+    if exp.autoscales is not None:
+        # full spec (None = the fixed-capacity baseline cell) — two
+        # AutoscaleSpecs may share a policy and differ only in params
+        out["autoscale"] = (cell.autoscale.to_dict()
+                            if cell.autoscale is not None else None)
     return out
 
 

@@ -29,6 +29,7 @@ from dataclasses import dataclass
 from typing import Callable, Optional
 
 from ..core.registry import Registry
+from ..core.types import resources
 from ..core.workload import (
     MarketScenarioConfig,
     ScenarioConfig,
@@ -37,6 +38,7 @@ from ..core.workload import (
 )
 from ..market.bids import assign_bids, make_bid_strategy
 from ..market.trace import TraceConfig, generate_trace, wire_trace
+from ..serve.demand import make_bursty, make_diurnal
 
 WORKLOAD_REGISTRY = Registry("workload")
 
@@ -60,6 +62,9 @@ class WorkloadDef:
     #: config keys the builder supplies itself — rejected in
     #: ``workload_params`` at spec construction
     reserved_params: tuple = ("seed",)
+    #: whether the workload installs a request-demand curve on
+    #: ``sim.serve`` (serving scenarios require one of these)
+    provides_demand: bool = False
 
     def __call__(self, sim, scenario, seed: int) -> None:
         self.populate(sim, scenario, seed)
@@ -69,13 +74,15 @@ def register_workload(name: str, config_cls: Optional[type] = None,
                       default_horizon: Optional[float] = None,
                       supports_bids: bool = True,
                       requires_market: bool = False,
-                      reserved_params: tuple = ("seed",)) -> Callable:
+                      reserved_params: tuple = ("seed",),
+                      provides_demand: bool = False) -> Callable:
     """Decorator registering a populate function as a workload."""
     def _wrap(fn: Callable) -> Callable:
         WORKLOAD_REGISTRY.register(name, WorkloadDef(
             populate=fn, config_cls=config_cls,
             default_horizon=default_horizon, supports_bids=supports_bids,
-            requires_market=requires_market, reserved_params=reserved_params))
+            requires_market=requires_market, reserved_params=reserved_params,
+            provides_demand=provides_demand))
         return fn
     return _wrap
 
@@ -122,3 +129,69 @@ def _populate_market(sim, scenario, seed: int) -> None:
 def _populate_trace(sim, scenario, seed: int) -> None:
     cfg = TraceConfig(seed=seed, **dict(scenario.workload_params))
     wire_trace(sim, generate_trace(cfg), cfg)
+
+
+# ---------------------------------------------------------------------------
+# traffic-driven serving workloads: hosts + a demand curve, no VMs — the
+# fleet supplies capacity, the serve layer turns the curve into requests
+# ---------------------------------------------------------------------------
+@dataclass
+class DiurnalDemandConfig:
+    """Serving scenario infrastructure + diurnal request-rate curve."""
+
+    n_hosts: int = 12
+    host_cpu: float = 16.0
+    host_ram: float = 65536.0
+    base_rate: float = 0.2       # requests/s at the mean
+    amplitude: float = 0.15      # sinusoidal swing (requests/s)
+    period: float = 86400.0      # one day
+    phase: float = 0.0
+    seed: int = 0
+
+
+@dataclass
+class BurstyDemandConfig:
+    """Serving scenario infrastructure + self-similar bursty curve."""
+
+    n_hosts: int = 12
+    host_cpu: float = 16.0
+    host_ram: float = 65536.0
+    base_rate: float = 0.15
+    spike_every: float = 1800.0  # mean inter-spike gap (s)
+    spike_mag: float = 0.5       # Pareto magnitude scale (requests/s)
+    spike_alpha: float = 1.6     # Pareto tail index (heavy tail < 2)
+    spike_duration: float = 300.0
+    seed: int = 0
+
+
+def _serve_hosts(sim, scenario, n_hosts: int, cpu: float, ram: float) -> None:
+    for i in range(int(n_hosts)):
+        sim.add_host(resources(cpu, ram, 1000.0, 1 << 20),
+                     pool=i % scenario.n_pools)
+
+
+@register_workload("serve-diurnal", config_cls=DiurnalDemandConfig,
+                   default_horizon=86400.0, supports_bids=False,
+                   requires_market=True, provides_demand=True)
+def _populate_serve_diurnal(sim, scenario, seed: int) -> None:
+    cfg = DiurnalDemandConfig(seed=seed, **dict(scenario.workload_params))
+    _serve_hosts(sim, scenario, cfg.n_hosts, cfg.host_cpu, cfg.host_ram)
+    if sim.serve is not None:
+        sim.serve.set_demand(make_diurnal(
+            base_rate=cfg.base_rate, amplitude=cfg.amplitude,
+            period=cfg.period, phase=cfg.phase))
+
+
+@register_workload("serve-bursty", config_cls=BurstyDemandConfig,
+                   default_horizon=86400.0, supports_bids=False,
+                   requires_market=True, provides_demand=True)
+def _populate_serve_bursty(sim, scenario, seed: int) -> None:
+    cfg = BurstyDemandConfig(seed=seed, **dict(scenario.workload_params))
+    _serve_hosts(sim, scenario, cfg.n_hosts, cfg.host_cpu, cfg.host_ram)
+    if sim.serve is not None:
+        horizon = scenario.horizon if scenario.horizon is not None else 86400.0
+        sim.serve.set_demand(make_bursty(
+            base_rate=cfg.base_rate, spike_every=cfg.spike_every,
+            spike_mag=cfg.spike_mag, spike_alpha=cfg.spike_alpha,
+            spike_duration=cfg.spike_duration, horizon=horizon,
+            seed=cfg.seed))

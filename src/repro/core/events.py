@@ -27,6 +27,8 @@ class EventKind(enum.Enum):
     HOST_ADD = "host-add"
     HOST_REMOVE = "host-remove"
     HOST_UPDATE = "host-update"
+    SERVE_TICK = "serve-tick"               # serving loop: arrivals + decode
+    AUTOSCALE = "autoscale"                 # autoscaler control cadence
 
 
 # lower = processed earlier at equal timestamps
@@ -48,6 +50,11 @@ PRIORITY = {
     # migrations are opportunistic: same-time fresh submissions claim
     # capacity first, the start handler re-validates its reservation target
     EventKind.MIGRATE_START: 7,
+    # the serving loop observes fully settled same-time state (post-wave,
+    # post-flush, post-fleet); the autoscaler reads the serve tick's fresh
+    # signals, so it sorts after SERVE_TICK at coincident timestamps
+    EventKind.SERVE_TICK: 8,
+    EventKind.AUTOSCALE: 9,
 }
 
 

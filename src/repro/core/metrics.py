@@ -136,6 +136,18 @@ class Metrics:
     fleet_od_ids: List[int] = field(default_factory=list)
     # -- fault injection (empty when no FaultInjector is attached) -----------
     fault_records: List[FaultRecord] = field(default_factory=list)
+    # -- serving layer (empty when no ServeManager is attached) --------------
+    #: (t, arrivals, rate, queue_depth, live_units, target_units) per
+    #: SERVE_TICK, sampled after dispatch — the closed loop's flight data
+    serve_samples: List[tuple] = field(default_factory=list)
+    request_latencies: List[float] = field(default_factory=list)
+    request_done_times: List[float] = field(default_factory=list)
+    requests_arrived: int = 0
+    requests_done: int = 0
+    requests_requeued: int = 0      # in-flight requests bounced by VM loss
+    #: (t, old_units, new_units) per AUTOSCALE evaluation (old == new when
+    #: the policy or its hysteresis/cooldown damping held the target)
+    autoscale_decisions: List[tuple] = field(default_factory=list)
 
     def on_transition(self, vm: Vm, old: VmState, new: VmState) -> None:
         """Update the incremental counters for one VM state change."""

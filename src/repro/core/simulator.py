@@ -66,7 +66,8 @@ class MarketSimulator:
     def __init__(self, policy: Optional[AllocationPolicy] = None,
                  config: Optional[SimConfig] = None,
                  engine=None, migration=None, rebid=None,
-                 fleet=None, faults=None, obs=None, events=None):
+                 fleet=None, faults=None, serve=None, obs=None,
+                 events=None):
         """``engine`` — optional :class:`repro.market.engine.MarketEngine`.
         When attached, the simulator runs periodic PRICE_TICK events: each
         tick re-clears every capacity pool's price from live utilization,
@@ -100,6 +101,15 @@ class MarketSimulator:
         engine's tick inputs, and interruption storms reclaim resident spot
         VMs right after the normal price wave.  ``faults=None`` is
         bit-identical to a fault-less simulator.
+
+        ``serve`` — optional :class:`repro.serve.service.ServeManager`.
+        Adds two self-scheduling event chains: SERVE_TICK (demand arrivals,
+        request dispatch onto live fleet capacity, decode progress) and —
+        when the manager carries an autoscaler — AUTOSCALE (damped
+        target-capacity decisions applied to the fleet).  Interrupted or
+        finished serving VMs requeue their in-flight requests through the
+        ordinary lifecycle listeners.  ``serve=None`` is bit-identical to a
+        serve-less simulator.
 
         ``obs`` — optional :class:`repro.obs.tracer.Tracer`.  When enabled,
         the event loop runs a traced variant that records a span per
@@ -140,6 +150,11 @@ class MarketSimulator:
             assert faults.n_pools == engine.n_pools, (
                 f"fault injector covers {faults.n_pools} pools, engine has "
                 f"{engine.n_pools}")
+        self.serve = serve
+        if serve is not None:
+            assert engine is not None, (
+                "a serve manager requires a market engine — serving "
+                "capacity is live spot VMs priced by the market")
         # transient pool outages: fault-event index -> deactivated host ids
         self._outage_hosts: Dict[int, List[int]] = {}
         # storms that fired at the current tick, applied after the wave
@@ -168,6 +183,17 @@ class MarketSimulator:
         if engine is not None:
             self.pool.enable_market(engine.n_pools)
             self._arm_tick(0.0)
+        if serve is not None:
+            # start the serving chain one serve tick in (arrivals integrate
+            # the demand curve over (0, tick]); the autoscale chain one
+            # control period in.  VM-loss requeue rides the ordinary
+            # lifecycle listeners — serve-less runs keep `listeners` empty.
+            self.queue.push(serve.config.tick, EventKind.SERVE_TICK)
+            if serve.autoscaler is not None:
+                self.queue.push(serve.autoscaler.config.cadence,
+                                EventKind.AUTOSCALE)
+            self.on("vm_interrupted", serve.on_vm_interrupted)
+            self.on("vm_finished", serve.on_vm_finished)
 
     def _arm_tick(self, t: float) -> None:
         """(Re)start the PRICE_TICK chain.  The chain stops itself when the
@@ -344,6 +370,10 @@ class MarketSimulator:
         elif kind is EventKind.HOST_UPDATE:
             hid, cap = ev.payload
             self.pool.update_host(hid, cap)
+        elif kind is EventKind.SERVE_TICK:
+            self._on_serve_tick()
+        elif kind is EventKind.AUTOSCALE:
+            self._on_autoscale()
         if self.listeners:
             self._emit("clock_tick")
 
@@ -671,6 +701,54 @@ class MarketSimulator:
             self.queue.push(t + eng.tick_interval, EventKind.PRICE_TICK)
         else:
             self._tick_armed = False  # idle: submit()/schedule_* re-arm
+
+    # -------------------------------------------------------- serving layer
+    def _serve_rearm(self) -> bool:
+        """Keep a serve chain alive?  A bounded run carries its chains to
+        the horizon (events past the limit stay in the heap, like
+        PRICE_TICK's re-arm); an unbounded run stops once the request
+        backlog drained and nothing runs, so ``run(until=inf)`` returns."""
+        c = self.metrics.state_counts
+        return (self._run_limit != float("inf") or self.serve.pending()
+                or c[1] + c[2] > 0)
+
+    def _on_serve_tick(self) -> None:
+        sv = self.serve
+        if sv is None:
+            return
+        t = self.now
+        tr = self.obs
+        if tr.enabled:
+            tr.begin("serve", "tick/serve")
+            sv.on_tick(self, t)
+            tr.end(t, None)
+        else:
+            sv.on_tick(self, t)
+        if self._serve_rearm():
+            self.queue.push(t + sv.config.tick, EventKind.SERVE_TICK)
+
+    def _on_autoscale(self) -> None:
+        sv = self.serve
+        if sv is None or sv.autoscaler is None:
+            return
+        t = self.now
+        tr = self.obs
+        if tr.enabled:
+            tr.begin("serve", "tick/autoscale")
+            sv.on_autoscale(self, t)
+            tr.end(t, None)
+        else:
+            sv.on_autoscale(self, t)
+        if self._serve_rearm():
+            self.queue.push(t + sv.autoscaler.config.cadence,
+                            EventKind.AUTOSCALE)
+
+    def decommission(self, vm: Vm) -> None:
+        """Voluntarily end a RUNNING/INTERRUPTING VM now (autoscaler
+        scale-in): rides the ordinary VM_FINISH path, so progress
+        accounting, host release, metrics, and lifecycle listeners behave
+        exactly like a natural completion."""
+        self.queue.push(self.now, EventKind.VM_FINISH, vm.id, vm.generation)
 
     # ---------------------------------------------------- proactive migration
     def _plan_migrations(self) -> None:

@@ -29,6 +29,20 @@ resilience comparison:
       --fleet compare --faults storm --sweep 10 \\
       --report results/sweep/fleet_resilience.json
 
+``--serve CURVE`` runs the traffic-driven serving scenario: a demand curve
+(``diurnal`` or ``bursty``) feeds a request queue served on the spot
+fleet's live VMs, and the row reports SLO attainment, latency percentiles,
+error-budget burn, and cost per served request.  ``--autoscale POLICY``
+closes the loop (static, target-tracking, step, predictive-from-curve);
+``--autoscale compare --sweep N`` sweeps target-tracking against the
+static baseline:
+
+  python -m repro.launch.market_sim --serve diurnal --fleet-target 24 \\
+      --autoscale target-tracking
+  python -m repro.launch.market_sim --serve diurnal --regimes volatile \\
+      --faults storm --fleet-target 24 --autoscale compare --sweep 10 \\
+      --report results/sweep/serve_slo_sweep.json
+
 Every mode routes through the declarative scenario API
 (:mod:`repro.api`): the CLI flags assemble a spec tree, ``api.build``
 materializes fresh components per run.  Two spec-file modes make whole
@@ -74,6 +88,7 @@ import sys
 import time
 
 from ..api import (
+    AutoscaleSpec,
     BidSpec,
     ExperimentSpec,
     FaultSpec,
@@ -84,6 +99,7 @@ from ..api import (
     RebidSpec,
     RunSpec,
     ScenarioSpec,
+    ServeSpec,
     collect_row,
     format_report,
     resolve_horizon,
@@ -250,6 +266,95 @@ def run_market(policy_name: str, regime: str, seed: int, until: float = 14400.0,
     row = run_one(spec, seed, until=until)
     row["wall_s"] = round(time.time() - t0, 1)
     return row
+
+
+def _serve_scenario_spec(args, regime: str, until: float) -> ScenarioSpec:
+    wl_params = {}
+    if args.serve_rate is not None:
+        wl_params["base_rate"] = args.serve_rate
+    return ScenarioSpec(
+        workload=f"serve-{args.serve}", regime=regime, n_pools=args.pools,
+        tick_interval=args.tick, from_advisor=not args.flat_volatility,
+        horizon=until, workload_params=wl_params)
+
+
+def _serve_run_spec(args, regime: str, policy: str,
+                    autoscale: AutoscaleSpec | None, until: float,
+                    obs: ObsSpec | None = None) -> RunSpec:
+    return RunSpec(
+        scenario=_serve_scenario_spec(args, regime, until),
+        policy=_policy_spec(policy, args.alpha),
+        fleet=FleetSpec(strategy=args.fleet or "diversified",
+                        params={"target_capacity": args.fleet_target}),
+        faults=FaultSpec(scenario=args.faults) if args.faults else None,
+        serve=ServeSpec(), autoscale=autoscale, obs=obs)
+
+
+def _print_serve_rows(rows, labels) -> None:
+    print(f"{'regime':11s} {'autoscale':22s} {'arrived':>8s} {'done':>8s} "
+          f"{'requeue':>7s} {'p95_s':>9s} {'slo':>6s} {'burn':>6s} "
+          f"{'$/req':>9s} {'od_spill':>8s}")
+    for lb, r in zip(labels, rows):
+        print(f"{r['regime']:11s} {lb:22s} "
+              f"{r['requests_arrived']:8d} {r['requests_done']:8d} "
+              f"{r['requests_requeued']:7d} {r['p95_latency_s']:9.1f} "
+              f"{r['slo_attainment']:6.3f} {r['error_budget_burn']:6.2f} "
+              f"{r['cost_per_request']:9.5f} {r['od_spill_cost']:8.3f}")
+
+
+def run_serve(args, obs_spec, ap, t_main: float) -> int:
+    """The ``--serve`` mode: single runs per regime, or (with ``--sweep``)
+    a seed-swept regime × autoscale-policy grid through
+    :func:`repro.api.run_experiment`."""
+    until = args.until if args.until is not None else 14400.0
+    regimes = args.regimes.split(",")
+    policy = args.policy if args.policy != "all" else "first-fit"
+    if args.autoscale == "compare" and not args.sweep:
+        ap.error("--autoscale compare requires --sweep N")
+
+    if args.sweep:
+        if args.autoscale == "compare":
+            autoscales = (AutoscaleSpec("static"),
+                          AutoscaleSpec("target-tracking"))
+        elif args.autoscale:
+            autoscales = (AutoscaleSpec(args.autoscale),)
+        else:
+            autoscales = None
+        exp = ExperimentSpec(
+            name=f"serve_sweep_{args.sweep}x",
+            scenario=_serve_scenario_spec(args, regimes[0], until),
+            policies=(_policy_spec(policy, args.alpha),),
+            regimes=tuple(regimes),
+            seeds=tuple(range(args.seed, args.seed + args.sweep)),
+            fleets=(FleetSpec(strategy=args.fleet or "diversified",
+                              params={"target_capacity": args.fleet_target}),),
+            faults=FaultSpec(scenario=args.faults) if args.faults else None,
+            serve=ServeSpec(), autoscales=autoscales)
+        return _sweep_and_report(exp, args)
+
+    if obs_spec is not None and len(regimes) > 1:
+        ap.error("observability flags trace a single run — pick one "
+                 "--regimes value")
+    autoscale = AutoscaleSpec(args.autoscale) if args.autoscale else None
+    label = args.autoscale or "none"
+    rows, obs_sink = [], {}
+    for regime in regimes:
+        spec = _serve_run_spec(args, regime, policy, autoscale, until,
+                               obs=obs_spec)
+        if obs_spec is not None and obs_spec.enabled:
+            row = _run_one_obs(spec, args.seed, until, args, obs_sink)
+        else:
+            t0 = time.time()
+            row = run_one(spec, args.seed, until=until)
+            row["wall_s"] = round(time.time() - t0, 1)
+        rows.append(row)
+    if args.json:
+        doc = {"rows": rows, "manifest": _cli_manifest(args, t_main)}
+        doc.update(obs_sink)
+        print(json.dumps(doc, indent=1))
+    else:
+        _print_serve_rows(rows, [label] * len(rows))
+    return 0
 
 
 def run_sanitized(args) -> int:
@@ -445,6 +550,22 @@ def main(argv=None) -> int:
                     help="inject a registered fault scenario (storm, "
                          "random-storms, pool-outage, price-spike, "
                          "capacity-crunch, scripted)")
+    # serving-scenario mode
+    ap.add_argument("--serve", default="", choices=["", "diurnal", "bursty"],
+                    help="run the traffic-driven serving scenario on the "
+                         "named demand curve: requests queue against the "
+                         "spot fleet's live capacity and the row reports "
+                         "SLO/latency/cost-per-request metrics")
+    ap.add_argument("--serve-rate", type=float, default=None,
+                    metavar="REQ_S",
+                    help="demand-curve base arrival rate in req/s "
+                         "(default: the workload's registered default)")
+    ap.add_argument("--autoscale", default="",
+                    help="close the serving loop with an autoscale policy "
+                         "(static, target-tracking, step, "
+                         "predictive-from-curve), or 'compare' to sweep "
+                         "target-tracking against the static baseline "
+                         "(requires --sweep N)")
     ap.add_argument("--flat-volatility", action="store_true",
                     help="use the regime's hand-set volatility constant for "
                          "every pool instead of deriving per-pool sigmas "
@@ -477,10 +598,15 @@ def main(argv=None) -> int:
             ap.error("--sanitize applies to a single fixed-seed run "
                      "(not --sweep/--spec)")
         return run_sanitized(args)
-    if args.sweep and not (args.market or args.spec):
-        ap.error("--sweep requires --market (or use --spec FILE)")
-    if (args.fleet or args.faults) and not args.market:
-        ap.error("--fleet/--faults require --market")
+    if args.serve and args.market:
+        ap.error("--serve and --market are separate modes — pick one")
+    if args.autoscale and not args.serve:
+        ap.error("--autoscale requires --serve CURVE")
+    if args.sweep and not (args.market or args.serve or args.spec):
+        ap.error("--sweep requires --market or --serve "
+                 "(or use --spec FILE)")
+    if (args.fleet or args.faults) and not (args.market or args.serve):
+        ap.error("--fleet/--faults require --market or --serve")
     if args.report and not (args.sweep or args.spec):
         ap.error("--report only applies to sweep modes "
                  "(--sweep N or --spec FILE)")
@@ -506,6 +632,11 @@ def main(argv=None) -> int:
 
     if args.spec:
         return _sweep_and_report(ExperimentSpec.load(args.spec), args)
+
+    if args.serve:
+        if args.fleet == "compare":
+            ap.error("--fleet compare is a --market sweep mode")
+        return run_serve(args, obs_spec, ap, t_main)
 
     if args.market:
         # the migration comparison varies the migration policy against the

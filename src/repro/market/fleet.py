@@ -423,25 +423,127 @@ class FleetManager:
         self.slot_retired = np.zeros(n, dtype=bool)
         self.slot_od = np.zeros(n, dtype=bool)
         self.slot_ran = np.zeros(n, dtype=bool)           # incarnation ran?
+        #: slots taken out of service by the autoscaler (scale-in); unlike
+        #: ladder retirement they are reversible — scale-out reuses them
+        self.slot_shed = np.zeros(n, dtype=bool)
+        #: unit target the autoscaler last requested (PR 10 capacity
+        #: interface); starts at the provisioned slot count
+        self.target_units = n
+        # retarget bookkeeping: None until set_target_units first runs, so
+        # an autoscaler-less fleet keeps the PR 6 effective-target formula
+        # (and its metrics) bit for bit
+        self._units_override: Optional[int] = None
+        self._retired_base = 0
 
     # ------------------------------------------------------------- queries
     def wants_tick(self) -> bool:
-        """Any unretired slot left?  Keeps a bounded run's PRICE_TICK chain
-        alive through backoff waits when nothing else is running."""
-        return bool(np.any(~self.slot_retired))
+        """Any in-service (unretired, unshed) slot left?  Keeps a bounded
+        run's PRICE_TICK chain alive through backoff waits when nothing
+        else is running."""
+        return bool(np.any(~self.slot_retired & ~self.slot_shed))
 
     def effective_target(self) -> float:
         """Target CPU after scale-down: retired slots lower the bar (the
         fleet *chose* to shrink; shortfall metrics measure against what it
-        still promises)."""
-        return (self.config.target_capacity
-                - float(np.count_nonzero(self.slot_retired))
-                * self.config.unit_cpu)
+        still promises).  Once the autoscaler has retargeted, the promise
+        is its requested units minus any retirements since."""
+        retired = float(np.count_nonzero(self.slot_retired))
+        unit = self.config.unit_cpu
+        if self._units_override is None:
+            return self.config.target_capacity - retired * unit
+        return (float(self._units_override) * unit
+                - (retired - float(self._retired_base)) * unit)
 
     def _backoff(self, fails: int) -> float:
         cfg = self.config
         return min(cfg.backoff_cap,
                    cfg.backoff_base * cfg.backoff_mult ** (fails - 1))
+
+    # ----------------------------------------- dynamic capacity (autoscale)
+    def set_target_units(self, sim, n: int, now: float) -> None:
+        """Retarget the fleet to ``n`` unit slots — the autoscaler's lever.
+
+        Scale-out un-sheds parked slots first (they re-enter the fresh
+        apportionment next tick), then grows the slot arrays.  Scale-in
+        sheds empty slots first, then decommissions live RUNNING /
+        INTERRUPTING VMs highest-index first (their work drains through the
+        ordinary finish path); WAITING / MIGRATING slots are left alone —
+        best effort, the next evaluation retries.  Ladder-retired slots
+        never come back."""
+        n = int(n)
+        cur = int(np.count_nonzero(~self.slot_retired & ~self.slot_shed))
+        self.target_units = n
+        self._units_override = n
+        self._retired_base = int(np.count_nonzero(self.slot_retired))
+        if n > cur:
+            need = n - cur
+            parked = np.flatnonzero(self.slot_shed & ~self.slot_retired)
+            for s in parked[:need]:
+                self._reset_slot(int(s), now)
+            need -= min(need, int(parked.size))
+            if need > 0:
+                self._grow_slots(need, now)
+        elif n < cur:
+            rem = cur - n
+            in_service = [s for s in range(self.n_slots - 1, -1, -1)
+                          if not self.slot_retired[s]
+                          and not self.slot_shed[s]]
+            empty = [s for s in in_service if self.slot_vid[s] < 0]
+            live = [s for s in in_service if self.slot_vid[s] >= 0]
+            for s in empty + live:
+                if rem == 0:
+                    break
+                vid = int(self.slot_vid[s])
+                if vid >= 0:
+                    vm = sim.vms[vid]
+                    if vm.state not in (VmState.RUNNING,
+                                        VmState.INTERRUPTING):
+                        continue    # in flight — not safely shedable now
+                    sim.decommission(vm)
+                self.slot_shed[s] = True
+                self.slot_vid[s] = -1
+                self.slot_od[s] = False
+                self.slot_ran[s] = False
+                self.slot_rung[s] = -1
+                self.slot_tries[s] = 0
+                self.slot_fail[s] = 0
+                rem -= 1
+
+    def _reset_slot(self, s: int, now: float) -> None:
+        """Return a shed slot to service as a fresh spot slot."""
+        self.slot_shed[s] = False
+        self.slot_vid[s] = -1
+        self.slot_pool[s] = -1
+        self.slot_rung[s] = -1
+        self.slot_tries[s] = 0
+        self.slot_fail[s] = 0
+        self.slot_next[s] = now
+        self.slot_od[s] = False
+        self.slot_ran[s] = False
+
+    def _grow_slots(self, k: int, now: float) -> None:
+        """Append ``k`` fresh in-service slots to every state array."""
+        self.slot_vid = np.concatenate(
+            [self.slot_vid, np.full(k, -1, dtype=np.int64)])
+        self.slot_pool = np.concatenate(
+            [self.slot_pool, np.full(k, -1, dtype=np.int64)])
+        self.slot_rung = np.concatenate(
+            [self.slot_rung, np.full(k, -1, dtype=np.int64)])
+        self.slot_tries = np.concatenate(
+            [self.slot_tries, np.zeros(k, dtype=np.int64)])
+        self.slot_fail = np.concatenate(
+            [self.slot_fail, np.zeros(k, dtype=np.int64)])
+        self.slot_next = np.concatenate(
+            [self.slot_next, np.full(k, float(now), dtype=np.float64)])
+        self.slot_retired = np.concatenate(
+            [self.slot_retired, np.zeros(k, dtype=bool)])
+        self.slot_od = np.concatenate(
+            [self.slot_od, np.zeros(k, dtype=bool)])
+        self.slot_ran = np.concatenate(
+            [self.slot_ran, np.zeros(k, dtype=bool)])
+        self.slot_shed = np.concatenate(
+            [self.slot_shed, np.zeros(k, dtype=bool)])
+        self.n_slots += k
 
     # ---------------------------------------------------------------- tick
     def on_tick(self, sim, now: float) -> None:
@@ -451,7 +553,7 @@ class FleetManager:
         # -- observe every slot; update the state machine ------------------
         up_cpu = 0.0
         for s in range(self.n_slots):
-            if self.slot_retired[s]:
+            if self.slot_retired[s] or self.slot_shed[s]:
                 continue
             vid = int(self.slot_vid[s])
             if vid < 0:
@@ -507,8 +609,8 @@ class FleetManager:
             sim.pool.market_registry(), np.sort(live_spot), self.n_pools)
         # -- fresh slots: batched strategy apportionment -------------------
         due = [s for s in range(self.n_slots)
-               if not self.slot_retired[s] and self.slot_vid[s] < 0
-               and self.slot_next[s] <= now + _EPS]
+               if not self.slot_retired[s] and not self.slot_shed[s]
+               and self.slot_vid[s] < 0 and self.slot_next[s] <= now + _EPS]
         fresh = [s for s in due if self.slot_rung[s] < 0]
         if fresh:
             counts = plan_replenish(len(fresh), cur_units, self.weights,

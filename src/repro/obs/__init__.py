@@ -31,8 +31,8 @@ from .eventlog import (EVENT_KINDS, NULL_RECORDER, EventLog, LogEventKind,
 from .diff import (Divergence, bisect_divergence, first_divergence,
                    format_divergence)
 from .analyze import (cohort_summary, interruption_intensity,
-                      pool_risk_series, storm_intervals, victim_rate,
-                      vm_lifecycle)
+                      pool_risk_series, serve_series, storm_intervals,
+                      victim_rate, vm_lifecycle)
 from .report import (render_report, render_sweep_report, report_summary_json,
                      write_html_report)
 from .export import chrome_trace, validate_chrome_trace, write_chrome_trace
@@ -49,7 +49,7 @@ __all__ = [
     "Divergence", "first_divergence", "bisect_divergence",
     "format_divergence",
     "interruption_intensity", "storm_intervals", "pool_risk_series",
-    "victim_rate", "vm_lifecycle", "cohort_summary",
+    "victim_rate", "vm_lifecycle", "cohort_summary", "serve_series",
     "render_report", "render_sweep_report", "write_html_report",
     "report_summary_json",
     "chrome_trace", "write_chrome_trace", "validate_chrome_trace",

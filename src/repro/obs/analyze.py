@@ -168,6 +168,52 @@ def victim_rate(src: LogLike, pool: Optional[int] = None) -> float:
 
 
 # ---------------------------------------------------------------------------
+# serving scenario (PR 10)
+# ---------------------------------------------------------------------------
+def serve_series(src: LogLike,
+                 window: float = 1800.0) -> Optional[Dict[str, np.ndarray]]:
+    """Serving-scenario chart series, or ``None`` when the log carries no
+    serve events (so non-serve consumers can branch cheaply).
+
+    Returns serve-tick-aligned arrays — ``t`` / ``rate`` (the demand-curve
+    arrival rate each tick integrated) / ``depth`` (global queue depth) /
+    ``live`` (VMs holding an active request scheduler) — plus
+    ``p95`` (trailing-``window`` p95 completion latency sampled at
+    the same ticks; NaN before the first completion) and
+    ``scale_t``/``scale_units`` (the autoscaler's target steps; empty
+    when no autoscaler acted)."""
+    log = _log(src)
+    if log.kind_id("serve-sample") < 0 and log.kind_id("request-arrive") < 0:
+        return None
+    arr = log.to_arrays()
+    out: Dict[str, np.ndarray] = {}
+    sample = _kind_mask(arr, log, "serve-sample")
+    arrive = _kind_mask(arr, log, "request-arrive")
+    out["t"] = arr["t"][sample]
+    out["depth"] = arr["a"][sample]
+    out["live"] = arr["b"][sample]
+    out["rate_t"] = arr["t"][arrive]
+    out["rate"] = arr["b"][arrive]
+    # trailing-window p95 latency, sampled at the serve ticks (one
+    # percentile per tick over the completions inside (t-window, t])
+    done = _kind_mask(arr, log, "request-done")
+    dt, lat = arr["t"][done], arr["a"][done]
+    t = out["t"]
+    p95 = np.full(t.size, np.nan)
+    if dt.size and t.size:
+        lo = np.searchsorted(dt, t - window, side="left")
+        hi = np.searchsorted(dt, t, side="right")
+        for i, (l, h) in enumerate(zip(lo, hi)):
+            if h > l:
+                p95[i] = float(np.percentile(lat[l:h], 95.0))
+    out["p95"] = p95
+    scale = _kind_mask(arr, log, "autoscale")
+    out["scale_t"] = arr["t"][scale]
+    out["scale_units"] = arr["a"][scale]
+    return out
+
+
+# ---------------------------------------------------------------------------
 # per-VM lifecycles / cohort rollup
 # ---------------------------------------------------------------------------
 def vm_lifecycle(src: LogLike, vm_id: int) -> List[dict]:

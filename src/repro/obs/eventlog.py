@@ -73,6 +73,12 @@ class LogEventKind(str, enum.Enum):
     ALLOC_FLUSH = "alloc-flush"
     HOST_ADD = "host-add"
     HOST_REMOVE = "host-remove"
+    # -- serving layer (PR 10): request flow + autoscaler decisions ---------
+    REQUEST_ARRIVE = "request-arrive"     # per serve tick: a=count, b=rate
+    REQUEST_DONE = "request-done"         # per request: a=latency_s, b=tokens
+    REQUEST_REQUEUE = "request-requeue"   # VM loss: a=in-flight, b=moved
+    SERVE_SAMPLE = "serve-sample"         # per serve tick: a=depth, b=live
+    AUTOSCALE = "autoscale"               # per decision: a=new, b=old units
 
 
 #: kept as a tuple for existing callers; derived from the enum above

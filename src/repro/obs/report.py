@@ -23,7 +23,12 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .analyze import interruption_intensity, pool_risk_series, storm_intervals
+from .analyze import (
+    interruption_intensity,
+    pool_risk_series,
+    serve_series,
+    storm_intervals,
+)
 from .eventlog import EventLog, load_event_log
 
 _PALETTE = ("#2563eb", "#dc2626", "#16a34a", "#d97706", "#7c3aed",
@@ -239,6 +244,27 @@ def render_report(src: Union[EventLog, str],
         body.append(_svg_line_chart(
             [(f"pool {p}", risk[p]["t"], risk[p]["occupancy"])
              for p in pools], y_label="VMs", bands=bands))
+    # serving scenario (PR 10): rendered only when the run emitted serve
+    # events, so every non-serve report stays byte-identical
+    sv = serve_series(log)
+    if sv is not None:
+        body.append("<h2>Serving: arrival rate</h2>")
+        body.append(_svg_line_chart(
+            [("rate", sv["rate_t"], sv["rate"])], y_label="req/s",
+            bands=bands))
+        body.append("<h2>Serving: queue depth</h2>")
+        body.append(_svg_line_chart(
+            [("depth", sv["t"], sv["depth"])], y_label="requests",
+            bands=bands))
+        body.append("<h2>Serving: p95 latency (trailing window)</h2>")
+        body.append(_svg_line_chart(
+            [("p95", sv["t"], sv["p95"])], y_label="s", bands=bands))
+        body.append("<h2>Serving: capacity — autoscaler target vs live</h2>")
+        body.append(_legend(["target units", "live units"]))
+        body.append(_svg_line_chart(
+            [("target units", sv["scale_t"], sv["scale_units"]),
+             ("live units", sv["t"], sv["live"])], y_label="units",
+            bands=bands))
     return (f"<!doctype html><html><head><meta charset='utf-8'>"
             f"<title>{_esc(title)}</title><style>{_CSS}</style></head>"
             f"<body>{''.join(body)}</body></html>")

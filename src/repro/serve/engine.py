@@ -4,9 +4,7 @@ or hibernated exactly like the paper's VMs).
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -90,80 +88,8 @@ def greedy_generate(cfg: ArchConfig, params, prompt, n_tokens: int,
 
 
 # ---------------------------------------------------------------------------
-# Interruption-aware request scheduling (ties serving to the spot market)
+# Interruption-aware request scheduling (ties serving to the spot market) —
+# lives in the jax-free ``scheduler`` module; re-exported here for
+# backward compatibility
 # ---------------------------------------------------------------------------
-@dataclass
-class Request:
-    id: int
-    prompt_len: int
-    target_tokens: int
-    generated: int = 0
-    state: str = "queued"     # queued | running | hibernated | done | dropped
-    interruptions: int = 0
-
-
-@dataclass
-class SpotServingScheduler:
-    """Schedules decode batches over capacity that can be reclaimed.
-
-    When the market simulator interrupts the serving instance, in-flight
-    requests are either *hibernated* (their decode state checkpointed and
-    resumed later — like the paper's HIBERNATE behavior) or requeued from
-    scratch (TERMINATE).  Mirrors the VM lifecycle at request granularity.
-    """
-    batch_size: int
-    hibernate: bool = True
-    queue: List[Request] = field(default_factory=list)
-    running: List[Request] = field(default_factory=list)
-    hibernated: List[Request] = field(default_factory=list)
-    done: List[Request] = field(default_factory=list)
-
-    def add(self, req: Request) -> None:
-        self.queue.append(req)
-
-    def fill_batch(self) -> List[Request]:
-        # resume hibernated requests first (paper's resubmission order)
-        while self.hibernated and len(self.running) < self.batch_size:
-            r = self.hibernated.pop(0)
-            r.state = "running"
-            self.running.append(r)
-        while self.queue and len(self.running) < self.batch_size:
-            r = self.queue.pop(0)
-            r.state = "running"
-            self.running.append(r)
-        return self.running
-
-    def step(self, n: int = 1) -> None:
-        finished = []
-        for r in self.running:
-            r.generated += n
-            if r.generated >= r.target_tokens:
-                r.state = "done"
-                finished.append(r)
-        for r in finished:
-            self.running.remove(r)
-            self.done.append(r)
-
-    def interrupt(self) -> None:
-        """Capacity reclaimed: hibernate or requeue all running requests."""
-        for r in self.running:
-            r.interruptions += 1
-            if self.hibernate:
-                r.state = "hibernated"
-                self.hibernated.append(r)
-            else:
-                r.state = "queued"
-                r.generated = 0
-                self.queue.append(r)
-        self.running = []
-
-    def stats(self) -> Dict[str, int]:
-        return {
-            "done": len(self.done),
-            "queued": len(self.queue),
-            "hibernated": len(self.hibernated),
-            "running": len(self.running),
-            "interruptions": sum(
-                r.interruptions for r in
-                self.done + self.queue + self.hibernated + self.running),
-        }
+from .scheduler import Request, SpotServingScheduler  # noqa: E402,F401

@@ -1,0 +1,125 @@
+"""FleetManager dynamic-capacity interface (PR 10): set_target_units
+grow/shed semantics, effective-target accounting, and the bit-identity
+contract for autoscaler-less fleets."""
+import numpy as np
+import pytest
+
+from repro.api import (
+    FleetSpec,
+    PolicySpec,
+    RunSpec,
+    ScenarioSpec,
+    ServeSpec,
+    build,
+)
+from repro.market.fleet import FleetConfig, FleetManager
+
+
+def _manager(target=8.0, unit=2.0):
+    return FleetManager(FleetConfig(target_capacity=target, unit_cpu=unit),
+                        n_pools=4)
+
+
+class _SimStub:
+    """Just enough simulator for set_target_units on empty slots."""
+    vms: dict = {}
+
+    def decommission(self, vm):  # pragma: no cover - empty-slot tests
+        raise AssertionError("empty slots must not decommission anything")
+
+
+def test_initial_state_matches_pr6_formula():
+    m = _manager(target=8.0, unit=2.0)
+    assert m.n_slots == 4
+    assert m.target_units == 4
+    assert m._units_override is None
+    assert m.effective_target() == 8.0
+    assert not m.slot_shed.any()
+
+
+def test_grow_appends_fresh_slots():
+    m = _manager(target=8.0, unit=2.0)
+    m.set_target_units(_SimStub(), 7, now=100.0)
+    assert m.n_slots == 7
+    assert m.target_units == 7
+    assert m.effective_target() == 14.0
+    assert (m.slot_vid[4:] == -1).all()
+    assert (m.slot_next[4:] == 100.0).all()
+    assert not m.slot_shed.any()
+    # every state array grew in lockstep
+    for arr in (m.slot_vid, m.slot_pool, m.slot_rung, m.slot_tries,
+                m.slot_fail, m.slot_next, m.slot_retired, m.slot_od,
+                m.slot_ran, m.slot_shed):
+        assert len(arr) == 7
+
+
+def test_shed_empty_slots_then_unshed_on_growth():
+    m = _manager(target=8.0, unit=2.0)
+    m.set_target_units(_SimStub(), 1, now=10.0)
+    assert int(np.count_nonzero(m.slot_shed)) == 3
+    assert m.effective_target() == 2.0
+    # highest-index slots shed first
+    assert m.slot_shed.tolist() == [False, True, True, True]
+    # growth reuses the parked slots before allocating new ones
+    m.set_target_units(_SimStub(), 3, now=20.0)
+    assert m.n_slots == 4
+    assert int(np.count_nonzero(m.slot_shed)) == 1
+    assert m.effective_target() == 6.0
+    assert (m.slot_next[[2, 3]] == 20.0).sum() >= 1
+
+
+def test_wants_tick_false_when_all_shed_or_retired():
+    m = _manager(target=4.0, unit=2.0)
+    assert m.wants_tick()
+    m.slot_retired[0] = True
+    m.set_target_units(_SimStub(), 0, now=0.0)
+    assert not m.wants_tick()
+
+
+def test_effective_target_tracks_retirement_after_override():
+    m = _manager(target=8.0, unit=2.0)
+    m.set_target_units(_SimStub(), 6, now=0.0)
+    assert m.effective_target() == 12.0
+    # a ladder retirement after the retarget lowers the promise from there
+    m.slot_retired[0] = True
+    assert m.effective_target() == 10.0
+    # a fresh retarget rebases: pre-existing retirements stop double-counting
+    m.set_target_units(_SimStub(), 5, now=100.0)
+    assert m.effective_target() == 10.0
+
+
+def test_scale_in_decommissions_live_vms():
+    spec = RunSpec(
+        scenario=ScenarioSpec(workload="serve-diurnal", regime="volatile",
+                              n_pools=4, horizon=7200.0,
+                              workload_params={"base_rate": 0.3}),
+        policy=PolicySpec("first-fit"),
+        fleet=FleetSpec(params={"target_capacity": 16.0}),
+        serve=ServeSpec())
+    sim = build(spec, seed=0)
+    sim.run(until=1200.0)     # let the fleet fill its 8 slots
+    fleet = sim.fleet
+    live_before = int(np.count_nonzero(fleet.slot_vid >= 0))
+    assert live_before > 2
+    fleet.set_target_units(sim, 2, now=sim.now)
+    assert fleet.target_units == 2
+    in_service = ~fleet.slot_retired & ~fleet.slot_shed
+    assert int(np.count_nonzero(in_service)) == 2
+    # shed slots dropped their VM references; the VM_FINISH events drain
+    # the decommissioned VMs on the next step
+    assert int(np.count_nonzero(fleet.slot_vid >= 0)) <= 2
+    sim.run(until=1500.0)
+    live_now = int(np.count_nonzero(
+        fleet.slot_vid[in_service] >= 0))
+    assert live_now <= 2
+
+
+def test_autoscaler_less_fleet_keeps_exact_formula():
+    """No retarget ever happens -> effective_target returns the PR 6
+    expression bit for bit (the serve=None identity contract)."""
+    cfg = FleetConfig(target_capacity=13.0, unit_cpu=2.0)
+    m = FleetManager(cfg, n_pools=4)
+    m.slot_retired[2] = True
+    expected = cfg.target_capacity - 1 * cfg.unit_cpu
+    assert m.effective_target() == expected
+    assert m._units_override is None

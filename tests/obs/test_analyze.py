@@ -17,6 +17,7 @@ from repro.obs import (
     cohort_summary,
     interruption_intensity,
     pool_risk_series,
+    serve_series,
     storm_intervals,
     victim_rate,
     vm_lifecycle,
@@ -144,3 +145,31 @@ def test_real_run_consistency():
     assert np.isfinite(rs["price"]).all()
     cs = cohort_summary(log)
     assert cs["interruptions"]["total"] == s["interruptions"]
+
+
+def test_serve_series_none_without_serve_events():
+    assert serve_series(_burst_log()) is None
+
+
+def test_serve_series_hand_built_log():
+    log = EventLog()
+    for i in range(4):
+        t = 60.0 * (i + 1)
+        log.emit(t, "request-arrive", a=2.0, b=0.5)
+        log.emit(t, "serve-sample", a=float(i), b=3.0)
+    log.emit(90.0, "request-done", a=10.0, b=240.0)
+    log.emit(150.0, "request-done", a=30.0, b=240.0)
+    log.emit(120.0, "autoscale", a=5.0, b=3.0, aux="target-tracking")
+    sv = serve_series(log, window=1800.0)
+    assert sv is not None
+    assert sv["t"].tolist() == [60.0, 120.0, 180.0, 240.0]
+    assert sv["depth"].tolist() == [0.0, 1.0, 2.0, 3.0]
+    assert sv["rate"].tolist() == [0.5] * 4
+    assert sv["live"].tolist() == [3.0] * 4
+    # no completion yet at the first tick -> NaN; then the trailing p95
+    # covers whatever finished so far
+    assert np.isnan(sv["p95"][0])
+    assert sv["p95"][1] == pytest.approx(10.0)
+    assert sv["p95"][3] == pytest.approx(np.percentile([10.0, 30.0], 95))
+    assert sv["scale_t"].tolist() == [120.0]
+    assert sv["scale_units"].tolist() == [5.0]

@@ -87,3 +87,27 @@ def test_report_summary_json():
     doc = json.loads(report_summary_json(_run_log()))
     assert doc["events"] > 0
     assert "storms" in doc
+
+
+def test_report_has_no_serve_section_without_serve_events():
+    assert "Serving:" not in render_report(_run_log())
+
+
+def test_report_renders_serve_section_for_serve_runs():
+    from repro.api import AutoscaleSpec, FleetSpec, ServeSpec
+    sim = build(RunSpec(
+        scenario=ScenarioSpec(workload="serve-diurnal", regime="volatile",
+                              n_pools=4, horizon=3600.0,
+                              workload_params={"base_rate": 0.4}),
+        policy=PolicySpec("first-fit"),
+        fleet=FleetSpec(params={"target_capacity": 8.0}),
+        serve=ServeSpec(),
+        autoscale=AutoscaleSpec("target-tracking",
+                                params={"cadence": 600.0, "max_units": 12}),
+        obs=ObsSpec(events=True)), 0)
+    sim.run(until=3600.0)
+    html = render_report(sim.events, title="serve run")
+    for section in ("arrival rate", "queue depth", "p95 latency",
+                    "autoscaler target vs live"):
+        assert section in html
+    assert html.count("<svg") >= 6

@@ -106,7 +106,7 @@ def test_sanitizer_catches_a_violation_in_sim_scope():
 # ---------------------------------------------------------------------------
 def test_event_kinds_tuple_is_derived_from_enum():
     assert EVENT_KINDS == tuple(k.value for k in LogEventKind)
-    assert len(LogEventKind) == 20
+    assert len(LogEventKind) == 25
 
 
 def test_validation_fails_closed_on_dummy_kind(monkeypatch):

@@ -1,0 +1,119 @@
+"""Autoscaler tests: registered policies, hysteresis/cooldown damping,
+bound clamping, and config validation."""
+import pytest
+
+from repro.serve.autoscale import (
+    AUTOSCALE_REGISTRY,
+    Autoscaler,
+    AutoscaleConfig,
+    DemandSignals,
+    make_autoscaler,
+    validate_autoscale_config,
+)
+
+
+def _signals(t=0.0, rate=1.0, queue=0, p95=float("nan"), live=4, target=4,
+             per_unit=0.5, ahead=0.0):
+    return DemandSignals(t=t, rate_ewma=rate, queue_depth=queue,
+                         p95_latency=p95, live_units=live,
+                         target_units=target, unit_throughput=per_unit,
+                         rate_ahead=ahead)
+
+
+def test_registry_has_all_policies():
+    for name in ("static", "target-tracking", "step",
+                 "predictive-from-curve"):
+        assert AUTOSCALE_REGISTRY.get(name) is not None
+
+
+def test_unknown_policy_fails_fast():
+    with pytest.raises(ValueError, match="unknown autoscale policy"):
+        make_autoscaler("no-such-policy")
+
+
+def test_static_holds_target():
+    fn = AUTOSCALE_REGISTRY.get("static")
+    assert fn(_signals(rate=99.0, target=4), AutoscaleConfig()) == 4
+
+
+def test_target_tracking_scales_with_demand():
+    fn = AUTOSCALE_REGISTRY.get("target-tracking")
+    cfg = AutoscaleConfig(headroom=1.2)
+    # 1.0 req/s * 1.2 headroom / 0.5 per unit = 2.4 -> ceil 3
+    assert fn(_signals(rate=1.0, per_unit=0.5), cfg) == 3
+    assert fn(_signals(rate=4.0, per_unit=0.5), cfg) == 10
+
+
+def test_target_tracking_adds_queue_drain_surplus():
+    fn = AUTOSCALE_REGISTRY.get("target-tracking")
+    cfg = AutoscaleConfig(headroom=1.0, queue_drain=100.0)
+    # steady 2 units + 100 queued / (0.5 * 100) = 2 extra
+    assert fn(_signals(rate=1.0, queue=100, per_unit=0.5), cfg) == 4
+
+
+def test_step_policy_thresholds():
+    fn = AUTOSCALE_REGISTRY.get("step")
+    cfg = AutoscaleConfig(step_units=2, queue_hi=4.0, queue_lo=0.5)
+    up = _signals(queue=20, live=4, target=4)       # 5 per unit > hi
+    hold = _signals(queue=8, live=4, target=4)      # 2 per unit, inside band
+    down = _signals(queue=1, live=4, target=4)      # 0.25 per unit < lo
+    assert fn(up, cfg) == 6
+    assert fn(hold, cfg) == 4
+    assert fn(down, cfg) == 2
+
+
+def test_predictive_uses_curve_lookahead():
+    fn = AUTOSCALE_REGISTRY.get("predictive-from-curve")
+    cfg = AutoscaleConfig(headroom=1.0)
+    # looks ahead: 3 req/s ahead beats 1 req/s now
+    assert fn(_signals(rate=1.0, ahead=3.0, per_unit=0.5), cfg) == 6
+    # but never provisions below measured demand
+    assert fn(_signals(rate=3.0, ahead=1.0, per_unit=0.5), cfg) == 6
+
+
+def test_decide_clamps_to_bounds():
+    a = Autoscaler("target-tracking",
+                   AutoscaleConfig(min_units=2, max_units=6, cooldown=0.0,
+                                   hysteresis=0.0))
+    assert a.decide(_signals(rate=100.0, target=4)) == 6
+    assert a.decide(_signals(t=1e6, rate=0.0, target=4)) == 2
+
+
+def test_decide_returns_none_on_no_change():
+    a = Autoscaler("static", AutoscaleConfig(cooldown=0.0))
+    assert a.decide(_signals(target=4)) is None
+
+
+def test_hysteresis_suppresses_small_moves():
+    cfg = AutoscaleConfig(hysteresis=0.25, cooldown=0.0, headroom=1.0,
+                          max_units=100)
+    a = Autoscaler("target-tracking", cfg)
+    # desired 11 vs current 10: 10% move < 25% hysteresis -> suppressed
+    assert a.decide(_signals(rate=5.5, per_unit=0.5, target=10)) is None
+    # desired 16 vs current 10: 60% move clears the band
+    assert a.decide(_signals(rate=8.0, per_unit=0.5, target=10)) == 16
+
+
+def test_cooldown_rate_limits_changes():
+    cfg = AutoscaleConfig(hysteresis=0.0, cooldown=600.0, headroom=1.0,
+                          max_units=100)
+    a = Autoscaler("target-tracking", cfg)
+    assert a.decide(_signals(t=0.0, rate=5.0, per_unit=0.5, target=4)) == 10
+    # 300 s later: inside the cooldown, even a big move is deferred
+    assert a.decide(_signals(t=300.0, rate=20.0, per_unit=0.5,
+                             target=10)) is None
+    # 700 s later: cooldown expired, the move applies
+    assert a.decide(_signals(t=700.0, rate=20.0, per_unit=0.5,
+                             target=10)) == 40
+
+
+def test_config_validation():
+    validate_autoscale_config(AutoscaleConfig())
+    for bad in (
+            {"cadence": 0.0}, {"min_units": -1},
+            {"max_units": 0, "min_units": 4}, {"hysteresis": 1.0},
+            {"cooldown": -1.0}, {"headroom": 0.0}, {"ewma_alpha": 0.0},
+            {"latency_window": 0.0}, {"queue_drain": 0.0}, {"lead": -1.0},
+            {"step_units": 0}, {"queue_hi": 0.2, "queue_lo": 0.5}):
+        with pytest.raises(ValueError):
+            validate_autoscale_config(AutoscaleConfig(**bad))

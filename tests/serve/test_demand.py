@@ -1,0 +1,70 @@
+"""Demand-curve tests: shape, clamping, and pre-drawn determinism."""
+import pytest
+
+from repro.serve.demand import make_bursty, make_diurnal
+
+
+def test_diurnal_peak_and_trough():
+    rate = make_diurnal(base_rate=0.2, amplitude=0.1, period=86400.0)
+    assert rate(0.0) == pytest.approx(0.2)
+    assert rate(86400.0 / 4) == pytest.approx(0.3)       # peak
+    assert rate(3 * 86400.0 / 4) == pytest.approx(0.1)   # trough
+
+
+def test_diurnal_clamps_at_zero():
+    rate = make_diurnal(base_rate=0.1, amplitude=0.5, period=3600.0)
+    assert rate(3 * 3600.0 / 4) == 0.0
+
+
+def test_diurnal_phase_shift():
+    base = make_diurnal(base_rate=0.2, amplitude=0.1, period=3600.0)
+    shifted = make_diurnal(base_rate=0.2, amplitude=0.1, period=3600.0,
+                           phase=900.0)
+    assert shifted(900.0) == pytest.approx(base(0.0))
+
+
+@pytest.mark.parametrize("kwargs", [
+    {"base_rate": -0.1}, {"amplitude": -1.0}, {"period": 0.0},
+])
+def test_diurnal_validation(kwargs):
+    with pytest.raises(ValueError):
+        make_diurnal(**kwargs)
+
+
+def test_bursty_same_seed_is_bit_identical():
+    a = make_bursty(horizon=36000.0, seed=7)
+    b = make_bursty(horizon=36000.0, seed=7)
+    ts = [i * 61.0 for i in range(500)]
+    assert [a(t) for t in ts] == [b(t) for t in ts]
+
+
+def test_bursty_seeds_differ():
+    a = make_bursty(horizon=36000.0, seed=0)
+    b = make_bursty(horizon=36000.0, seed=1)
+    ts = [i * 61.0 for i in range(500)]
+    assert [a(t) for t in ts] != [b(t) for t in ts]
+
+
+def test_bursty_floor_is_base_rate():
+    rate = make_bursty(base_rate=0.25, horizon=36000.0, seed=3)
+    ts = [i * 17.0 for i in range(2000)]
+    vals = [rate(t) for t in ts]
+    assert min(vals) >= 0.25
+    assert max(vals) > 0.25      # at least one spike is active somewhere
+
+
+def test_bursty_evaluation_never_draws():
+    """rate(t) is pure after construction: evaluation order is irrelevant."""
+    rate = make_bursty(horizon=36000.0, seed=5)
+    forward = [rate(t) for t in (0.0, 100.0, 200.0)]
+    backward = [rate(t) for t in (200.0, 100.0, 0.0)]
+    assert forward == backward[::-1]
+
+
+@pytest.mark.parametrize("kwargs", [
+    {"base_rate": -1.0}, {"spike_every": 0.0}, {"spike_alpha": 0.0},
+    {"spike_duration": -5.0}, {"horizon": 0.0},
+])
+def test_bursty_validation(kwargs):
+    with pytest.raises(ValueError):
+        make_bursty(**kwargs)

@@ -1,0 +1,132 @@
+"""Unit tests for the per-VM SpotServingScheduler (PR 10 satellite):
+add / fill_batch / step / interrupt / stats, including the
+requeue-on-interrupt path the serving layer rides."""
+import pytest
+
+from repro.serve.scheduler import Request, SpotServingScheduler
+
+
+def _req(i, tokens=10):
+    return Request(id=i, prompt_len=8, target_tokens=tokens)
+
+
+def test_add_queues_requests():
+    s = SpotServingScheduler(batch_size=2)
+    for i in range(3):
+        s.add(_req(i))
+    assert [r.id for r in s.queue] == [0, 1, 2]
+    assert s.running == [] and s.done == []
+
+
+def test_fill_batch_respects_batch_size():
+    s = SpotServingScheduler(batch_size=2)
+    for i in range(3):
+        s.add(_req(i))
+    s.fill_batch()
+    assert [r.id for r in s.running] == [0, 1]
+    assert [r.id for r in s.queue] == [2]
+    assert all(r.state == "running" for r in s.running)
+
+
+def test_step_advances_and_completes():
+    s = SpotServingScheduler(batch_size=2)
+    s.add(_req(0, tokens=3))
+    s.add(_req(1, tokens=5))
+    s.fill_batch()
+    s.step(3)
+    assert [r.id for r in s.done] == [0]
+    assert [r.id for r in s.running] == [1]
+    assert s.running[0].generated == 3
+    s.step(2)
+    assert [r.id for r in s.done] == [0, 1]
+    assert s.running == []
+
+
+def test_step_accepts_fractional_tokens():
+    s = SpotServingScheduler(batch_size=1)
+    s.add(_req(0, tokens=2))
+    s.fill_batch()
+    s.step(0.5)
+    assert s.running[0].generated == pytest.approx(0.5)
+    s.step(1.5)
+    assert [r.id for r in s.done] == [0]
+
+
+def test_completion_frees_slot_for_next_fill():
+    s = SpotServingScheduler(batch_size=1)
+    s.add(_req(0, tokens=1))
+    s.add(_req(1, tokens=1))
+    s.fill_batch()
+    s.step(1)
+    assert s.running == []      # step never refills on its own
+    s.fill_batch()              # the serving loop refills each tick
+    assert [r.id for r in s.running] == [1]
+    s.step(1)
+    assert [r.id for r in s.done] == [0, 1]
+
+
+def test_interrupt_hibernate_keeps_progress():
+    s = SpotServingScheduler(batch_size=2, hibernate=True)
+    s.add(_req(0, tokens=10))
+    s.fill_batch()
+    s.step(4)
+    s.interrupt()
+    assert s.running == []
+    assert [r.id for r in s.hibernated] == [0]
+    assert s.hibernated[0].generated == 4
+    assert s.hibernated[0].state == "hibernated"
+    assert s.hibernated[0].interruptions == 1
+
+
+def test_interrupt_requeue_resets_progress():
+    s = SpotServingScheduler(batch_size=2, hibernate=False)
+    s.add(_req(0, tokens=10))
+    s.fill_batch()
+    s.step(4)
+    s.interrupt()
+    assert s.running == [] and s.hibernated == []
+    assert [r.id for r in s.queue] == [0]
+    assert s.queue[0].generated == 0
+    assert s.queue[0].state == "queued"
+    assert s.queue[0].interruptions == 1
+
+
+def test_resume_prefers_hibernated_over_queued():
+    s = SpotServingScheduler(batch_size=1, hibernate=True)
+    s.add(_req(0, tokens=10))
+    s.fill_batch()
+    s.step(4)
+    s.interrupt()
+    s.add(_req(1, tokens=10))
+    s.fill_batch()
+    # the hibernated request resumes before fresh queued work
+    assert [r.id for r in s.running] == [0]
+    assert s.running[0].generated == 4
+    assert [r.id for r in s.queue] == [1]
+
+
+def test_stats_counts_all_pools():
+    s = SpotServingScheduler(batch_size=1, hibernate=True)
+    for i in range(3):
+        s.add(_req(i, tokens=2))
+    s.fill_batch()
+    s.step(1)       # 0 half done
+    s.interrupt()   # 0 hibernated
+    st = s.stats()
+    assert st["queued"] == 2
+    assert st["hibernated"] == 1
+    assert st["running"] == 0
+    assert st["done"] == 0
+    assert st["interruptions"] == 1
+
+
+def test_multiple_interruptions_accumulate():
+    s = SpotServingScheduler(batch_size=1, hibernate=True)
+    s.add(_req(0, tokens=100))
+    for _ in range(3):
+        s.fill_batch()
+        s.step(1)
+        s.interrupt()
+    r = s.hibernated[0]
+    assert r.interruptions == 3
+    assert r.generated == 3     # progress survived every loss

@@ -1,0 +1,65 @@
+"""SLO/cost metric tests: percentiles, attainment, windowed error-budget
+burn, and the cost-effectiveness helpers."""
+import pytest
+
+from repro.serve.slo import (
+    cost_forecast,
+    cost_per_request,
+    error_budget_burn,
+    latency_percentiles,
+    slo_attainment,
+)
+
+
+def test_percentiles_empty_is_zero():
+    assert latency_percentiles([]) == {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+
+
+def test_percentiles_values():
+    lat = list(range(1, 101))     # 1..100
+    pct = latency_percentiles(lat)
+    assert pct["p50"] == pytest.approx(50.5)
+    assert pct["p95"] == pytest.approx(95.05)
+    assert pct["p99"] == pytest.approx(99.01)
+
+
+def test_attainment():
+    assert slo_attainment([], 1.0) == 1.0
+    assert slo_attainment([0.5, 1.0, 2.0, 3.0], 1.0) == 0.5
+    assert slo_attainment([0.1, 0.2], 1.0) == 1.0
+
+
+def test_burn_rate_scales_with_budget():
+    # 10% violations under a 95% objective = burn 2.0 (double budget)
+    done = [float(i) for i in range(100)]
+    lat = [2.0 if i < 10 else 0.5 for i in range(100)]
+    burn = error_budget_burn(done, lat, threshold=1.0, objective=0.95,
+                             window=1000.0, horizon=100.0)
+    assert burn["burn_rate"] == pytest.approx(2.0)
+
+
+def test_burn_empty_is_zero():
+    burn = error_budget_burn([], [], 1.0, 0.95, 100.0, 1000.0)
+    assert burn == {"burn_rate": 0.0, "max_window_burn": 0.0}
+
+
+def test_max_window_burn_localizes_violations():
+    # all violations inside the first 100 s window: that window burns at
+    # 20.0 (100% violation / 5% budget) while the overall burn is diluted
+    done = [float(i) for i in range(200)]
+    lat = [2.0 if i < 100 else 0.5 for i in range(200)]
+    burn = error_budget_burn(done, lat, threshold=1.0, objective=0.95,
+                             window=100.0, horizon=200.0)
+    assert burn["max_window_burn"] == pytest.approx(20.0)
+    assert burn["burn_rate"] == pytest.approx(10.0)
+    assert burn["max_window_burn"] > burn["burn_rate"]
+
+
+def test_cost_per_request():
+    assert cost_per_request(10.0, 100) == pytest.approx(0.1)
+    assert cost_per_request(10.0, 0) == 0.0
+
+
+def test_cost_forecast_linear():
+    assert cost_forecast(5.0, 3600.0, 7200.0) == pytest.approx(10.0)
+    assert cost_forecast(5.0, 0.0, 7200.0) == 0.0

@@ -58,12 +58,12 @@ def test_event_coverage_flags_missing_dispatch_trace_label(tmp_path):
 
 
 def test_event_coverage_real_tree_is_fully_wired():
-    """All 20 LogEventKinds + 11 EventKinds in src/ are fully wired."""
+    """All 25 LogEventKinds + 13 EventKinds in src/ are fully wired."""
     from repro.obs import LogEventKind
     from repro.core.events import EventKind, PRIORITY
 
-    assert len(LogEventKind) == 20
-    assert len(EventKind) == 11 and len(PRIORITY) == 11
+    assert len(LogEventKind) == 25
+    assert len(EventKind) == 13 and len(PRIORITY) == 13
     found = run_pass([REPO_ROOT / "src"], EventCoveragePass(),
                      tests_dir=REPO_ROOT / "tests")
     assert found == []

@@ -34,6 +34,7 @@ REGISTER_HELPERS = {
     "register_workload": "WORKLOAD",
     "register_fleet_strategy": "FLEET_STRATEGY",
     "register_fault_scenario": "FAULT",
+    "register_autoscale_policy": "AUTOSCALE",
 }
 
 # registry variable name -> registry label (for REGISTRY.register(...) calls)
@@ -45,6 +46,7 @@ REGISTRY_VARS = {
     "WORKLOAD_REGISTRY": "WORKLOAD",
     "FLEET_STRATEGY_REGISTRY": "FLEET_STRATEGY",
     "FAULT_REGISTRY": "FAULT",
+    "AUTOSCALE_REGISTRY": "AUTOSCALE",
 }
 
 # Where each registry must surface to be constructible from a spec: the
@@ -58,6 +60,7 @@ SPEC_ANCHORS = {
     "FLEET_STRATEGY": ("repro/api/specs.py", "FLEET_STRATEGY_REGISTRY"),
     "FAULT": ("repro/api/specs.py", "FAULT_REGISTRY"),
     "PRICE_PROCESS": ("repro/market/engine.py", "PRICE_PROCESS_REGISTRY"),
+    "AUTOSCALE": ("repro/api/specs.py", "AUTOSCALE_REGISTRY"),
 }
 
 

@@ -42,6 +42,10 @@ SCOPED_FILES = (
     "src/repro/market/price_process.py",
     "src/repro/market/engine.py",
     "src/repro/core/hosts.py",
+    "src/repro/serve/autoscale.py",
+    "src/repro/serve/demand.py",
+    "src/repro/serve/service.py",
+    "src/repro/serve/slo.py",
 )
 
 

@@ -30,12 +30,13 @@ FORBIDDEN_CALLS = {
 }
 
 # Clock reads are a hazard only inside the deterministic sim core.  obs/,
-# launch/, elastic/ (checkpoint wall stamps), serve/ and benchmarks are
-# wall-time consumers by design.
+# launch/, elastic/ (checkpoint wall stamps) and benchmarks are wall-time
+# consumers by design.  The serve/ closed loop runs on sim time only.
 SCOPED_PREFIXES = (
     "src/repro/core/",
     "src/repro/market/",
     "src/repro/api/",
+    "src/repro/serve/",
 )
 
 
